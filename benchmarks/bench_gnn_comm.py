@@ -1,0 +1,49 @@
+"""Systems payoff (DESIGN.md §4): BuffCut as the GNN placement service.
+
+For each GNN-relevant graph, partition onto 16 data shards with buffcut /
+fennel / random / hash placement and report the halo-gather volume per GNN
+layer (= cut_edges x d_feat x 4B) plus the sampled-minibatch cross-shard
+gather fraction with and without partition-aware sampling.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.graphs import apply_order, random_order, sample_multihop, cross_block_fraction
+from repro.distributed.gnn_placement import place_graph, placement_report
+from benchmarks.common import tuning_set, csv_row
+
+
+def run(verbose: bool = True) -> list[str]:
+    rows = []
+    g = apply_order(tuning_set()["geo-rgg"], random_order(tuning_set()["geo-rgg"], 5))
+    t0 = time.perf_counter()
+    rep = placement_report(g, n_shards=16, d_feat=128)
+    dt = (time.perf_counter() - t0) * 1e6 / 4
+    for method, r in rep.items():
+        rows.append(csv_row(
+            f"gnn_comm/{method}", dt,
+            f"halo_MB_per_layer={r['halo_MB_per_layer']:.2f};"
+            f"imbalance={r['load_imbalance']:.3f}",
+        ))
+    # partition-aware neighbor sampling (graphsage minibatch path)
+    p = place_graph(g, 16, method="buffcut")
+    seeds = np.arange(0, g.n, 37)
+    plain = sample_multihop(g, seeds, (15, 10), seed=0)
+    aware = sample_multihop(g, seeds, (15, 10), seed=0, block_of=p.block)
+    f_plain = cross_block_fraction(g, plain, p.block)
+    f_aware = cross_block_fraction(g, aware, p.block)
+    rows.append(csv_row(
+        "gnn_comm/sampler", 0.0,
+        f"cross_shard_plain={f_plain:.3f};cross_shard_aware={f_aware:.3f}",
+    ))
+    if verbose:
+        for r in rows:
+            print(r, flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Paper Fig. 4: buffer scoring functions (random order, relative to ANR).
+
+Claim reproduced: HAA best (paper: -4.6% cut vs ANR), CBS slightly better
+than ANR (-0.9%), NSS/CMS clearly worse (> +18%).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (
+    tuning_set, default_cfg, run_method, sweep_orders, csv_row,
+    gmean_over_instances,
+)
+from repro.core import buffcut_partition, BuffCutConfig
+
+
+def run(verbose: bool = True) -> list[str]:
+    scores = ("anr", "cbs", "haa", "nss", "cms")
+    per_score: dict[str, dict[str, float]] = {s: {} for s in scores}
+    runtimes: dict[str, float] = {s: 0.0 for s in scores}
+    for gname, g in tuning_set().items():
+        for s in scores:
+            cfg = default_cfg(g, score=s)
+            res = sweep_orders(lambda gr: run_method("buffcut", gr, cfg), g)
+            per_score[s][gname] = res["cut"]
+            runtimes[s] += res["runtime_s"]
+    anr = gmean_over_instances(per_score["anr"])
+    rows = []
+    for s in scores:
+        gm = gmean_over_instances(per_score[s])
+        rel = (gm / anr - 1.0) * 100
+        rows.append(csv_row(
+            f"fig4_scores/{s}", runtimes[s] * 1e6 / len(per_score[s]),
+            f"cut_gmean={gm:.1f};vs_anr%={rel:+.2f}",
+        ))
+        if verbose:
+            print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

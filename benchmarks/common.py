@@ -1,0 +1,100 @@
+"""Shared benchmark harness: container-scale instance set + helpers.
+
+The paper's tuning/test sets span web, social, mesh, road, geometric and
+generated power-law graphs at 10^6..10^9 edges on a 755 GiB machine; this
+1-core container runs the same *algorithms* on one representative instance
+per structural family at ~4k nodes (DESIGN.md §7.5) under the paper's
+random-ordering protocol (independent permutations, geometric means).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.graphs import (
+    rmat_graph, rgg_graph, rhg_like_graph, grid_mesh_graph, sbm_graph,
+    random_order, apply_order,
+)
+from repro.graphs.locality import geometric_mean
+from repro.core import (
+    BuffCutConfig, CuttanaConfig, buffcut_partition, heistream_partition,
+    cuttana_partition, fennel_partition, ldg_partition, cut_ratio,
+    edge_cut, balance, restream, buffcut_partition_pipelined,
+    buffcut_partition_vectorized,
+)
+
+N_ORDERS = 2  # random permutations per instance (paper: 3)
+
+
+def tuning_set() -> dict:
+    """name -> CSRGraph, one per structural family (paper Table 1 left)."""
+    return {
+        "web-rmat": rmat_graph(4096, 8, seed=11),
+        "soc-rhg": rhg_like_graph(4096, 8, seed=12),
+        "mesh-grid": grid_mesh_graph(64),
+        "road-grid": grid_mesh_graph(64, diag=False),
+        "geo-rgg": rgg_graph(4096, seed=13),
+        "com-sbm": sbm_graph(4096, 32, p_in=0.03, p_out=0.0008, seed=14),
+    }
+
+
+def default_cfg(g, k: int = 16, **kw) -> BuffCutConfig:
+    base = dict(
+        k=k,
+        buffer_size=max(g.n // 8, 16),
+        batch_size=max(g.n // 32, 8),
+        d_max=max(g.n / 16, 64.0),
+    )
+    base.update(kw)
+    return BuffCutConfig(**base)
+
+
+METHODS = {
+    "fennel": lambda g, cfg: (fennel_partition(g, cfg.k, cfg.eps), None),
+    "ldg": lambda g, cfg: (ldg_partition(g, cfg.k, cfg.eps), None),
+    "heistream": lambda g, cfg: heistream_partition(g, cfg),
+    "cuttana": lambda g, cfg: cuttana_partition(
+        g, CuttanaConfig(k=cfg.k, eps=cfg.eps, buffer_size=cfg.buffer_size,
+                         batch_size=cfg.batch_size, d_max=cfg.d_max)
+    ),
+    "buffcut": lambda g, cfg: buffcut_partition(g, cfg),
+    "buffcut-par": lambda g, cfg: buffcut_partition_pipelined(g, cfg),
+    "buffcut-vec": lambda g, cfg: buffcut_partition_vectorized(g, cfg, wave=32, chunk=32),
+}
+
+
+def run_method(name: str, g, cfg) -> dict:
+    t0 = time.perf_counter()
+    block, stats = METHODS[name](g, cfg)
+    dt = time.perf_counter() - t0
+    out = {
+        "cut_ratio": cut_ratio(g, block),
+        "cut": edge_cut(g, block),
+        "balance": balance(g, block, cfg.k),
+        "runtime_s": dt,
+        "mem_items": getattr(stats, "peak_mem_items", 0) if stats else 0,
+        "ier": getattr(stats, "mean_ier", 0.0) if stats else 0.0,
+    }
+    return out
+
+
+def sweep_orders(fn, g, seeds=range(N_ORDERS)) -> dict:
+    """Run fn(graph_with_random_order) per seed; geometric-mean numerics."""
+    rows = []
+    for s in seeds:
+        gr = apply_order(g, random_order(g, 100 + s))
+        rows.append(fn(gr))
+    out = {}
+    for key in rows[0]:
+        vals = np.array([r[key] for r in rows], dtype=np.float64)
+        out[key] = geometric_mean(vals) if (vals > 0).all() else float(vals.mean())
+    return out
+
+
+def gmean_over_instances(per_instance: dict[str, float]) -> float:
+    return geometric_mean(np.array(list(per_instance.values())))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,173 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""§Perf hillclimbs — the three chosen cells (assignment: worst roofline
+fraction / most collective-bound / most paper-representative), each as an
+explicit hypothesis -> change -> measure record.
+
+H1 stablelm-3b train_4k (worst useful-FLOPs fraction among LM trains):
+   hypothesis: sequence-parallel attention replicates QKVO projection
+   compute 16x over the model axis (~4d² of ~10d² per-token FLOPs);
+   head-parallel TP (heads 32 % 16 == 0) shards it.
+   change: attn_mode='head_tp' (sharding rules + q/k/v constraints).
+
+H2 h2o-danube long_500k (most collective-bound relative to work):
+   hypothesis: the O(window) slice of the sequence-sharded 512k cache
+   re-gathers cache shards (~64 GB/step of collectives for a 1-token step);
+   a masked full-cache attention in flash-decoding layout (shard-local
+   partial softmax + psum of (B,KV,G)-sized partials) removes the gather.
+   change: decode_swa_mode='masked_full'.
+
+H3 graphsage-reddit ogb_products (most representative of the paper):
+   hypothesis: GSPMD gathers the full (N, d) node state per layer because
+   it cannot prove edge locality; a BuffCut placement bounds cross-shard
+   edges, so a halo-exchange formulation (shard_map, static frontier cap =
+   20%% of N from the measured placement cut) moves Hf*d instead of N*d.
+   change: sage_fullgraph_halo_loss (models/gnn.py).
+
+Usage: PYTHONPATH=src python -m benchmarks.hillclimb [h1|h2|h3] --json out.json
+"""
+import argparse
+import dataclasses
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.launch.mesh import make_production_mesh, dp_size
+from repro.launch.steps import build_cell, lower_cell, param_shardings, _shardings_with_fallback
+from repro.launch.hlo_analysis import RooflineTerms
+from benchmarks.roofline import analyze_cell, _compile_metrics, analytic_hbm_bytes
+
+
+def _delta(tag, base, var, key="t_collective_s"):
+    b = base["roofline"][key]
+    v = var["roofline"][key]
+    print(f"{tag}: {key} {b*1e3:.2f} -> {v*1e3:.2f} ms "
+          f"({(v/b-1)*100 if b else 0:+.1f}%)", flush=True)
+
+
+def h1() -> dict:
+    base = analyze_cell("stablelm-3b", "train_4k", verbose=False)
+    var = analyze_cell("stablelm-3b", "train_4k", attn_mode="head_tp", verbose=False)
+    out = {"name": "H1-headTP-attention", "cell": "stablelm-3b/train_4k",
+           "baseline": base, "variant": var}
+    for k in ("t_compute_s", "t_collective_s", "t_memory_s", "useful_flops_frac"):
+        _delta("H1", base, var, k)
+    print(f"H1 peak: {base['peak_bytes_per_dev']/1e9:.2f} -> "
+          f"{var['peak_bytes_per_dev']/1e9:.2f} GB", flush=True)
+    return out
+
+
+def h2() -> dict:
+    spec = get_arch("h2o-danube-1.8b")
+    base = analyze_cell("h2o-danube-1.8b", "long_500k", verbose=False)
+    cfg = dataclasses.replace(spec.full_config(), decode_swa_mode="masked_full")
+    var = analyze_cell("h2o-danube-1.8b", "long_500k", cfg_override=cfg, verbose=False)
+    out = {"name": "H2-maskedfull-SWA-decode", "cell": "h2o-danube-1.8b/long_500k",
+           "baseline": base, "variant": var}
+    for k in ("t_collective_s", "t_compute_s", "t_memory_s"):
+        _delta("H2", base, var, k)
+    print(f"H2 peak: {base['peak_bytes_per_dev']/1e9:.2f} -> "
+          f"{var['peak_bytes_per_dev']/1e9:.2f} GB", flush=True)
+    return out
+
+
+def _build_halo_cell(mesh, halo_frac: float):
+    """Manual cell for the halo-exchange GraphSAGE on ogb_products dims."""
+    from repro.models import gnn as gnn_mod
+    from repro.train.adamw import AdamW
+    from repro.distributed.sharding import gnn_sharding_rules
+    import numpy as np  # noqa: F401
+
+    spec = get_arch("graphsage-reddit")
+    shape = spec.shapes["ogb_products"]
+    cfg = dataclasses.replace(spec.full_config(), d_in=shape.dims["f"], n_classes=47)
+    dp = dp_size(mesh)
+    dp_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    n = math.ceil(shape.dims["n"] / dp) * dp
+    e = math.ceil(shape.dims["e_dir"] / dp) * dp
+    hf = math.ceil(halo_frac * n / dp) * dp
+    f = shape.dims["f"]
+    I32, F32 = jnp.int32, jnp.float32
+    batch_struct = {
+        "x": jax.ShapeDtypeStruct((n, f), F32),
+        "frontier_own": jax.ShapeDtypeStruct((hf,), I32),
+        "edge_src": jax.ShapeDtypeStruct((e,), I32),
+        "edge_dst": jax.ShapeDtypeStruct((e,), I32),
+        "edge_mask": jax.ShapeDtypeStruct((e,), F32),
+        "labels": jax.ShapeDtypeStruct((n,), I32),
+        "node_mask": jax.ShapeDtypeStruct((n,), F32),
+    }
+    rules = gnn_sharding_rules()
+    params_struct = jax.eval_shape(
+        lambda: gnn_mod.sage_init(jax.random.PRNGKey(0), cfg)
+    )
+    p_shard = param_shardings(rules, mesh, params_struct)
+    b_shard = _shardings_with_fallback(rules, mesh, batch_struct)
+    # frontier_own is 1-D over dp like other node arrays (rule fallback ok)
+    opt = AdamW()
+    opt_struct = jax.eval_shape(opt.init, params_struct)
+    o_shard = param_shardings(rules, mesh, opt_struct._asdict())
+    o_shard = type(opt_struct)(**o_shard)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: gnn_mod.sage_fullgraph_halo_loss(p, batch, cfg, mesh, dp_axes)
+        )(params)
+        new_p, new_o, gnorm = opt.update(grads, opt_state, params)
+        return new_p, new_o, {"loss": loss, "grad_norm": gnorm}
+
+    from repro.launch.steps import Cell
+    return Cell(
+        arch_id="graphsage-reddit", shape_name="ogb_products(halo)", kind="train",
+        step_fn=train_step,
+        arg_structs=(params_struct, opt_struct, batch_struct),
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, None),
+        donate=(0, 1),
+        model_flops=0.0,
+        notes=f"halo_frac={halo_frac}",
+    )
+
+
+def h3() -> dict:
+    base = analyze_cell("graphsage-reddit", "ogb_products", verbose=False)
+    mesh = make_production_mesh()
+    rows = {"baseline": base, "variants": {}}
+    print(f"H3 baseline: coll {base['roofline']['t_collective_s']*1e3:.2f} ms "
+          f"peak {base['peak_bytes_per_dev']/1e9:.2f} GB", flush=True)
+    for frac in (0.2, 0.05):
+        cell = _build_halo_cell(mesh, frac)
+        m = _compile_metrics(cell, mesh)
+        terms = RooflineTerms(
+            flops=m["flops"], hbm_bytes=analytic_hbm_bytes(
+                "graphsage-reddit", "ogb_products", mesh),
+            coll_bytes=m["coll_bytes"], n_devices=mesh.size,
+        )
+        rows["variants"][f"halo_{frac}"] = {
+            "roofline": terms.as_dict(),
+            "peak_bytes_per_dev": m["peak_bytes"],
+        }
+        print(f"H3 halo(frac={frac}): coll {terms.t_collective*1e3:.2f} ms "
+              f"peak {m['peak_bytes']/1e9:.2f} GB", flush=True)
+    return {"name": "H3-buffcut-halo-gnn", "cell": "graphsage-reddit/ogb_products",
+            **rows}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("which", nargs="*", default=["h1", "h2", "h3"])
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    fns = {"h1": h1, "h2": h2, "h3": h3}
+    for name in args.which:
+        res = fns[name]()
+        if args.json:
+            with open(args.json, "a") as fh:
+                fh.write(json.dumps(res) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,252 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Roofline analysis per (arch x shape x mesh) — EXPERIMENTS.md §Roofline.
+
+Methodology (CPU container, no wall clocks — everything from compiled
+artifacts; see DESIGN.md §9):
+
+ 1. PRODUCTION compile (rolled layer scan + flash attention): proves the
+    cell compiles and gives bytes-per-device (memory_analysis).
+ 2. ANALYSIS cost extraction:
+    - GNN / recsys steps contain no while loops -> cost_analysis and the
+      collective-bytes parse of the production compile are exact.
+    - LM steps hide per-layer cost inside scan bodies (XLA counts a while
+      body ONCE). We therefore compile UNROLLED two-point variants at
+      L=2 and L=4 layers (attention chunk scans unrolled as well, chunk
+      sizes raised to keep trip counts <= 8x4) and extrapolate every
+      metric linearly in L: m(L) = fixed + L * per_layer. Layers are
+      identical, so the fit is exact for FLOPs/HBM/collective bytes; the
+      embed/unembed/loss/optimizer tails are captured in `fixed` +
+      per-layer params scaling.
+
+ Terms (per device, TPU v5e): t_comp = flops/197e12, t_mem = bytes/819e9,
+ t_coll = coll_bytes/50e9.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline --all --json roofline.json
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs import ARCHS, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, lower_cell
+from repro.launch.hlo_analysis import (
+    analyze_compiled, collective_bytes, RooflineTerms,
+    PEAK_FLOPS, HBM_BW, ICI_BW,
+)
+
+
+def analytic_hbm_bytes(arch_id: str, shape_name: str, mesh) -> float:
+    """Napkin-math HBM traffic per device per step (TPU-fused semantics).
+
+    The HLO 'bytes accessed' on the CPU backend counts every unfused
+    elementwise op's operands — 10-70x what a TPU executes after fusion —
+    so the memory roofline term uses this analytic model (weights traffic +
+    activation round-trips + optimizer + KV/embedding traffic); the raw HLO
+    number is reported alongside as `t_memory_hlo_s` for transparency.
+    """
+    from repro.configs import get_arch as _ga
+    spec = _ga(arch_id)
+    shape = spec.shapes[shape_name]
+    cfg = spec.full_config()
+    n_dev = mesh.size
+    tp = mesh.shape.get("model", 1)
+    dp = n_dev // tp
+
+    if spec.family == "lm":
+        L, d = cfg.n_layers, cfg.d_model
+        act_params = cfg.active_param_count()
+        b = shape.dims["batch"]
+        s = shape.dims["seq"]
+        b_dev = max(b // dp, 1)
+        if shape.kind == "train":
+            passes = 3.0  # fwd + bwd + remat-fwd weight reads
+            # attention weights are not TP-sharded (seq-parallel attention);
+            # MLP/MoE weights are read /tp per device
+            attn_w = L * 2 * d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head + L * d * cfg.n_heads * cfg.d_head
+            mlp_w = (act_params - attn_w - 2 * cfg.vocab * d) / tp
+            w_bytes = passes * 2.0 * (attn_w + max(mlp_w, 0) + 2 * cfg.vocab * d / tp)
+            # activation round-trips: ~8 tensor passes of (B_dev, S, d) bf16
+            # per layer (qkv/o/mlp-in/out + norms, fwd+bwd, remat reload)
+            act_bytes = L * b_dev * s * d * 2.0 * 8.0
+            # logits in f32, vocab sharded /tp, ~3 passes (fwd, CE, bwd)
+            logit_bytes = b_dev * s * (cfg.vocab / tp) * 4.0 * 3.0
+            # optimizer: m,v,param,grad read/write on the local shard
+            opt_bytes = cfg.param_count() / n_dev * 22.0
+            return w_bytes + act_bytes + logit_bytes + opt_bytes
+        if shape.kind == "prefill":
+            attn_w = L * 2 * d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head + L * d * cfg.n_heads * cfg.d_head
+            mlp_w = (act_params - attn_w - 2 * cfg.vocab * d) / tp
+            w_bytes = 2.0 * (attn_w + max(mlp_w, 0) + 2 * cfg.vocab * d / tp)
+            act_bytes = L * b_dev * s * d * 2.0 * 4.0
+            return w_bytes + act_bytes
+        # decode: one token — weights once + KV cache traffic
+        w_bytes = 2.0 * act_params / tp
+        window = cfg.sliding_window or s
+        kv_read = L * b_dev * min(window, s) * cfg.n_kv_heads * cfg.d_head * 2.0 * 2.0
+        return w_bytes + kv_read
+
+    if spec.family == "gnn":
+        n, e = shape.dims["n"], shape.dims["e_dir"]
+        d_h = getattr(cfg, "d_hidden", 64)
+        layers = getattr(cfg, "n_layers", getattr(cfg, "n_interactions", 3))
+        f = shape.dims["f"]
+        n_dev_rows = max(n // dp, 1)
+        e_dev = max(e // dp, 1)
+        # per layer: gather src states (E*d), messages write+read (E*d),
+        # scatter to nodes (N*d); x3 for fwd+bwd+recompute
+        per_layer = (3 * e_dev * d_h + 2 * n_dev_rows * d_h) * 4.0
+        return 3.0 * layers * per_layer + n_dev_rows * f * 4.0 * 2.0
+
+    # recsys
+    b = shape.dims.get("batch", 1)
+    b_dev = max(b // dp, 1)
+    d_e = cfg.embed_dim
+    rows = b_dev * cfg.n_sparse * cfg.multi_hot
+    row_bytes = rows * d_e * 4.0
+    mlp_params = 4.0 * (sum(a * b2 for a, b2 in zip((cfg.n_dense,) + cfg.bot_mlp[:-1], cfg.bot_mlp))
+                        + sum(a * b2 for a, b2 in zip((cfg.n_interact + d_e,) + cfg.top_mlp[:-1], cfg.top_mlp)))
+    if shape.kind == "train":
+        return 4.0 * row_bytes + 3.0 * mlp_params + b_dev * (cfg.n_sparse + 1) * d_e * 4.0 * 4.0
+    if shape.kind == "retrieval":
+        return shape.dims["candidates"] / dp * d_e * 4.0 + row_bytes
+    return row_bytes + mlp_params + b_dev * (cfg.n_sparse + 1) * d_e * 4.0 * 2.0
+
+
+def _compile_metrics(cell, mesh) -> dict:
+    lowered = lower_cell(cell, mesh)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    mem = compiled.memory_analysis()
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "hbm_bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": float(coll["total"]),
+        "coll_detail": {k: int(v) for k, v in coll.items()},
+        "peak_bytes": int(
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)
+        ),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+    }
+
+
+def _lm_analysis_cfg(cfg, shape, n_layers: int):
+    seq = shape.dims["seq"]
+    q_chunk = max(seq // 8, 512)
+    kv_chunk = max(seq // 4, 1024)
+    return dataclasses.replace(
+        cfg, n_layers=n_layers, scan_unroll=n_layers, attn_unroll=True,
+        q_chunk=q_chunk, kv_chunk=kv_chunk,
+    )
+
+
+def analyze_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+                 cfg_override=None, verbose: bool = True,
+                 attn_mode: str = "seq") -> dict:
+    spec = get_arch(arch_id)
+    shape = spec.shapes[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if shape.skip:
+        return {"arch": arch_id, "shape": shape_name, "status": "skip",
+                "reason": shape.skip}
+    t0 = time.time()
+    base_cfg = cfg_override if cfg_override is not None else spec.full_config()
+
+    # 1. production compile: memory + compile proof
+    prod_cell = build_cell(arch_id, shape_name, mesh, cfg_override=cfg_override,
+                           attn_mode=attn_mode)
+    prod = _compile_metrics(prod_cell, mesh)
+
+    # 2. cost analysis
+    if spec.family == "lm":
+        pts = {}
+        for L in (2, 4):
+            cfg_L = _lm_analysis_cfg(base_cfg, shape, L)
+            cell_L = build_cell(arch_id, shape_name, mesh, cfg_override=cfg_L,
+                                attn_mode=attn_mode)
+            pts[L] = _compile_metrics(cell_L, mesh)
+        L_full = base_cfg.n_layers
+        fit = {}
+        for key in ("flops", "hbm_bytes", "coll_bytes"):
+            per_layer = (pts[4][key] - pts[2][key]) / 2.0
+            fixed = pts[2][key] - 2.0 * per_layer
+            fit[key] = fixed + L_full * per_layer
+        flops, hbm, coll = fit["flops"], fit["hbm_bytes"], fit["coll_bytes"]
+        method = "two-point unrolled fit (L=2,4)"
+    else:
+        flops, hbm, coll = prod["flops"], prod["hbm_bytes"], prod["coll_bytes"]
+        method = "direct (no loops in step)"
+
+    hbm_analytic = analytic_hbm_bytes(arch_id, shape_name, mesh)
+    terms = RooflineTerms(
+        flops=flops, hbm_bytes=hbm_analytic, coll_bytes=coll,
+        n_devices=mesh.size, model_flops=prod_cell.model_flops,
+    )
+    out = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": prod_cell.kind,
+        "status": "ok",
+        "method": method,
+        "peak_bytes_per_dev": prod["peak_bytes"],
+        "roofline": terms.as_dict(),
+        "t_memory_hlo_s": hbm / HBM_BW,  # raw HLO bytes (CPU-unfused bound)
+        "dominant": terms.bottleneck,
+        "roofline_time_s": max(terms.t_compute, terms.t_memory, terms.t_collective),
+        "analysis_wall_s": round(time.time() - t0, 1),
+    }
+    if verbose:
+        r = out["roofline"]
+        print(
+            f"{arch_id:26s} {shape_name:14s} [{out['mesh']}] "
+            f"comp {r['t_compute_s']*1e3:9.2f}ms  mem {r['t_memory_s']*1e3:9.2f}ms  "
+            f"coll {r['t_collective_s']*1e3:9.2f}ms  -> {out['dominant']:10s} "
+            f"useful {r['useful_flops_frac']*100:5.1f}%  peak {prod['peak_bytes']/1e9:6.2f}GB",
+            flush=True,
+        )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for aid, spec in ARCHS.items():
+            for sname in spec.shapes:
+                cells.append((aid, sname))
+    else:
+        spec = get_arch(args.arch)
+        shapes = [args.shape] if args.shape else list(spec.shapes)
+        cells = [(args.arch, s) for s in shapes]
+
+    for aid, sname in cells:
+        try:
+            res = analyze_cell(aid, sname, multi_pod=args.multi_pod)
+        except Exception as e:
+            res = {"arch": aid, "shape": sname, "status": "FAIL", "error": str(e)}
+            print(f"FAIL {aid} x {sname}: {e}", flush=True)
+        if args.json:
+            with open(args.json, "a") as f:
+                f.write(json.dumps(res) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Render dryrun_results.jsonl / roofline.jsonl into EXPERIMENTS.md tables."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path: str) -> list[dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                rows.append(json.loads(line))
+    return rows
+
+
+def dryrun_table(path: str = "dryrun_results.jsonl") -> str:
+    rows = load(path)
+    # keep the latest entry per (arch, shape, mesh)
+    latest = {}
+    for r in rows:
+        latest[(r["arch"], r["shape"], r.get("mesh", ""))] = r
+    out = ["| arch | shape | mesh | status | peak GB/dev | coll MB/dev | compile s |",
+           "|---|---|---|---|---|---|---|"]
+    n_ok = n_skip = n_fail = 0
+    for (a, s, m), r in sorted(latest.items()):
+        if r["status"] == "ok":
+            n_ok += 1
+            gb = r["bytes_per_device"]["peak"] / 1e9
+            coll = r["collectives"]["total"] / 1e6
+            flag = " ⚠" if gb > 16 else ""
+            out.append(
+                f"| {a} | {s} | {m} | ok | {gb:.2f}{flag} | {coll:.0f} | {r['compile_s']} |"
+            )
+        elif r["status"] == "skip":
+            n_skip += 1
+            out.append(f"| {a} | {s} | {m} | skip | — | — | — |")
+        else:
+            n_fail += 1
+            out.append(f"| {a} | {s} | {m} | FAIL | — | — | — |")
+    out.append("")
+    out.append(f"Totals: {n_ok} ok, {n_skip} skip, {n_fail} fail. "
+               "⚠ = exceeds the 16 GB/chip HBM budget at baseline (hillclimb target).")
+    return "\n".join(out)
+
+
+def roofline_table(path: str = "roofline_results.jsonl") -> str:
+    rows = [r for r in load(path) if r.get("status") == "ok"]
+    latest = {}
+    for r in rows:
+        latest[(r["arch"], r["shape"], r.get("mesh", ""))] = r
+    out = ["| arch | shape | t_comp ms | t_mem ms | t_coll ms | bottleneck | useful% | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(latest.items()):
+        rf = r["roofline"]
+        dom = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+        frac = rf["t_compute_s"] / dom if dom else 0.0
+        out.append(
+            f"| {a} | {s} | {rf['t_compute_s']*1e3:.2f} | {rf['t_memory_s']*1e3:.2f} "
+            f"| {rf['t_collective_s']*1e3:.2f} | {r['dominant']} "
+            f"| {rf['useful_flops_frac']*100:.1f} | {frac:.2f} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    kind = sys.argv[1] if len(sys.argv) > 1 else "dryrun"
+    path = sys.argv[2] if len(sys.argv) > 2 else None
+    if kind == "dryrun":
+        print(dryrun_table(path or "dryrun_results.jsonl"))
+    else:
+        print(roofline_table(path or "roofline_results.jsonl"))

@@ -1,0 +1,70 @@
+"""The paper's systems payoff end-to-end: BuffCut as the placement service
+for distributed GNN training.
+
+ 1. Stream-partition a graph into 8 'device' blocks with BuffCut,
+ 2. quantify the halo-exchange bytes a GNN layer would move vs
+    random/hash placement,
+ 3. train a GraphSAGE model on the partition-reordered graph, sampling
+    neighbors with partition-aware bias (fewer cross-shard gathers).
+
+    PYTHONPATH=src python examples/gnn_partition_pipeline.py
+"""
+import jax
+import numpy as np
+
+from repro.graphs import (
+    rgg_graph, apply_order, random_order, sample_multihop, cross_block_fraction,
+)
+from repro.distributed.gnn_placement import place_graph, placement_report, reorder_for_shards
+from repro.models import gnn
+from repro.train.adamw import AdamW
+
+N_SHARDS = 8
+D_FEAT = 32
+
+g = apply_order(rgg_graph(2048, seed=3), random_order(rgg_graph(2048, seed=3), 1))
+print(f"graph n={g.n} m={g.m}")
+
+# --- 1+2: placement quality
+report = placement_report(g, N_SHARDS, D_FEAT)
+for method, r in report.items():
+    print(f"{method:8s} halo={r['halo_MB_per_layer']:.3f} MB/layer "
+          f"imbalance={r['load_imbalance']:.3f}")
+assert report["buffcut"]["halo_MB_per_layer"] < report["random"]["halo_MB_per_layer"]
+
+placement = place_graph(g, N_SHARDS, method="buffcut")
+perm = reorder_for_shards(g, placement)
+print("shard sizes:", np.bincount(placement.block).tolist())
+
+# --- 3: train GraphSAGE with partition-aware sampling
+cfg = gnn.GraphSAGEConfig(n_layers=2, d_hidden=32, d_in=D_FEAT, n_classes=4,
+                          sample_sizes=(8, 4))
+params = gnn.sage_init(jax.random.PRNGKey(0), cfg)
+opt = AdamW(lr=1e-2, warmup_steps=5)
+opt_state = opt.init(params)
+rng = np.random.default_rng(0)
+feats = rng.standard_normal((g.n, D_FEAT)).astype(np.float32)
+labels = (placement.block % 4).astype(np.int32)  # geography-correlated labels
+
+@jax.jit
+def step(p, o, batch):
+    loss, grads = jax.value_and_grad(lambda p_: gnn.sage_loss(p_, batch, cfg))(p)
+    p2, o2, _ = opt.update(grads, o, p)
+    return p2, o2, loss
+
+losses = []
+for it in range(30):
+    seeds = rng.integers(0, g.n, 64)
+    layers = sample_multihop(g, seeds, cfg.sample_sizes, seed=it,
+                             block_of=placement.block)
+    batch = {
+        "feats": [jax.numpy.asarray(feats[l]) for l in layers],
+        "labels": jax.numpy.asarray(labels[seeds]),
+    }
+    params, opt_state, loss = step(params, opt_state, batch)
+    losses.append(float(loss))
+cross = cross_block_fraction(g, layers, placement.block)
+print(f"sage loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
+      f"cross-shard gather fraction {cross:.3f}")
+assert losses[-1] < losses[0]
+print("OK")

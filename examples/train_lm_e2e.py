@@ -1,0 +1,72 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with the
+full production substrate (AdamW, checkpoints, fault-tolerant loop).
+
+Reduced here to CPU-feasible sizes via --dim/--layers/--steps; on a pod the
+identical code path runs the full configs (launch/train.py --preset full).
+
+    PYTHONPATH=src python examples/train_lm_e2e.py --steps 200
+"""
+import argparse
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.models.transformer import TransformerConfig, init_params, loss_fn
+from repro.train import (
+    AdamW, make_train_step, TrainLoop, LoopConfig, CheckpointManager,
+    token_batches,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--dim", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full-100m", action="store_true",
+                    help="true ~100M-param config (slow on 1 CPU core)")
+    args = ap.parse_args()
+
+    if args.full_100m:
+        cfg = TransformerConfig(
+            name="lm-100m", n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=12, d_ff=2048, vocab=32768, dtype="float32",
+        )
+    else:
+        cfg = TransformerConfig(
+            name="lm-small", n_layers=args.layers, d_model=args.dim,
+            n_heads=max(args.dim // 32, 2), n_kv_heads=max(args.dim // 64, 1),
+            d_ff=args.dim * 3, vocab=args.vocab, dtype="float32",
+            q_chunk=64, kv_chunk=64,
+        )
+    print(f"config: {cfg.name} params={cfg.param_count()/1e6:.1f}M")
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = AdamW(lr=3e-4, warmup_steps=20)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(lambda p, b: loss_fn(p, b, cfg), opt))
+
+    ckpt = CheckpointManager(tempfile.mkdtemp(prefix="lm_e2e_"))
+    loop = TrainLoop(step, ckpt, LoopConfig(
+        total_steps=args.steps, checkpoint_every=max(args.steps // 4, 1),
+    ))
+    data = token_batches(cfg.vocab, args.batch, args.seq, steps=args.steps + 8)
+    t0 = time.time()
+    (params, opt_state), hist = loop.run(params, opt_state, data)
+    dt = time.time() - t0
+    print(
+        f"{len(hist)} steps in {dt:.0f}s ({dt/max(len(hist),1)*1e3:.0f} ms/step): "
+        f"loss {hist[0]:.3f} -> {hist[-1]:.3f}"
+    )
+    assert hist[-1] < hist[0], "loss must decrease"
+    assert np.isfinite(hist[-1])
+    print("OK — checkpoints in", ckpt.dir, "steps:", ckpt.all_steps())
+
+
+if __name__ == "__main__":
+    main()

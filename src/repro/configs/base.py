@@ -1,0 +1,44 @@
+"""Arch/shape registry protocol.
+
+Every architecture module registers an ArchSpec carrying:
+  - full_config(): the exact published configuration (dry-run only —
+    instantiated as ShapeDtypeStructs, never allocated on this host),
+  - smoke_config(): a reduced same-family configuration for CPU tests,
+  - shapes: the arch's assigned input-shape set,
+  - input_specs(shape): ShapeDtypeStruct stand-ins for every step input,
+  - smoke_batch(rng): real (small) arrays for the smoke test.
+
+`kind` tells the launcher which step to lower:
+  train    -> train_step(params, opt_state, batch)
+  prefill  -> prefill_step(params, tokens)
+  decode   -> decode_step(params, tokens, cache)   (serve_step, not train)
+  retrieval-> retrieval_step(params, batch)
+  serve    -> forward-only scoring
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeDef:
+    name: str
+    kind: str                      # train | prefill | decode | retrieval | serve
+    dims: dict
+    skip: str | None = None        # reason if this cell is inapplicable
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                    # lm | gnn | recsys
+    full_config: Callable[[], object]
+    smoke_config: Callable[[], object]
+    shapes: dict[str, ShapeDef]
+    input_specs: Callable[[object, str], dict]   # (config, shape) -> spec pytree
+    smoke_batch: Callable[[object, int], dict]   # (config, seed) -> real arrays
+    notes: str = ""
+
+    def cells(self):
+        return [(self.arch_id, s) for s in self.shapes]

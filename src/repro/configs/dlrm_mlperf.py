@@ -1,0 +1,89 @@
+"""dlrm-mlperf [recsys] — MLPerf DLRM benchmark config (Criteo 1TB)
+[arXiv:1906.00091]: 13 dense + 26 sparse features, embed_dim=128,
+bot MLP 13-512-256-128, top MLP 1024-1024-512-256-1, dot interaction.
+
+Table sizes: Criteo's per-feature vocabs are heterogeneous (max ~40M); we
+use a uniform 2^20-row stand-in per table (27M rows total, 3.5B embedding
+params; power-of-two so rows divide any pod mesh) — documented in DESIGN.md §7. Tables shard row-wise over the full
+device mesh.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchSpec, ShapeDef
+from repro.models.dlrm import DLRMConfig
+
+ARCH_ID = "dlrm-mlperf"
+F32, I32 = jnp.float32, jnp.int32
+
+
+def full_config() -> DLRMConfig:
+    return DLRMConfig(
+        name=ARCH_ID, n_dense=13, n_sparse=26, embed_dim=128,
+        vocab_size=1_048_576, bot_mlp=(512, 256, 128),
+        top_mlp=(1024, 1024, 512, 256, 1), multi_hot=1,
+    )
+
+
+def smoke_config() -> DLRMConfig:
+    return DLRMConfig(
+        name=ARCH_ID + "-smoke", n_dense=13, n_sparse=4, embed_dim=16,
+        vocab_size=128, bot_mlp=(32, 16), top_mlp=(32, 16, 1), multi_hot=2,
+    )
+
+
+SHAPES = {
+    "train_batch": ShapeDef("train_batch", "train", {"batch": 65536}),
+    "serve_p99": ShapeDef("serve_p99", "serve", {"batch": 512}),
+    "serve_bulk": ShapeDef("serve_bulk", "serve", {"batch": 262144}),
+    "retrieval_cand": ShapeDef(
+        "retrieval_cand", "retrieval", {"batch": 1, "candidates": 1_000_000}
+    ),
+}
+
+
+def input_specs(cfg: DLRMConfig, shape: ShapeDef) -> dict:
+    b = shape.dims["batch"]
+    m = cfg.multi_hot
+    if shape.kind == "retrieval":
+        n_cand = shape.dims["candidates"]
+        return {
+            "query_dense": jax.ShapeDtypeStruct((1, cfg.n_dense), F32),
+            "query_sparse_idx": jax.ShapeDtypeStruct((1, cfg.n_sparse, m), I32),
+            "query_sparse_mask": jax.ShapeDtypeStruct((1, cfg.n_sparse, m), F32),
+            "candidates": jax.ShapeDtypeStruct((n_cand, cfg.embed_dim), F32),
+        }
+    specs = {
+        "dense": jax.ShapeDtypeStruct((b, cfg.n_dense), F32),
+        "sparse_idx": jax.ShapeDtypeStruct((b, cfg.n_sparse, m), I32),
+        "sparse_mask": jax.ShapeDtypeStruct((b, cfg.n_sparse, m), F32),
+    }
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b,), I32)
+    return specs
+
+
+def smoke_batch(cfg: DLRMConfig, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    b, m = 16, cfg.multi_hot
+    return {
+        "dense": jnp.asarray(rng.standard_normal((b, cfg.n_dense)), F32),
+        "sparse_idx": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, cfg.n_sparse, m)), I32
+        ),
+        "sparse_mask": jnp.ones((b, cfg.n_sparse, m), F32),
+        "labels": jnp.asarray(rng.integers(0, 2, b), I32),
+    }
+
+
+SPEC = ArchSpec(
+    arch_id=ARCH_ID,
+    family="recsys",
+    full_config=full_config,
+    smoke_config=smoke_config,
+    shapes=SHAPES,
+    input_specs=input_specs,
+    smoke_batch=smoke_batch,
+    notes="Embedding lookup is the hot path — kernels/embedding_bag.",
+)

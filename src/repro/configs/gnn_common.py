@@ -1,0 +1,129 @@
+"""Shared shape definitions + input specs for the GNN archs.
+
+The four assigned GNN shapes:
+  full_graph_sm  Cora-scale full-batch           (n=2708, e=10556, f=1433)
+  minibatch_lg   Reddit-scale sampled training   (232965 nodes, fanout 15-10,
+                 batch_nodes=1024 -> layered block: 1024 + 15360 + 153600
+                 node slots, 168960 block edges)
+  ogb_products   full-batch large                (n=2449029, e=61859140, f=100)
+  molecule       batched small graphs            (30 nodes, 64 edges, batch 128)
+
+Every shape lowers to a fixed-size edge-list subgraph so all four GNN
+archs share one train_step signature. Directed CSR entries = 2x undirected
+edges. Sampled blocks use the fanout sampler's parent->child edge layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeDef
+
+F32, I32 = jnp.float32, jnp.int32
+
+FANOUT = (15, 10)
+BATCH_NODES = 1024
+
+
+def gnn_shapes() -> dict[str, ShapeDef]:
+    h1 = BATCH_NODES * FANOUT[0]
+    h2 = h1 * FANOUT[1]
+    return {
+        "full_graph_sm": ShapeDef(
+            "full_graph_sm", "train",
+            {"n": 2708, "e_dir": 2 * 10556, "f": 1433},
+        ),
+        "minibatch_lg": ShapeDef(
+            "minibatch_lg", "train",
+            {
+                "n": BATCH_NODES + h1 + h2, "e_dir": h1 + h2, "f": 602,
+                "seeds": BATCH_NODES, "fanout": FANOUT,
+            },
+        ),
+        "ogb_products": ShapeDef(
+            "ogb_products", "train",
+            {"n": 2449029, "e_dir": 2 * 61859140, "f": 100},
+        ),
+        "molecule": ShapeDef(
+            "molecule", "train",
+            {"n": 128 * 30, "e_dir": 128 * 2 * 64, "f": 16, "graphs": 128},
+        ),
+    }
+
+
+def gnn_input_specs(arch: str, shape: ShapeDef) -> dict:
+    n, e = shape.dims["n"], shape.dims["e_dir"]
+    f = shape.dims["f"]
+    specs: dict = {
+        "edge_src": jax.ShapeDtypeStruct((e,), I32),
+        "edge_dst": jax.ShapeDtypeStruct((e,), I32),
+        "edge_mask": jax.ShapeDtypeStruct((e,), F32),
+        "node_mask": jax.ShapeDtypeStruct((n,), F32),
+    }
+    if arch == "egnn":
+        specs |= {
+            "x": jax.ShapeDtypeStruct((n, f), F32),
+            "coords": jax.ShapeDtypeStruct((n, 3), F32),
+            "target": jax.ShapeDtypeStruct((n, 1), F32),
+        }
+    elif arch == "meshgraphnet":
+        specs |= {
+            "x": jax.ShapeDtypeStruct((n, f), F32),
+            "edge_attr": jax.ShapeDtypeStruct((e, 4), F32),
+            "target": jax.ShapeDtypeStruct((n, 3), F32),
+        }
+    elif arch == "schnet":
+        n_graphs = shape.dims.get("graphs", 1)
+        specs |= {
+            "species": jax.ShapeDtypeStruct((n,), I32),
+            "coords": jax.ShapeDtypeStruct((n, 3), F32),
+            "graph_id": jax.ShapeDtypeStruct((n,), I32),
+            "target": jax.ShapeDtypeStruct((n_graphs,), F32),
+        }
+    elif arch == "graphsage":
+        specs |= {
+            "x": jax.ShapeDtypeStruct((n, f), F32),
+            "labels": jax.ShapeDtypeStruct((n,), I32),
+        }
+    else:
+        raise ValueError(arch)
+    return specs
+
+
+def gnn_smoke_batch(arch: str, seed: int = 0, n: int = 64, e: int = 256, f: int = 8) -> dict:
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    batch: dict = {
+        "edge_src": jnp.asarray(src),
+        "edge_dst": jnp.asarray(dst),
+        "edge_mask": jnp.ones((e,), F32),
+        "node_mask": jnp.ones((n,), F32),
+    }
+    if arch == "egnn":
+        batch |= {
+            "x": jnp.asarray(rng.standard_normal((n, f)), F32),
+            "coords": jnp.asarray(rng.standard_normal((n, 3)), F32),
+            "target": jnp.zeros((n, 1), F32),
+        }
+    elif arch == "meshgraphnet":
+        batch |= {
+            "x": jnp.asarray(rng.standard_normal((n, f)), F32),
+            "edge_attr": jnp.asarray(rng.standard_normal((e, 4)), F32),
+            "target": jnp.zeros((n, 3), F32),
+        }
+    elif arch == "schnet":
+        batch |= {
+            "species": jnp.asarray(rng.integers(0, 8, n), I32),
+            "coords": jnp.asarray(rng.standard_normal((n, 3)) * 2, F32),
+            "graph_id": jnp.asarray(np.repeat(np.arange(4), n // 4), I32),
+            "target": jnp.zeros((4,), F32),
+        }
+        batch["n_graphs"] = 4
+    elif arch == "graphsage":
+        batch |= {
+            "x": jnp.asarray(rng.standard_normal((n, f)), F32),
+            "labels": jnp.asarray(rng.integers(0, 5, n), I32),
+        }
+    return batch

@@ -1,0 +1,41 @@
+"""llama4-scout-17b-a16e [moe] — 48L d=5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, MoE 16 experts top-1 + 1 shared expert, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+
+Early-fusion multimodality: the vision frontend is a STUB per assignment —
+input_specs feed token ids (precomputed patch embeddings would enter the
+same embedding table slots).
+"""
+from repro.configs.base import ArchSpec
+from repro.configs.lm_common import lm_shapes, lm_input_specs, lm_smoke_batch
+from repro.models.transformer import TransformerConfig
+
+ARCH_ID = "llama4-scout-17b-a16e"
+
+
+def full_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID, n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+        d_ff=8192, vocab=202048, n_experts=16, top_k=1, n_shared_experts=1,
+        dtype="bfloat16", q_chunk=512, kv_chunk=1024,
+    )
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=96, vocab=512, n_experts=4, top_k=1,
+        n_shared_experts=1, dtype="float32", q_chunk=16, kv_chunk=16,
+    )
+
+
+SPEC = ArchSpec(
+    arch_id=ARCH_ID,
+    family="lm",
+    full_config=full_config,
+    smoke_config=smoke_config,
+    shapes=lm_shapes(full_attention_only=True),
+    input_specs=lambda cfg, shape: lm_input_specs(cfg, shape),
+    smoke_batch=lambda cfg, seed=0: lm_smoke_batch(cfg, seed),
+    notes="MoE 16e top-1 + shared; early-fusion frontend stubbed.",
+)

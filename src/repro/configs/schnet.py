@@ -1,0 +1,30 @@
+"""schnet [gnn] — 3 interactions, d_hidden=64, 300 RBFs, cutoff 10
+[arXiv:1706.08566]."""
+from repro.configs.base import ArchSpec
+from repro.configs.gnn_common import gnn_shapes, gnn_input_specs, gnn_smoke_batch
+from repro.models.gnn import SchNetConfig
+
+ARCH_ID = "schnet"
+
+
+def full_config() -> SchNetConfig:
+    return SchNetConfig(name=ARCH_ID, n_interactions=3, d_hidden=64, n_rbf=300, cutoff=10.0)
+
+
+def smoke_config() -> SchNetConfig:
+    return SchNetConfig(
+        name=ARCH_ID + "-smoke", n_interactions=2, d_hidden=16, n_rbf=16, cutoff=5.0,
+        n_species=8,
+    )
+
+
+SPEC = ArchSpec(
+    arch_id=ARCH_ID,
+    family="gnn",
+    full_config=full_config,
+    smoke_config=smoke_config,
+    shapes=gnn_shapes(),
+    input_specs=lambda cfg, shape: gnn_input_specs("schnet", shape),
+    smoke_batch=lambda cfg, seed=0: gnn_smoke_batch("schnet", seed),
+    notes="Triplet-gather regime is approximated by RBF cfconv (SchNet's own kernel).",
+)

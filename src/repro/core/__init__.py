@@ -1,0 +1,42 @@
+"""BuffCut core: the paper's contribution as a composable library."""
+from repro.core.metrics import (
+    edge_cut,
+    cut_ratio,
+    balance,
+    is_balanced,
+    block_loads,
+    l_max,
+    internal_edge_ratio,
+)
+from repro.core.scores import ScoreSpec, get_score, ANR, CBS, HAA, NSS, CMS
+from repro.core.buffer import BucketPQ, VectorBuffer
+from repro.core.fennel import (
+    FennelParams,
+    fennel_partition,
+    ldg_partition,
+    fennel_choose,
+)
+from repro.core.batch_model import BatchModel, build_batch_model
+from repro.core.multilevel import MultilevelConfig, multilevel_partition
+from repro.core.buffcut import BuffCutConfig, StreamStats, buffcut_partition
+from repro.core.heistream import heistream_partition
+from repro.core.cuttana import CuttanaConfig, cuttana_partition
+from repro.core.restream import restream, restream_pass
+from repro.core.vector_stream import buffcut_partition_vectorized, score_kernel
+from repro.core.pipeline import buffcut_partition_pipelined
+
+__all__ = [
+    "edge_cut", "cut_ratio", "balance", "is_balanced", "block_loads", "l_max",
+    "internal_edge_ratio",
+    "ScoreSpec", "get_score", "ANR", "CBS", "HAA", "NSS", "CMS",
+    "BucketPQ", "VectorBuffer",
+    "FennelParams", "fennel_partition", "ldg_partition", "fennel_choose",
+    "BatchModel", "build_batch_model",
+    "MultilevelConfig", "multilevel_partition",
+    "BuffCutConfig", "StreamStats", "buffcut_partition",
+    "heistream_partition",
+    "CuttanaConfig", "cuttana_partition",
+    "restream", "restream_pass",
+    "buffcut_partition_vectorized", "score_kernel",
+    "buffcut_partition_pipelined",
+]

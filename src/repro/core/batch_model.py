@@ -1,0 +1,77 @@
+"""Batch model graph construction (paper §3.4).
+
+The batch B plus k auxiliary block nodes a_1..a_k form the model graph:
+  - internal edges: both endpoints in B (weights preserved),
+  - auxiliary edges: (v, a_i) with weight = total edge weight from v to
+    already-assigned neighbors in block i,
+  - edges to unassigned / still-buffered nodes are dropped (streaming),
+  - aux node a_i is *pinned* to block i; its node weight is 0 — global block
+    loads are tracked separately (DESIGN.md §7.3) so they are not double
+    counted by the coarsening size constraints.
+
+Unlike HeiStream, BuffCut's batches are non-contiguous in the stream, so an
+explicit local<->global map is required (paper §3.4, last paragraph).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+
+
+@dataclasses.dataclass
+class BatchModel:
+    graph: CSRGraph            # b + k local nodes
+    batch_nodes: np.ndarray    # (b,) global ids; local id i <-> batch_nodes[i]
+    k: int
+    pinned_block: np.ndarray   # (b+k,) -1 for free, block id for aux nodes
+
+    @property
+    def b(self) -> int:
+        return int(self.batch_nodes.shape[0])
+
+
+def build_batch_model(
+    g: CSRGraph, batch: np.ndarray, block: np.ndarray, k: int
+) -> BatchModel:
+    batch = np.asarray(batch, dtype=np.int64)
+    b = batch.shape[0]
+    local_of = np.full(g.n, -1, dtype=np.int64)
+    local_of[batch] = np.arange(b)
+
+    # gather all incident edges of batch nodes
+    degs = (g.indptr[batch + 1] - g.indptr[batch]).astype(np.int64)
+    src_l = np.repeat(np.arange(b, dtype=np.int64), degs)
+    gather = np.concatenate(
+        [np.arange(g.indptr[v], g.indptr[v + 1]) for v in batch]
+    ) if b else np.empty(0, dtype=np.int64)
+    dst_g = g.indices[gather].astype(np.int64) if b else np.empty(0, dtype=np.int64)
+    w = g.edge_w[gather] if b else np.empty(0, dtype=np.float32)
+
+    dst_l = local_of[dst_g]
+    internal = dst_l >= 0
+    int_src, int_dst, int_w = src_l[internal], dst_l[internal], w[internal]
+    keep = int_src < int_dst  # one canonical direction; from_edges symmetrizes
+    int_edges = np.stack([int_src[keep], int_dst[keep]], axis=1)
+    int_w = int_w[keep]
+
+    # aux edges: accumulate weight to each block
+    ext = ~internal
+    dst_blk = block[dst_g[ext]]
+    assigned = dst_blk >= 0
+    aux_w = np.zeros((b, k), dtype=np.float64)
+    np.add.at(aux_w, (src_l[ext][assigned], dst_blk[assigned]), w[ext][assigned])
+    ai, ab = np.nonzero(aux_w)
+    aux_edges = np.stack([ai, b + ab], axis=1)
+    aux_wts = aux_w[ai, ab].astype(np.float32)
+
+    edges = np.concatenate([int_edges, aux_edges], axis=0) if b else np.empty((0, 2), dtype=np.int64)
+    wts = np.concatenate([int_w, aux_wts], axis=0)
+    node_w = np.concatenate([g.node_w[batch], np.zeros(k, dtype=np.float32)])
+    model = CSRGraph.from_edges(b + k, edges, edge_weights=wts, node_weights=node_w)
+
+    pinned = np.full(b + k, -1, dtype=np.int64)
+    pinned[b:] = np.arange(k)
+    return BatchModel(graph=model, batch_nodes=batch, k=k, pinned_block=pinned)

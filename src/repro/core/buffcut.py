@@ -1,0 +1,197 @@
+"""BuffCut sequential driver — paper Algorithm 1.
+
+Streamed nodes either bypass the buffer (hubs, d > D_max → immediate Fennel)
+or enter the bounded priority buffer Q. When |Q| = Q_max the top-priority
+node is evicted into the active batch; admissions immediately bump the
+scores of buffered neighbors (IncreaseKey), which is what recovers locality
+from adversarial orders. Full batches are partitioned jointly on the batch
+model graph by the multilevel scheme; assignments commit and the process
+repeats until the stream ends and the buffer is flushed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+from repro.graphs.stream import NodeStream
+from repro.core.buffer import BucketPQ
+from repro.core.scores import ScoreSpec, get_score
+from repro.core.fennel import FennelParams, fennel_choose
+from repro.core.batch_model import build_batch_model
+from repro.core.multilevel import MultilevelConfig, multilevel_partition
+from repro.core.metrics import internal_edge_ratio
+
+
+@dataclasses.dataclass
+class BuffCutConfig:
+    k: int
+    eps: float = 0.03
+    buffer_size: int = 4096          # Q_max
+    batch_size: int = 1024           # delta
+    d_max: float = 10000.0           # hub threshold (paper default)
+    score: str | ScoreSpec = "haa"
+    disc_factor: int = 1000          # paper default
+    gamma: float = 1.5
+    ml: MultilevelConfig = dataclasses.field(default_factory=MultilevelConfig)
+    collect_stats: bool = False
+
+    def score_spec(self) -> ScoreSpec:
+        if isinstance(self.score, ScoreSpec):
+            return dataclasses.replace(self.score, d_max=float(self.d_max))
+        return get_score(self.score, d_max=float(self.d_max))
+
+
+@dataclasses.dataclass
+class StreamStats:
+    runtime_s: float = 0.0
+    n_batches: int = 0
+    n_hubs: int = 0
+    ier_per_batch: list = dataclasses.field(default_factory=list)
+    peak_mem_items: int = 0           # buffer + batch + model working set
+    evictions: list = dataclasses.field(default_factory=list)
+
+    @property
+    def mean_ier(self) -> float:
+        return float(np.mean(self.ier_per_batch)) if self.ier_per_batch else 0.0
+
+
+class _State:
+    """Per-stream incremental counters feeding the buffer scores."""
+
+    def __init__(self, g: CSRGraph, spec: ScoreSpec, k: int):
+        n = g.n
+        self.g = g
+        self.spec = spec
+        self.assigned_w = np.zeros(n, dtype=np.float64)   # assigned-or-batched nbr weight
+        self.deg_w = np.zeros(n, dtype=np.float64)
+        for v in range(n):
+            self.deg_w[v] = g.neighbor_weights(v).sum()
+        self.buffered_w = np.zeros(n, dtype=np.float64) if spec.needs_buffered_count else None
+        self.blk_cnt: dict[int, np.ndarray] | None = {} if spec.needs_block_counts else None
+        self.cmax = np.zeros(n, dtype=np.float64) if spec.needs_block_counts else None
+        self.k = k
+
+    def score(self, v: int) -> float:
+        q = self.buffered_w[v] if self.buffered_w is not None else 0.0
+        cm = self.cmax[v] if self.cmax is not None else 0.0
+        return float(self.spec(self.assigned_w[v], self.deg_w[v], q, cm))
+
+
+def _bump_assigned(st: _State, pq: BucketPQ, u: int, was_buffered: bool) -> None:
+    """Node u became assigned-or-batched: rescore its buffered neighbors."""
+    g = st.g
+    for w_, ew in zip(g.neighbors(u), g.neighbor_weights(u)):
+        w_ = int(w_)
+        if w_ in pq:
+            st.assigned_w[w_] += ew
+            if was_buffered and st.buffered_w is not None:
+                st.buffered_w[w_] -= ew
+            pq.increase_key(w_, st.score(w_))
+
+
+def _bump_block_counts(st: _State, pq: BucketPQ, u: int, blk: int) -> None:
+    """CMS only: u got a *concrete* block; update buffered nbr majorities."""
+    if st.blk_cnt is None:
+        return
+    g = st.g
+    for w_, ew in zip(g.neighbors(u), g.neighbor_weights(u)):
+        w_ = int(w_)
+        if w_ in pq:
+            cnt = st.blk_cnt.setdefault(w_, np.zeros(st.k, dtype=np.float64))
+            cnt[blk] += ew
+            if cnt[blk] > st.cmax[w_]:
+                st.cmax[w_] = cnt[blk]
+                pq.increase_key(w_, st.score(w_))
+
+
+def _bump_buffered(st: _State, pq: BucketPQ, v: int) -> None:
+    """NSS only: v entered the buffer; count mutual buffered neighbors."""
+    if st.buffered_w is None:
+        return
+    g = st.g
+    total = 0.0
+    for w_, ew in zip(g.neighbors(v), g.neighbor_weights(v)):
+        w_ = int(w_)
+        if w_ in pq and w_ != v:
+            st.buffered_w[w_] += ew
+            pq.increase_key(w_, st.score(w_))
+            total += ew
+    st.buffered_w[v] = total
+
+
+def buffcut_partition(
+    g: CSRGraph, cfg: BuffCutConfig
+) -> tuple[np.ndarray, StreamStats]:
+    spec = cfg.score_spec()
+    p = FennelParams(
+        k=cfg.k,
+        n_total=float(g.node_w.sum()),
+        m_total=g.total_edge_weight(),
+        eps=cfg.eps,
+        gamma=cfg.gamma,
+    )
+    st = _State(g, spec, cfg.k)
+    pq = BucketPQ(spec.s_max, cfg.disc_factor)
+    block = np.full(g.n, -1, dtype=np.int64)
+    loads = np.zeros(cfg.k, dtype=np.float64)
+    batch: list[int] = []
+    stats = StreamStats()
+    t0 = time.perf_counter()
+
+    def commit_batch() -> None:
+        if not batch:
+            return
+        bnodes = np.asarray(batch, dtype=np.int64)
+        model = build_batch_model(g, bnodes, block, cfg.k)
+        labels = multilevel_partition(model.graph, model.pinned_block, p, loads, cfg.ml)
+        block[bnodes] = labels[: bnodes.shape[0]]
+        np.add.at(loads, labels[: bnodes.shape[0]], g.node_w[bnodes].astype(np.float64))
+        if cfg.collect_stats:
+            stats.ier_per_batch.append(internal_edge_ratio(g, bnodes))
+            stats.peak_mem_items = max(
+                stats.peak_mem_items, len(pq) + len(batch) + model.graph.indices.shape[0]
+            )
+        stats.n_batches += 1
+        # CMS: buffered neighbors now see concrete blocks
+        if st.blk_cnt is not None:
+            for u, b_ in zip(bnodes, labels[: bnodes.shape[0]]):
+                _bump_block_counts(st, pq, int(u), int(b_))
+        batch.clear()
+
+    def evict_one() -> None:
+        u = pq.extract_max()
+        if st.blk_cnt is not None:
+            st.blk_cnt.pop(u, None)
+        batch.append(u)
+        if cfg.collect_stats:
+            stats.evictions.append(u)
+        _bump_assigned(st, pq, u, was_buffered=True)
+        if len(batch) == cfg.batch_size:
+            commit_batch()
+
+    stream = NodeStream(g)
+    for v, nbrs, nbr_w, node_w in stream:
+        if nbrs.size > cfg.d_max:  # hub bypass: assign immediately via Fennel
+            i = fennel_choose(nbrs, nbr_w, node_w, block, loads, p)
+            block[v] = i
+            loads[i] += node_w
+            stats.n_hubs += 1
+            _bump_assigned(st, pq, v, was_buffered=False)
+            _bump_block_counts(st, pq, v, i)
+        else:
+            _bump_buffered(st, pq, v)
+            pq.insert(v, st.score(v))
+            if cfg.collect_stats:
+                stats.peak_mem_items = max(stats.peak_mem_items, len(pq) + len(batch))
+        while len(pq) >= cfg.buffer_size and len(batch) < cfg.batch_size:
+            evict_one()
+
+    # flush (paper Alg. 1 tail)
+    while len(pq) > 0:
+        evict_one()
+    commit_batch()
+    stats.runtime_s = time.perf_counter() - t0
+    return block, stats

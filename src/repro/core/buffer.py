@@ -1,0 +1,142 @@
+"""Bounded priority buffer.
+
+Two implementations with one contract:
+
+1. `BucketPQ` — the paper's Algorithm 2, bit-faithful: an array of B dynamic
+   arrays keyed by the discretized score idx(v) = min(round(s*discFactor),
+   B-1), a location map L[v] = (bucket, pos), and a top pointer rho.
+   Insert / IncreaseKey are O(1) amortized (pop-swap-append); ExtractMax is
+   O(1) amortized, O(B) worst case. This is the sequential CPU hot path and
+   the oracle for tests.
+
+2. `VectorBuffer` — the TPU adaptation (DESIGN.md §3): scores live in a dense
+   vector; eviction takes the top-`wave` scores with `jax.lax.top_k` (or
+   numpy argpartition on host); all rescoring is a closed-form recompute from
+   counter vectors. With wave=1 it reproduces BucketPQ's eviction order
+   exactly (same discretization + same LIFO tie-break), which tests assert.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class BucketPQ:
+    """Paper Algorithm 2. Keys are discretized scores; ties break LIFO."""
+
+    def __init__(self, s_max: float, disc_factor: int = 1000):
+        self.disc = int(disc_factor)
+        self.n_buckets = int(round(s_max * disc_factor)) + 1
+        self.buckets: list[list[int]] = [[] for _ in range(self.n_buckets)]
+        self.loc: dict[int, tuple[int, int]] = {}
+        self.rho = 0
+        self._size = 0
+
+    def idx(self, s: float) -> int:
+        return min(int(round(s * self.disc)), self.n_buckets - 1)
+
+    def __len__(self) -> int:
+        return self._size
+
+    def __contains__(self, v: int) -> bool:
+        return v in self.loc
+
+    def insert(self, v: int, s: float) -> None:
+        b = self.idx(s)
+        bucket = self.buckets[b]
+        bucket.append(v)
+        self.loc[v] = (b, len(bucket) - 1)
+        if b > self.rho:
+            self.rho = b
+        self._size += 1
+
+    def increase_key(self, v: int, s: float) -> None:
+        b_old, p = self.loc[v]
+        b_new = self.idx(s)
+        if b_new == b_old:
+            return  # same bucket: nothing to move (scores only increase)
+        bucket = self.buckets[b_old]
+        x = bucket.pop()  # pop O(1)
+        if p < len(bucket):  # v was not the tail: swap the tail into its slot
+            bucket[p] = x
+            self.loc[x] = (b_old, p)
+        del self.loc[v]
+        self._size -= 1
+        self.insert(v, s)
+
+    def extract_max(self) -> int:
+        while self.rho > 0 and not self.buckets[self.rho]:
+            self.rho -= 1  # rare worst-case O(B)
+        bucket = self.buckets[self.rho]
+        v = bucket.pop()
+        del self.loc[v]
+        self._size -= 1
+        return v
+
+    def peek_bucket(self, v: int) -> int:
+        return self.loc[v][0]
+
+
+class VectorBuffer:
+    """Dense-score buffer: the TPU-native eviction engine.
+
+    State is three dense vectors over global node ids: in_buffer mask,
+    discretized score, and an insertion stamp used to reproduce BucketPQ's
+    LIFO tie-break (higher stamp wins within a bucket). `evict(wave)` returns
+    the next `wave` nodes in exactly the order a sequence of ExtractMax calls
+    would produce them *if scores did not change in between* — which is the
+    wavefront approximation (exact for wave=1).
+    """
+
+    def __init__(self, n: int, s_max: float, disc_factor: int = 1000):
+        self.disc = int(disc_factor)
+        self.n_buckets = int(round(s_max * disc_factor)) + 1
+        self.in_buf = np.zeros(n, dtype=bool)
+        self.key = np.zeros(n, dtype=np.int64)  # discretized score
+        self.stamp = np.zeros(n, dtype=np.int64)
+        self._next_stamp = 1
+        self._size = 0
+
+    def idx(self, s: np.ndarray | float) -> np.ndarray | int:
+        k = np.minimum(np.round(np.asarray(s) * self.disc).astype(np.int64), self.n_buckets - 1)
+        return k
+
+    def __len__(self) -> int:
+        return self._size
+
+    def insert_many(self, vs: np.ndarray, scores: np.ndarray) -> None:
+        vs = np.asarray(vs, dtype=np.int64)
+        self.in_buf[vs] = True
+        self.key[vs] = self.idx(scores)
+        # preserve arrival order inside the insert batch
+        self.stamp[vs] = np.arange(self._next_stamp, self._next_stamp + vs.size)
+        self._next_stamp += vs.size
+        self._size += int(vs.size)
+
+    def update_scores(self, vs: np.ndarray, scores: np.ndarray) -> None:
+        """IncreaseKey semantics; stamps refresh only on bucket change (the
+        bucket PQ re-appends on a move, making moved nodes newest)."""
+        vs = np.asarray(vs, dtype=np.int64)
+        new_key = self.idx(scores)
+        moved = new_key != self.key[vs]
+        self.key[vs] = np.maximum(self.key[vs], new_key)  # monotone guard
+        mv = vs[moved]
+        self.stamp[mv] = np.arange(self._next_stamp, self._next_stamp + mv.size)
+        self._next_stamp += mv.size
+
+    def evict(self, wave: int = 1) -> np.ndarray:
+        """Pop the `wave` max-priority nodes (bucket desc, stamp desc)."""
+        wave = min(wave, self._size)
+        if wave == 0:
+            return np.empty(0, dtype=np.int64)
+        ids = np.nonzero(self.in_buf)[0]
+        # composite key: bucket * big + stamp  (stamp < _next_stamp)
+        comp = self.key[ids] * np.int64(self._next_stamp + 1) + self.stamp[ids]
+        if wave < ids.size:
+            part = np.argpartition(comp, ids.size - wave)[ids.size - wave :]
+        else:
+            part = np.arange(ids.size)
+        order = part[np.argsort(comp[part], kind="stable")[::-1]]
+        out = ids[order]
+        self.in_buf[out] = False
+        self._size -= int(out.size)
+        return out.astype(np.int64)

@@ -1,0 +1,49 @@
+"""HeiStream baseline [Faraj & Schulz, JEA'22]: buffered streaming with
+*contiguous* batches (no priority buffer). Loads δ nodes in stream order,
+partitions the batch model graph with the same multilevel scheme, commits,
+repeats. This is the ablation isolating BuffCut's prioritized buffering: the
+only difference from buffcut_partition is batch composition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+from repro.core.buffcut import BuffCutConfig, StreamStats
+from repro.core.fennel import FennelParams
+from repro.core.batch_model import build_batch_model
+from repro.core.multilevel import multilevel_partition
+from repro.core.metrics import internal_edge_ratio
+
+
+def heistream_partition(
+    g: CSRGraph, cfg: BuffCutConfig
+) -> tuple[np.ndarray, StreamStats]:
+    p = FennelParams(
+        k=cfg.k,
+        n_total=float(g.node_w.sum()),
+        m_total=g.total_edge_weight(),
+        eps=cfg.eps,
+        gamma=cfg.gamma,
+    )
+    block = np.full(g.n, -1, dtype=np.int64)
+    loads = np.zeros(cfg.k, dtype=np.float64)
+    stats = StreamStats()
+    t0 = time.perf_counter()
+    for start in range(0, g.n, cfg.batch_size):
+        bnodes = np.arange(start, min(start + cfg.batch_size, g.n), dtype=np.int64)
+        model = build_batch_model(g, bnodes, block, cfg.k)
+        labels = multilevel_partition(model.graph, model.pinned_block, p, loads, cfg.ml)
+        block[bnodes] = labels[: bnodes.shape[0]]
+        np.add.at(loads, labels[: bnodes.shape[0]], g.node_w[bnodes].astype(np.float64))
+        stats.n_batches += 1
+        if cfg.collect_stats:
+            stats.ier_per_batch.append(internal_edge_ratio(g, bnodes))
+            stats.peak_mem_items = max(
+                stats.peak_mem_items, len(bnodes) + model.graph.indices.shape[0]
+            )
+    stats.runtime_s = time.perf_counter() - t0
+    return block, stats

@@ -1,0 +1,58 @@
+"""Partition quality metrics: edge cut, balance, IER (paper Eq. 7)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+
+
+def edge_cut(g: CSRGraph, block: np.ndarray) -> float:
+    """Total weight of edges crossing blocks. Unassigned (-1) counts as cut
+    only against assigned nodes (all-assigned in normal use)."""
+    src = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr))
+    dst = g.indices.astype(np.int64)
+    cut = (block[src] != block[dst]) & (src < dst)
+    return float(g.edge_w[cut].sum())
+
+
+def cut_ratio(g: CSRGraph, block: np.ndarray) -> float:
+    tw = g.total_edge_weight()
+    return edge_cut(g, block) / tw if tw > 0 else 0.0
+
+
+def block_loads(g: CSRGraph, block: np.ndarray, k: int) -> np.ndarray:
+    loads = np.zeros(k, dtype=np.float64)
+    assigned = block >= 0
+    np.add.at(loads, block[assigned], g.node_w[assigned])
+    return loads
+
+
+def l_max(total_weight: float, k: int, eps: float) -> float:
+    """Balance cap L_max = ceil((1+eps) * c(V)/k) (paper §2.1)."""
+    return float(np.ceil((1.0 + eps) * total_weight / k))
+
+
+def balance(g: CSRGraph, block: np.ndarray, k: int) -> float:
+    """max_i c(V_i) / (c(V)/k); 1.0 = perfectly balanced."""
+    loads = block_loads(g, block, k)
+    avg = g.node_w.sum() / k
+    return float(loads.max() / avg) if avg > 0 else 1.0
+
+
+def is_balanced(g: CSRGraph, block: np.ndarray, k: int, eps: float) -> bool:
+    loads = block_loads(g, block, k)
+    return bool(loads.max() <= l_max(g.node_w.sum(), k, eps) + 1e-6)
+
+
+def internal_edge_ratio(g: CSRGraph, batch: np.ndarray) -> float:
+    """IER(B) = 2*w(E(B)) / sum_{v in B} d_w(v) (paper Eq. 7)."""
+    in_b = np.zeros(g.n, dtype=bool)
+    in_b[batch] = True
+    src = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr))
+    dst = g.indices.astype(np.int64)
+    internal = in_b[src] & in_b[dst]
+    num = float(g.edge_w[internal].sum())  # counts both directions = 2*w(E(B))
+    den = 0.0
+    for v in batch:
+        den += float(g.neighbor_weights(int(v)).sum())
+    return num / den if den > 0 else 0.0

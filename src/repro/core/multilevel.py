@@ -1,0 +1,288 @@
+"""Multilevel partitioning of the batch model graph (paper §3.4).
+
+Scheme (HeiStream's, vectorized for data-parallel hardware — DESIGN.md §3):
+  coarsen:  size-constrained label-propagation clustering + contraction,
+  initial:  weighted Fennel on the coarsest graph (aux nodes pre-pinned),
+  refine:   balanced label-propagation refinement during uncoarsening.
+
+Sequential heavy-edge matching / FM refinement are pointer-chasing; the
+synchronous LP forms used here are their standard data-parallel equivalents
+(used by HeiStream itself for coarsening) and every inner op is a dense
+histogram / segment-sum — exactly what kernels/ell_histogram accelerates.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+from repro.core.fennel import FennelParams, fennel_penalty
+
+
+@dataclasses.dataclass
+class MultilevelConfig:
+    coarsen_target: int = 160      # free-node count target at coarsest level
+    max_levels: int = 10
+    lp_iters: int = 2              # clustering iterations per level
+    refine_rounds: int = 3         # LP refinement rounds per level
+    min_shrink: float = 0.95       # stop coarsening if shrink factor above
+    seed: int = 0
+
+
+# --------------------------------------------------------------------------
+# vectorized per-(node, neighbor-label) weight aggregation
+# --------------------------------------------------------------------------
+
+def _neighbor_label_weights(
+    g: CSRGraph, labels: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """For every (node, label-of-neighbor) pair return summed edge weight.
+
+    Returns (src_node, label, weight) arrays — the sparse histogram that is
+    the inner op of both clustering and refinement.
+    """
+    n = g.n
+    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(g.indptr))
+    lab = labels[g.indices.astype(np.int64)]
+    key = src * np.int64(n + 1) + lab
+    order = np.argsort(key, kind="stable")
+    key_s, w_s = key[order], g.edge_w[order]
+    boundary = np.ones(key_s.shape[0], dtype=bool)
+    boundary[1:] = key_s[1:] != key_s[:-1]
+    starts = np.nonzero(boundary)[0]
+    sums = np.add.reduceat(w_s.astype(np.float64), starts) if starts.size else np.empty(0)
+    uk = key_s[starts]
+    return uk // (n + 1), uk % (n + 1), sums
+
+
+def _accept_with_capacity(
+    movers: np.ndarray,
+    targets: np.ndarray,
+    gains: np.ndarray,
+    node_w: np.ndarray,
+    capacity: np.ndarray,
+) -> np.ndarray:
+    """Greedy per-target acceptance: within each target, take movers in
+    gain-descending order while their cumulative weight fits the remaining
+    capacity. Returns a boolean accept mask (aligned with `movers`)."""
+    if movers.size == 0:
+        return np.zeros(0, dtype=bool)
+    order = np.lexsort((-gains, targets))  # by target, then gain desc
+    m_s, t_s = movers[order], targets[order]
+    w_s = node_w[m_s].astype(np.float64)
+    # cumulative weight within each target group
+    grp_start = np.ones(t_s.shape[0], dtype=bool)
+    grp_start[1:] = t_s[1:] != t_s[:-1]
+    csum = np.cumsum(w_s)
+    base = np.zeros_like(csum)
+    starts = np.nonzero(grp_start)[0]
+    base[starts] = csum[starts] - w_s[starts]
+    np.maximum.accumulate(base, out=base)
+    within = csum - base  # cumsum restarted at each group
+    ok_s = within <= capacity[t_s] + 1e-9
+    accept = np.zeros(movers.shape[0], dtype=bool)
+    accept[order] = ok_s
+    return accept
+
+
+# --------------------------------------------------------------------------
+# coarsening
+# --------------------------------------------------------------------------
+
+def lp_cluster(
+    g: CSRGraph,
+    pinned: np.ndarray,
+    max_cluster_w: float,
+    iters: int,
+    rng: np.random.Generator,
+) -> np.ndarray:
+    """Size-constrained label propagation clustering. Pinned nodes stay
+    singletons and free nodes never join them."""
+    n = g.n
+    cluster = np.arange(n, dtype=np.int64)
+    is_pinned = pinned >= 0
+    cw = g.node_w.astype(np.float64).copy()
+    for _ in range(iters):
+        src, lab, wsum = _neighbor_label_weights(g, cluster)
+        # forbid pinned-owned clusters as targets and pinned nodes as movers
+        valid = ~is_pinned[lab] & ~is_pinned[src] & (lab != cluster[src])
+        src, lab, wsum = src[valid], lab[valid], wsum[valid]
+        if src.size == 0:
+            break
+        # per-src best target (max weight, tie -> lower label for determinism)
+        order = np.lexsort((lab, -wsum, src))
+        first = np.ones(order.shape[0], dtype=bool)
+        first[1:] = src[order][1:] != src[order][:-1]
+        sel = order[first]
+        movers, targets, gains = src[sel], lab[sel], wsum[sel]
+        # keep only proper moves that could fit
+        fit = cw[targets] + g.node_w[movers] <= max_cluster_w
+        movers, targets, gains = movers[fit], targets[fit], gains[fit]
+        capacity = np.maximum(max_cluster_w - cw, 0.0)
+        acc = _accept_with_capacity(movers, targets, gains, g.node_w, capacity)
+        movers, targets = movers[acc], targets[acc]
+        if movers.size == 0:
+            break
+        np.add.at(cw, cluster[movers], -g.node_w[movers].astype(np.float64))
+        cluster[movers] = targets
+        np.add.at(cw, targets, g.node_w[movers].astype(np.float64))
+    return cluster
+
+
+def contract(
+    g: CSRGraph, cluster: np.ndarray, pinned: np.ndarray
+) -> tuple[CSRGraph, np.ndarray, np.ndarray]:
+    """Contract clusters; returns (coarse graph, coarse pinned, node map)."""
+    uniq, node_map = np.unique(cluster, return_inverse=True)
+    nc = uniq.shape[0]
+    # coarse node weights
+    cw = np.zeros(nc, dtype=np.float64)
+    np.add.at(cw, node_map, g.node_w.astype(np.float64))
+    # coarse pinned labels (pinned nodes are singletons by construction)
+    cpin = np.full(nc, -1, dtype=np.int64)
+    pm = pinned >= 0
+    cpin[node_map[pm]] = pinned[pm]
+    # coarse edges with summed weights
+    src = node_map[np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr))]
+    dst = node_map[g.indices.astype(np.int64)]
+    keep = src < dst
+    s, d, w = src[keep], dst[keep], g.edge_w[keep].astype(np.float64)
+    key = s * np.int64(nc) + d
+    order = np.argsort(key, kind="stable")
+    key_s, w_s = key[order], w[order]
+    b = np.ones(key_s.shape[0], dtype=bool)
+    b[1:] = key_s[1:] != key_s[:-1]
+    starts = np.nonzero(b)[0]
+    if starts.size:
+        sums = np.add.reduceat(w_s, starts)
+        uk = key_s[starts]
+        edges = np.stack([uk // nc, uk % nc], axis=1)
+    else:
+        sums = np.empty(0)
+        edges = np.empty((0, 2), dtype=np.int64)
+    cg = CSRGraph.from_edges(nc, edges, edge_weights=sums.astype(np.float32),
+                             node_weights=cw.astype(np.float32))
+    return cg, cpin, node_map
+
+
+# --------------------------------------------------------------------------
+# initial partition + refinement
+# --------------------------------------------------------------------------
+
+def initial_fennel(
+    g: CSRGraph,
+    pinned: np.ndarray,
+    p: FennelParams,
+    loads: np.ndarray,
+) -> np.ndarray:
+    """Weighted Fennel on the coarsest graph, heaviest free nodes first."""
+    labels = pinned.copy()
+    free = np.nonzero(pinned < 0)[0]
+    order = free[np.lexsort((free, -g.node_w[free]))]
+    loads = loads.copy()
+    for v in order:
+        conn = np.zeros(p.k, dtype=np.float64)
+        nbrs = g.neighbors(int(v))
+        lb = labels[nbrs]
+        ok = lb >= 0
+        np.add.at(conn, lb[ok], g.neighbor_weights(int(v))[ok])
+        score = conn - fennel_penalty(loads, p)
+        feasible = loads + g.node_w[v] <= p.cap
+        score = np.where(feasible, score, -np.inf)
+        i = int(np.argmin(loads)) if not feasible.any() else int(np.argmax(score))
+        labels[v] = i
+        loads[i] += g.node_w[v]
+    return labels
+
+
+def lp_refine(
+    g: CSRGraph,
+    labels: np.ndarray,
+    pinned: np.ndarray,
+    p: FennelParams,
+    loads: np.ndarray,
+    rounds: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Balanced synchronous LP refinement: move to max-connectivity block if
+    the cut gain is positive and the balance cap holds."""
+    labels = labels.copy()
+    loads = loads.copy()
+    free = pinned < 0
+    for _ in range(rounds):
+        src, lab, wsum = _neighbor_label_weights(g, labels)
+        # current-block connectivity per node
+        cur_conn = np.zeros(g.n, dtype=np.float64)
+        is_cur = lab == labels[src]
+        cur_conn[src[is_cur]] = wsum[is_cur]
+        # candidate moves: free nodes to a different block with higher conn
+        cand = free[src] & ~is_cur
+        src_c, lab_c, w_c = src[cand], lab[cand], wsum[cand]
+        gain = w_c - cur_conn[src_c]
+        pos = gain > 1e-12
+        src_c, lab_c, gain = src_c[pos], lab_c[pos], gain[pos]
+        if src_c.size == 0:
+            break
+        # best target per node
+        order = np.lexsort((lab_c, -gain, src_c))
+        first = np.ones(order.shape[0], dtype=bool)
+        first[1:] = src_c[order][1:] != src_c[order][:-1]
+        sel = order[first]
+        movers, targets, gains = src_c[sel], lab_c[sel], gain[sel]
+        capacity = np.maximum(p.cap - loads, 0.0)
+        acc = _accept_with_capacity(movers, targets, gains, g.node_w, capacity)
+        movers, targets = movers[acc], targets[acc]
+        if movers.size == 0:
+            break
+        np.add.at(loads, labels[movers], -g.node_w[movers].astype(np.float64))
+        labels[movers] = targets
+        np.add.at(loads, targets, g.node_w[movers].astype(np.float64))
+    return labels, loads
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+def multilevel_partition(
+    g: CSRGraph,
+    pinned: np.ndarray,
+    p: FennelParams,
+    loads_base: np.ndarray,
+    cfg: MultilevelConfig | None = None,
+) -> np.ndarray:
+    """Partition the model graph; returns a label per local node. Aux nodes
+    keep their pinned labels; `loads_base` are the current global block
+    loads (aux node weights are zero, see batch_model.py)."""
+    cfg = cfg or MultilevelConfig()
+    rng = np.random.default_rng(cfg.seed)
+    n_free = int((pinned < 0).sum())
+    total_free_w = float(g.node_w[pinned < 0].sum())
+    max_cluster_w = max(total_free_w / max(2 * p.k, 16), float(g.node_w.max(initial=1.0)))
+
+    # ---- coarsen
+    levels: list[tuple[CSRGraph, np.ndarray, np.ndarray]] = []  # (graph, pinned, map)
+    cur_g, cur_pin = g, pinned
+    for _ in range(cfg.max_levels):
+        if int((cur_pin < 0).sum()) <= cfg.coarsen_target:
+            break
+        cluster = lp_cluster(cur_g, cur_pin, max_cluster_w, cfg.lp_iters, rng)
+        cg, cpin, node_map = contract(cur_g, cluster, cur_pin)
+        if cg.n >= cfg.min_shrink * cur_g.n:
+            break
+        levels.append((cur_g, cur_pin, node_map))
+        cur_g, cur_pin = cg, cpin
+
+    # ---- initial partition on the coarsest level
+    labels = initial_fennel(cur_g, cur_pin, p, loads_base)
+    loads = loads_base.copy()
+    fr = cur_pin < 0
+    np.add.at(loads, labels[fr], cur_g.node_w[fr].astype(np.float64))
+    labels, loads = lp_refine(cur_g, labels, cur_pin, p, loads, cfg.refine_rounds)
+
+    # ---- uncoarsen + refine
+    for fine_g, fine_pin, node_map in reversed(levels):
+        labels = labels[node_map]
+        labels[fine_pin >= 0] = fine_pin[fine_pin >= 0]
+        labels, loads = lp_refine(fine_g, labels, fine_pin, p, loads, cfg.refine_rounds)
+    return labels

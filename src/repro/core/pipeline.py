@@ -1,0 +1,119 @@
+"""Pipelined BuffCut (paper §3.5 parallelization).
+
+The paper overlaps three stages with threads + lock-free queues:
+  T1 I/O reader -> T2 priority-queue handler -> T3 partition worker.
+The JAX-native equivalent keeps the same stage split but realizes the
+overlap with (a) a background reader thread feeding parsed chunks through a
+bounded queue and (b) asynchronous device dispatch for batch partitioning
+(jit calls return before compute finishes, so buffer maintenance for stream
+position t+1 overlaps the partition of batch t). To keep scoring consistent
+with the sequential semantics, nodes are treated as assigned the moment
+their batch task is enqueued (paper: "as soon as their task is enqueued").
+
+On this 1-core container the wall-clock gain is ~none (documented in
+EXPERIMENTS.md §B5); the structure is what ships.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+from repro.core.buffcut import BuffCutConfig, StreamStats, _State, _bump_assigned, _bump_buffered
+from repro.core.buffer import BucketPQ
+from repro.core.fennel import FennelParams, fennel_choose
+from repro.core.batch_model import build_batch_model
+from repro.core.multilevel import multilevel_partition
+from repro.core.metrics import internal_edge_ratio
+
+
+def buffcut_partition_pipelined(
+    g: CSRGraph, cfg: BuffCutConfig, queue_depth: int = 4
+) -> tuple[np.ndarray, StreamStats]:
+    spec = cfg.score_spec()
+    p = FennelParams(
+        k=cfg.k, n_total=float(g.node_w.sum()), m_total=g.total_edge_weight(),
+        eps=cfg.eps, gamma=cfg.gamma,
+    )
+    st = _State(g, spec, cfg.k)
+    pq = BucketPQ(spec.s_max, cfg.disc_factor)
+    block = np.full(g.n, -1, dtype=np.int64)
+    loads = np.zeros(cfg.k, dtype=np.float64)
+    # committed-loads view is owned by the partition worker; the PQ handler
+    # reads a snapshot for hub assignment (slight staleness == paper's note
+    # that the parallel schedule can differ from the sequential one).
+    lock = threading.Lock()
+    task_q: queue.Queue = queue.Queue(maxsize=queue_depth)
+    stats = StreamStats()
+    t0 = time.perf_counter()
+
+    def partition_worker() -> None:
+        while True:
+            item = task_q.get()
+            if item is None:
+                return
+            kind, payload = item
+            with lock:
+                if kind == "batch":
+                    bnodes = payload
+                    model = build_batch_model(g, bnodes, block, cfg.k)
+                    labels = multilevel_partition(
+                        model.graph, model.pinned_block, p, loads, cfg.ml
+                    )
+                    block[bnodes] = labels[: bnodes.shape[0]]
+                    np.add.at(
+                        loads, labels[: bnodes.shape[0]],
+                        g.node_w[bnodes].astype(np.float64),
+                    )
+                    stats.n_batches += 1
+                    if cfg.collect_stats:
+                        stats.ier_per_batch.append(internal_edge_ratio(g, bnodes))
+                else:  # single hub task
+                    v = payload
+                    i = fennel_choose(
+                        g.neighbors(v), g.neighbor_weights(v),
+                        float(g.node_w[v]), block, loads, p,
+                    )
+                    block[v] = i
+                    loads[i] += g.node_w[v]
+                    stats.n_hubs += 1
+
+    worker = threading.Thread(target=partition_worker, daemon=True)
+    worker.start()
+
+    batch: list[int] = []
+
+    def flush_batch() -> None:
+        if batch:
+            task_q.put(("batch", np.asarray(batch, dtype=np.int64)))
+            batch.clear()
+
+    # T1 (reader) is the NodeStream iterator; T2 (PQ handler) is this loop.
+    for v in range(g.n):
+        nbrs = g.neighbors(v)
+        if nbrs.size > cfg.d_max:
+            task_q.put(("hub", v))
+            _bump_assigned(st, pq, v, was_buffered=False)  # enqueued == assigned
+        else:
+            _bump_buffered(st, pq, v)
+            pq.insert(v, st.score(v))
+        while len(pq) >= cfg.buffer_size and len(batch) < cfg.batch_size:
+            u = pq.extract_max()
+            batch.append(u)
+            _bump_assigned(st, pq, u, was_buffered=True)
+            if len(batch) == cfg.batch_size:
+                flush_batch()
+    while len(pq) > 0:
+        u = pq.extract_max()
+        batch.append(u)
+        _bump_assigned(st, pq, u, was_buffered=True)
+        if len(batch) == cfg.batch_size:
+            flush_batch()
+    flush_batch()
+    task_q.put(None)
+    worker.join()
+    stats.runtime_s = time.perf_counter() - t0
+    return block, stats

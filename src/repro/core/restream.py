@@ -1,0 +1,51 @@
+"""Restreaming refinement (paper §3.5).
+
+Pass 1 is buffcut_partition (or any partitioner). Later passes replay the
+stream *without* buffering or prioritization: contiguous δ-batches are
+re-partitioned with batch-wise multilevel refinement against the fixed
+global assignment — batch nodes are detached (their load released, their
+aux edges computed from neighbors' current blocks) and reassigned jointly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+from repro.core.buffcut import BuffCutConfig
+from repro.core.fennel import FennelParams
+from repro.core.batch_model import build_batch_model
+from repro.core.multilevel import multilevel_partition
+
+
+def restream_pass(
+    g: CSRGraph, block: np.ndarray, cfg: BuffCutConfig
+) -> np.ndarray:
+    p = FennelParams(
+        k=cfg.k, n_total=float(g.node_w.sum()), m_total=g.total_edge_weight(),
+        eps=cfg.eps, gamma=cfg.gamma,
+    )
+    block = block.copy()
+    loads = np.zeros(cfg.k, dtype=np.float64)
+    np.add.at(loads, block, g.node_w.astype(np.float64))
+    for start in range(0, g.n, cfg.batch_size):
+        bnodes = np.arange(start, min(start + cfg.batch_size, g.n), dtype=np.int64)
+        # detach the batch: release loads, hide current labels from the model
+        np.add.at(loads, block[bnodes], -g.node_w[bnodes].astype(np.float64))
+        saved = block[bnodes].copy()
+        block[bnodes] = -1
+        model = build_batch_model(g, bnodes, block, cfg.k)
+        labels = multilevel_partition(model.graph, model.pinned_block, p, loads, cfg.ml)
+        new = labels[: bnodes.shape[0]]
+        block[bnodes] = new
+        np.add.at(loads, new, g.node_w[bnodes].astype(np.float64))
+        del saved
+    return block
+
+
+def restream(
+    g: CSRGraph, block: np.ndarray, cfg: BuffCutConfig, passes: int
+) -> np.ndarray:
+    """Apply `passes` additional restreaming passes (paper Table 2 rows)."""
+    for _ in range(passes):
+        block = restream_pass(g, block, cfg)
+    return block

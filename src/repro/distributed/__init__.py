@@ -1,0 +1,32 @@
+"""Distributed runtime: sharding rules, compression, overlap, GNN placement."""
+from repro.distributed.sharding import (
+    ShardingRules,
+    lm_sharding_rules,
+    gnn_sharding_rules,
+    dlrm_sharding_rules,
+    param_shardings,
+    batch_shardings,
+)
+from repro.distributed.compression import (
+    topk_compress,
+    topk_decompress,
+    error_feedback_update,
+    quantize_int8,
+    dequantize_int8,
+)
+from repro.distributed.overlap import collective_matmul_allgather
+
+__all__ = [
+    "ShardingRules",
+    "lm_sharding_rules",
+    "gnn_sharding_rules",
+    "dlrm_sharding_rules",
+    "param_shardings",
+    "batch_shardings",
+    "topk_compress",
+    "topk_decompress",
+    "error_feedback_update",
+    "quantize_int8",
+    "dequantize_int8",
+    "collective_matmul_allgather",
+]

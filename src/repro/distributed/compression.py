@@ -1,0 +1,83 @@
+"""Gradient compression for cross-pod links (DESIGN.md §6).
+
+Two schemes, composable with the train loop's gradient hook:
+
+1. Top-k sparsification with error feedback [Lin et al., Deep Gradient
+   Compression]: keep the k largest-magnitude entries per leaf, accumulate
+   the residual locally and add it back next step (unbiased in the limit).
+   Cross-pod all-reduce then moves k (value, index) pairs instead of the
+   full tensor — the pod axis rides on DCI, which is the scarce link.
+
+2. Int8 stochastic-free linear quantization with per-leaf scale: 4x volume
+   reduction with one max-reduce extra; used for the pod-axis gradient
+   all-reduce where 8-bit error is below optimizer noise floor.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_compress(g: jnp.ndarray, ratio: float):
+    """Return (values, flat_indices). k = max(1, ratio * size)."""
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * ratio))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    return vals, idx.astype(jnp.int32)
+
+
+def topk_decompress(vals: jnp.ndarray, idx: jnp.ndarray, shape) -> jnp.ndarray:
+    import math
+
+    flat = jnp.zeros(math.prod(shape), vals.dtype)
+    return flat.at[idx].set(vals).reshape(shape)
+
+
+def error_feedback_update(g: jnp.ndarray, residual: jnp.ndarray, ratio: float):
+    """One error-feedback step: compress (g + residual), return the
+    transmitted dense equivalent and the new residual."""
+    corrected = g + residual
+    vals, idx = topk_compress(corrected, ratio)
+    sent = topk_decompress(vals, idx, corrected.shape)
+    return sent, corrected - sent
+
+
+def compress_grads_with_feedback(grads, residuals, ratio: float):
+    """Pytree version; returns (sent_grads, new_residuals)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    sent, new_r = [], []
+    for g, r in zip(flat_g, flat_r):
+        s, nr = error_feedback_update(g, r, ratio)
+        sent.append(s)
+        new_r.append(nr)
+    return treedef.unflatten(sent), treedef.unflatten(new_r)
+
+
+def init_residuals(grads):
+    return jax.tree.map(jnp.zeros_like, grads)
+
+
+# ------------------------------------------------------------ int8 quant
+
+def quantize_int8(x: jnp.ndarray):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def quantized_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """All-reduce with int8 on the wire: quantize locally, all-gather the
+    int8 payload + scales, dequantize-sum locally. Used inside shard_map
+    over the 'pod' axis (4x DCI volume reduction vs f32 psum)."""
+    q, scale = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis_name)          # (P, ...)  int8
+    ss = jax.lax.all_gather(scale, axis_name)      # (P,)
+    return jnp.tensordot(ss, qs.astype(jnp.float32), axes=([0], [0]))

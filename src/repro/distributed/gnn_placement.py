@@ -1,0 +1,79 @@
+"""BuffCut-driven GNN placement — the paper's technique as the framework's
+placement service (DESIGN.md §4).
+
+Partition the training graph into k = n_data_shards blocks with the
+streaming partitioner; node rows of block i live on data-shard i. Every
+cut edge forces the destination shard to fetch the source feature (halo
+gather), so communication volume per GNN layer is exactly
+
+    bytes_moved = cut_edges * d_feat * bytes_per_el
+
+— the quantity BuffCut minimizes. `placement_report` quantifies the win
+over random/hash placement; bench_gnn_comm.py tabulates it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+from repro.core.buffcut import BuffCutConfig, buffcut_partition
+from repro.core.fennel import fennel_partition
+from repro.core.metrics import edge_cut, block_loads
+from repro.configs.buffcut_paper import scaled_config
+
+
+@dataclasses.dataclass
+class Placement:
+    block: np.ndarray            # node -> data shard
+    k: int
+    cut_edges: float
+    loads: np.ndarray
+
+    def halo_bytes_per_layer(self, d_feat: int, bytes_per_el: int = 4) -> float:
+        """Each cut edge gathers one remote feature row per layer (dedup'd
+        per (node, shard) pair would be lower; this is the upper bound the
+        edge cut controls)."""
+        return float(self.cut_edges) * d_feat * bytes_per_el
+
+
+def place_graph(
+    g: CSRGraph, n_shards: int, *, method: str = "buffcut", seed: int = 0
+) -> Placement:
+    if method == "buffcut":
+        cfg = scaled_config(g.n, k=n_shards)
+        block, _ = buffcut_partition(g, cfg)
+    elif method == "fennel":
+        block = fennel_partition(g, n_shards)
+    elif method == "random":
+        rng = np.random.default_rng(seed)
+        block = rng.integers(0, n_shards, g.n)
+    elif method == "hash":
+        block = np.arange(g.n) % n_shards
+    else:
+        raise ValueError(method)
+    return Placement(
+        block=block,
+        k=n_shards,
+        cut_edges=edge_cut(g, block),
+        loads=block_loads(g, block, n_shards),
+    )
+
+
+def placement_report(g: CSRGraph, n_shards: int, d_feat: int) -> dict:
+    out = {}
+    for method in ("buffcut", "fennel", "random", "hash"):
+        p = place_graph(g, n_shards, method=method)
+        out[method] = {
+            "cut_edges": p.cut_edges,
+            "halo_MB_per_layer": p.halo_bytes_per_layer(d_feat) / 1e6,
+            "load_imbalance": float(p.loads.max() / max(p.loads.mean(), 1e-9)),
+        }
+    return out
+
+
+def reorder_for_shards(g: CSRGraph, placement: Placement) -> np.ndarray:
+    """Permutation putting each shard's nodes contiguous (shard-major), so
+    row-sharded device arrays align with the placement."""
+    return np.argsort(placement.block, kind="stable").astype(np.int64)

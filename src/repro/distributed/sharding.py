@@ -1,0 +1,206 @@
+"""Per-family sharding rules (DESIGN.md §6).
+
+A rule maps a param/batch leaf name to a PartitionSpec over the logical axes
+  dp    — pure data parallel (("pod", "data") on the multi-pod mesh)
+  fsdp  — parameter/optimizer sharding axis ("data")
+  tp    — tensor parallel axis ("model")
+Rules are written against logical names and resolved per-mesh, so the same
+rule set serves the 16x16 single-pod and 2x16x16 multi-pod meshes (the pod
+axis joins the batch axis; params are replicated across pods and gradients
+all-reduce over pod+data — standard multi-slice DP).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Ordered (regex, PartitionSpec-template) pairs; first match wins.
+
+    Templates use axis aliases: 'dp' (batch), 'fsdp', 'tp'."""
+    params: tuple[tuple[str, tuple], ...]
+    batch: tuple[tuple[str, tuple], ...]
+
+    def resolve(self, mesh: Mesh, template: tuple) -> P:
+        has_pod = "pod" in mesh.axis_names
+
+        def ax_one(a):
+            if a == "dp":
+                return ("pod", "data") if has_pod else ("data",)
+            if a == "fsdp":
+                return ("data",)
+            if a == "tp":
+                return ("model",)
+            return (a,)
+
+        def ax(a):
+            if a is None:
+                return None
+            parts = a if isinstance(a, tuple) else (a,)
+            flat = tuple(x for p in parts for x in ax_one(p))
+            return flat if len(flat) > 1 else flat[0]
+
+        return P(*[ax(a) for a in template])
+
+    def spec_for(self, mesh: Mesh, kind: str, path: str) -> P:
+        rules = self.params if kind == "params" else self.batch
+        # optimizer states wrap param paths ("m/wq", "v/embed"): match both
+        # the full path and the path with the leading component stripped.
+        candidates = [path]
+        if "/" in path:
+            candidates.append(path.split("/", 1)[1])
+        for pattern, template in rules:
+            for cand in candidates:
+                if re.fullmatch(pattern, cand):
+                    return self.resolve(mesh, template)
+        return P()  # replicate by default
+
+
+# ---------------------------------------------------------------- LM rules
+
+def lm_sharding_rules(moe: bool = False, head_tp: bool = False,
+                      kv_tp: bool = False) -> ShardingRules:
+    """FSDP('data') × TP('model') for the transformer zoo.
+
+    Layer-stacked weights (L, in, out): contraction dim sharded over fsdp
+    (all-gathered per scan step — FSDP semantics), head/ff output dim over
+    tp (Megatron column-parallel), projection back row-parallel.
+    MoE experts shard over tp (expert parallelism).
+
+    head_tp/kv_tp (§Perf H1): Megatron head-parallel attention for archs
+    whose q / kv head counts divide the TP axis — shards the QKVO
+    projection compute 16-way instead of replicating it under the default
+    sequence-parallel attention layout (valid for any head count).
+    """
+    wq_spec = (None, "fsdp", "tp") if head_tp else (None, "fsdp", None)
+    wkv_spec = (None, "fsdp", "tp") if kv_tp else (None, "fsdp", None)
+    wo_spec = (None, "tp", "fsdp") if head_tp else (None, None, "fsdp")
+    params = [
+        (r"embed", (None, "tp")),                   # (V, d)
+        (r"unembed", ("fsdp", "tp")),               # (d, V): vocab-parallel logits
+        (r"final_norm", (None,)),
+        (r"(attn|ffn)_norm", (None, None)),
+        # Default: attention weights FSDP only — TP on heads is not
+        # generally expressible (llama4: 40 q / 8 kv heads vs a 16-way
+        # axis); the baseline shards attention COMPUTE over the sequence
+        # instead (set_attn_sharding in launch/steps.py).
+        (r"wq", wq_spec),                           # (L, d, heads*hd)
+        (r"wk|wv", wkv_spec),
+        (r"wo", wo_spec),                           # (L, heads*hd, d)
+        (r"ffn_w1|ffn_w3", (None, "fsdp", "tp")),   # (L, d, f)
+        (r"ffn_w2", (None, "tp", "fsdp")),          # (L, f, d)
+        (r"router", (None, "fsdp", None)),          # (L, d, E)
+        (r"moe_w1|moe_w3", (None, "tp", "fsdp", None)),  # (L, E, d, f): EP on E
+        (r"moe_w2", (None, "tp", None, "fsdp")),    # (L, E, f, d)
+        (r"shared_w1|shared_w3", (None, "fsdp", "tp")),
+        (r"shared_w2", (None, "tp", "fsdp")),
+    ]
+    batch = [
+        (r"tokens|labels|mask", ("dp", None)),
+        # (L, B, S, KV, hd): batch over dp AND sequence over the model axis —
+        # a 512k-token cache is 32 GB and must not be device-resident whole
+        (r"cache/(k|v)", (None, "dp", "tp", None, None)),
+        (r"cache/pos", ("dp",)),
+    ]
+    return ShardingRules(params=tuple(params), batch=tuple(batch))
+
+
+def lm_decode_sharding_rules() -> ShardingRules:
+    """Decode: weights fully sharded over BOTH mesh axes (a 104B dense model
+    cannot be 'data'-replicated on 16 GB chips), activations tiny (one
+    token) so the per-layer resharding GSPMD inserts is cheap. Attention
+    projections shard the d_model input dim over 'model' (row-parallel psum
+    — valid for every head count) and the output dim over 'data'."""
+    base = lm_sharding_rules()
+    params = [
+        (r"embed", ("fsdp", "tp")),                 # (V, d)
+        (r"unembed", ("fsdp", "tp")),
+        (r"final_norm", (None,)),
+        (r"(attn|ffn)_norm", (None, None)),
+        (r"wq|wk|wv", (None, "tp", "fsdp")),        # (L, d, H*hd)
+        (r"wo", (None, "fsdp", "tp")),              # (L, H*hd, d)
+        (r"ffn_w1|ffn_w3", (None, "fsdp", "tp")),   # (L, d, f)
+        (r"ffn_w2", (None, "tp", "fsdp")),
+        (r"router", (None, "fsdp", None)),
+        (r"moe_w1|moe_w3", (None, "tp", "fsdp", None)),
+        (r"moe_w2", (None, "tp", None, "fsdp")),
+        (r"shared_w1|shared_w3", (None, "fsdp", "tp")),
+        (r"shared_w2", (None, "tp", "fsdp")),
+    ]
+    return ShardingRules(params=tuple(params), batch=base.batch)
+
+
+# --------------------------------------------------------------- GNN rules
+
+def gnn_sharding_rules() -> ShardingRules:
+    """Node/edge arrays row-sharded over dp (BuffCut block placement decides
+    *which* rows — distributed/gnn_placement.py); small params replicated."""
+    params = [
+        (r".*", ()),  # GNN weights are tiny: replicate
+    ]
+    batch = [
+        (r"x|coords|target|species|labels|node_mask|graph_id", ("dp",) ),
+        (r"edge_src|edge_dst|edge_mask|edge_attr", ("dp",)),
+        (r"feats/.*", ("dp",)),
+    ]
+    # note: leaf specs are rank-adjusted at resolution time (pad with None)
+    return ShardingRules(params=tuple(params), batch=tuple(batch))
+
+
+# -------------------------------------------------------------- DLRM rules
+
+def dlrm_sharding_rules() -> ShardingRules:
+    params = [
+        (r"tables", (None, ("fsdp", "tp"), None)),  # rows over all devices
+        (r"(bot|top)/.*", ()),                      # dense MLPs replicated
+    ]
+    batch = [
+        (r"dense|labels", ("dp",)),
+        (r"sparse_idx|sparse_mask", ("dp",)),
+        (r"query_.*", ()),
+        (r"candidates", ("dp",)),                   # 1M candidates row-sharded
+    ]
+    return ShardingRules(params=tuple(params), batch=tuple(batch))
+
+
+# ---------------------------------------------------------------- resolve
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _fit_rank(spec: P, ndim: int) -> P:
+    """Pad/trim a PartitionSpec to the leaf's rank."""
+    parts = list(spec)
+    if len(parts) < ndim:
+        parts = parts + [None] * (ndim - len(parts))
+    elif len(parts) > ndim:
+        parts = parts[:ndim]
+    return P(*parts)
+
+
+def param_shardings(rules: ShardingRules, mesh: Mesh, params) -> dict:
+    def leaf_spec(path, leaf):
+        spec = rules.spec_for(mesh, "params", _path_str(path))
+        return NamedSharding(mesh, _fit_rank(spec, getattr(leaf, "ndim", 0)))
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def batch_shardings(rules: ShardingRules, mesh: Mesh, batch) -> dict:
+    def leaf_spec(path, leaf):
+        spec = rules.spec_for(mesh, "batch", _path_str(path))
+        return NamedSharding(mesh, _fit_rank(spec, getattr(leaf, "ndim", 0)))
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch)

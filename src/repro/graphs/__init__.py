@@ -1,0 +1,45 @@
+"""Graph substrate: CSR graphs, generators, orderings, IO, locality metrics."""
+from repro.graphs.csr import CSRGraph
+from repro.graphs.generators import (
+    rmat_graph,
+    rgg_graph,
+    rhg_like_graph,
+    grid_mesh_graph,
+    sbm_graph,
+    star_graph,
+    ring_graph,
+)
+from repro.graphs.orderings import (
+    source_order,
+    random_order,
+    konect_order,
+    bfs_order,
+    apply_order,
+)
+from repro.graphs.locality import aid_per_node, mean_aid
+from repro.graphs.io import write_metis, read_metis
+from repro.graphs.stream import NodeStream
+from repro.graphs.sampler import sample_multihop, cross_block_fraction
+
+__all__ = [
+    "CSRGraph",
+    "rmat_graph",
+    "rgg_graph",
+    "rhg_like_graph",
+    "grid_mesh_graph",
+    "sbm_graph",
+    "star_graph",
+    "ring_graph",
+    "source_order",
+    "random_order",
+    "konect_order",
+    "bfs_order",
+    "apply_order",
+    "aid_per_node",
+    "mean_aid",
+    "write_metis",
+    "read_metis",
+    "NodeStream",
+    "sample_multihop",
+    "cross_block_fraction",
+]

@@ -1,0 +1,145 @@
+"""CSR graph container.
+
+The streaming partitioner's host-side state is numpy (the stream is a host
+data-pipeline stage); device-side batch partitioning consumes padded ELL
+tiles extracted from this CSR. Graphs are undirected and simple: every edge
+(u, v) is stored twice (u->v and v->u), no self loops, no parallel edges.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    """Undirected graph in CSR form.
+
+    indptr:   (n+1,) int64 — neighbor-list offsets.
+    indices:  (2m,)  int32 — concatenated neighbor lists.
+    edge_w:   (2m,)  float32 — per-direction edge weight (symmetric).
+    node_w:   (n,)   float32 — node weights (unit by default).
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    edge_w: np.ndarray
+    node_w: np.ndarray
+
+    # ------------------------------------------------------------------ api
+    @property
+    def n(self) -> int:
+        return int(self.indptr.shape[0] - 1)
+
+    @property
+    def m(self) -> int:
+        """Number of undirected edges."""
+        return int(self.indices.shape[0] // 2)
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int64)
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.degrees.max(initial=0))
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v] : self.indptr[v + 1]]
+
+    def neighbor_weights(self, v: int) -> np.ndarray:
+        return self.edge_w[self.indptr[v] : self.indptr[v + 1]]
+
+    def total_edge_weight(self) -> float:
+        return float(self.edge_w.sum() / 2.0)
+
+    def validate(self) -> None:
+        n = self.n
+        assert self.indptr[0] == 0 and self.indptr[-1] == self.indices.shape[0]
+        assert (np.diff(self.indptr) >= 0).all()
+        assert self.indices.min(initial=0) >= 0
+        assert self.indices.max(initial=-1) < n
+        assert self.edge_w.shape == self.indices.shape
+        assert self.node_w.shape == (n,)
+        # no self loops
+        for v in range(min(n, 64)):  # spot check, full check is O(m)
+            assert v not in self.neighbors(v), f"self loop at {v}"
+
+    # ------------------------------------------------------ construction
+    @staticmethod
+    def from_edges(
+        n: int,
+        edges: np.ndarray,
+        edge_weights: np.ndarray | None = None,
+        node_weights: np.ndarray | None = None,
+    ) -> "CSRGraph":
+        """Build from an (E, 2) array of undirected edges (dedup + desym OK).
+
+        Self loops and duplicate/parallel edges are removed; each surviving
+        undirected edge contributes two CSR entries.
+        """
+        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        if edge_weights is None:
+            edge_weights = np.ones(edges.shape[0], dtype=np.float32)
+        edge_weights = np.asarray(edge_weights, dtype=np.float32)
+        # drop self loops
+        keep = edges[:, 0] != edges[:, 1]
+        edges, edge_weights = edges[keep], edge_weights[keep]
+        # canonicalize (min, max) and dedup, keeping first weight
+        lo = np.minimum(edges[:, 0], edges[:, 1])
+        hi = np.maximum(edges[:, 0], edges[:, 1])
+        key = lo * n + hi
+        order = np.argsort(key, kind="stable")
+        key, lo, hi, edge_weights = key[order], lo[order], hi[order], edge_weights[order]
+        uniq = np.ones(key.shape[0], dtype=bool)
+        uniq[1:] = key[1:] != key[:-1]
+        lo, hi, edge_weights = lo[uniq], hi[uniq], edge_weights[uniq]
+        # symmetrize
+        src = np.concatenate([lo, hi])
+        dst = np.concatenate([hi, lo])
+        w = np.concatenate([edge_weights, edge_weights])
+        # CSR
+        order = np.argsort(src, kind="stable")
+        src, dst, w = src[order], dst[order], w[order]
+        counts = np.bincount(src, minlength=n)
+        indptr = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        if node_weights is None:
+            node_weights = np.ones(n, dtype=np.float32)
+        return CSRGraph(
+            indptr=indptr,
+            indices=dst.astype(np.int32),
+            edge_w=w.astype(np.float32),
+            node_w=np.asarray(node_weights, dtype=np.float32),
+        )
+
+    def to_edge_list(self) -> np.ndarray:
+        """Return (m, 2) canonical (u < v) undirected edge list."""
+        src = np.repeat(np.arange(self.n, dtype=np.int64), np.diff(self.indptr))
+        dst = self.indices.astype(np.int64)
+        mask = src < dst
+        return np.stack([src[mask], dst[mask]], axis=1)
+
+    # ---------------------------------------------------------- ELL tiles
+    def ell_block(
+        self, nodes: np.ndarray, pad_width: int | None = None
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Extract padded (|nodes|, W) neighbor/weight tiles.
+
+        Returns (nbr_ids, nbr_w, valid_mask); padding uses nbr_id = -1.
+        W = max degree among `nodes` (rounded up to a multiple of 8 for VPU
+        lane friendliness) unless pad_width given.
+        """
+        nodes = np.asarray(nodes, dtype=np.int64)
+        degs = (self.indptr[nodes + 1] - self.indptr[nodes]).astype(np.int64)
+        w = int(degs.max(initial=1)) if pad_width is None else int(pad_width)
+        w = max(8, ((w + 7) // 8) * 8)
+        nbr = np.full((nodes.shape[0], w), -1, dtype=np.int32)
+        wts = np.zeros((nodes.shape[0], w), dtype=np.float32)
+        for i, v in enumerate(nodes):
+            s, e = self.indptr[v], self.indptr[v + 1]
+            d = min(int(e - s), w)
+            nbr[i, :d] = self.indices[s : s + d]
+            wts[i, :d] = self.edge_w[s : s + d]
+        return nbr, wts, nbr >= 0

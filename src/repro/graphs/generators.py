@@ -1,0 +1,153 @@
+"""Synthetic graph generators mirroring the paper's instance families.
+
+The paper's test set spans web crawls (power-law, high locality), social
+networks (power-law, low locality), meshes/matrices (near-regular, high
+locality), road networks (low degree, planar-ish) and generated graphs
+(rgg, rhg). We provide one generator per family so benchmark trends can be
+validated across the same structural diversity, at container scale.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+
+
+def rmat_graph(
+    n: int,
+    avg_degree: int,
+    *,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+    seed: int = 0,
+) -> CSRGraph:
+    """R-MAT power-law graph (social/web family). n rounded up to a power of 2."""
+    rng = np.random.default_rng(seed)
+    scale = int(np.ceil(np.log2(max(n, 2))))
+    n = 1 << scale
+    n_edges = n * avg_degree // 2
+    src = np.zeros(n_edges, dtype=np.int64)
+    dst = np.zeros(n_edges, dtype=np.int64)
+    probs = np.array([a, b, c, 1.0 - a - b - c])
+    for level in range(scale):
+        quad = rng.choice(4, size=n_edges, p=probs)
+        src = (src << 1) | (quad >> 1)
+        dst = (dst << 1) | (quad & 1)
+    return CSRGraph.from_edges(n, np.stack([src, dst], axis=1))
+
+
+def rgg_graph(n: int, radius: float | None = None, *, seed: int = 0) -> CSRGraph:
+    """Random geometric graph in the unit square (paper's rgg26 family)."""
+    rng = np.random.default_rng(seed)
+    if radius is None:
+        radius = np.sqrt(8.0 / n)  # avg degree ~ pi * r^2 * n ~ 25
+    pts = rng.random((n, 2))
+    # grid binning for near-linear neighbor search
+    cell = radius
+    gx = np.floor(pts[:, 0] / cell).astype(np.int64)
+    gy = np.floor(pts[:, 1] / cell).astype(np.int64)
+    ncell = int(np.ceil(1.0 / cell)) + 1
+    cell_id = gx * ncell + gy
+    order = np.argsort(cell_id, kind="stable")
+    sorted_cells = cell_id[order]
+    starts = np.searchsorted(sorted_cells, np.arange(ncell * ncell))
+    ends = np.searchsorted(sorted_cells, np.arange(ncell * ncell), side="right")
+    edges = []
+    r2 = radius * radius
+    for i in range(n):
+        cx, cy = gx[i], gy[i]
+        for dx in (-1, 0, 1):
+            for dy in (-1, 0, 1):
+                nx_, ny_ = cx + dx, cy + dy
+                if nx_ < 0 or ny_ < 0 or nx_ >= ncell or ny_ >= ncell:
+                    continue
+                cid = nx_ * ncell + ny_
+                cand = order[starts[cid] : ends[cid]]
+                cand = cand[cand > i]
+                if cand.size == 0:
+                    continue
+                d2 = ((pts[cand] - pts[i]) ** 2).sum(axis=1)
+                for j in cand[d2 <= r2]:
+                    edges.append((i, j))
+    if not edges:
+        edges = [(0, min(1, n - 1))]
+    return CSRGraph.from_edges(n, np.array(edges, dtype=np.int64))
+
+
+def rhg_like_graph(n: int, avg_degree: int, *, gamma: float = 2.7, seed: int = 0) -> CSRGraph:
+    """Random hyperbolic-like graph via Chung-Lu with power-law weights.
+
+    A faithful RHG sampler (paper's rhg1B/rhg2B) needs hyperbolic geometry;
+    Chung-Lu with the same degree exponent reproduces the degree profile and
+    community-ish clustering relevant to partitioning benchmarks.
+    """
+    rng = np.random.default_rng(seed)
+    # power-law expected degrees
+    u = rng.random(n)
+    wmin = avg_degree * (gamma - 2) / (gamma - 1)
+    weights = wmin / np.power(1.0 - u, 1.0 / (gamma - 1.0))
+    weights = np.minimum(weights, np.sqrt(weights.sum()))
+    total = weights.sum()
+    n_edges = int(total / 2)
+    p = weights / total
+    src = rng.choice(n, size=n_edges, p=p)
+    dst = rng.choice(n, size=n_edges, p=p)
+    # locality: sort nodes by weight so ids correlate with structure
+    return CSRGraph.from_edges(n, np.stack([src, dst], axis=1))
+
+
+def grid_mesh_graph(side: int, *, diag: bool = True) -> CSRGraph:
+    """2D grid mesh (paper's Flan/Bump mesh family). n = side*side."""
+    n = side * side
+    idx = np.arange(n).reshape(side, side)
+    edges = [
+        np.stack([idx[:, :-1].ravel(), idx[:, 1:].ravel()], axis=1),
+        np.stack([idx[:-1, :].ravel(), idx[1:, :].ravel()], axis=1),
+    ]
+    if diag:
+        edges.append(np.stack([idx[:-1, :-1].ravel(), idx[1:, 1:].ravel()], axis=1))
+    return CSRGraph.from_edges(n, np.concatenate(edges, axis=0))
+
+
+def sbm_graph(
+    n: int,
+    n_blocks: int,
+    *,
+    p_in: float = 0.05,
+    p_out: float = 0.001,
+    seed: int = 0,
+) -> CSRGraph:
+    """Stochastic block model — ground-truth communities; partitioners should
+    recover near-zero cut when k == n_blocks."""
+    rng = np.random.default_rng(seed)
+    block = np.repeat(np.arange(n_blocks), n // n_blocks + 1)[:n]
+    edges = []
+    # within-block edges
+    for b in range(n_blocks):
+        members = np.where(block == b)[0]
+        nb = members.size
+        n_e = int(p_in * nb * (nb - 1) / 2)
+        if n_e and nb > 1:
+            s = members[rng.integers(0, nb, n_e)]
+            d = members[rng.integers(0, nb, n_e)]
+            edges.append(np.stack([s, d], axis=1))
+    # cross edges
+    n_e = int(p_out * n * n / 2)
+    if n_e:
+        s = rng.integers(0, n, n_e)
+        d = rng.integers(0, n, n_e)
+        edges.append(np.stack([s, d], axis=1))
+    return CSRGraph.from_edges(n, np.concatenate(edges, axis=0))
+
+
+def star_graph(n: int) -> CSRGraph:
+    """Hub + leaves: exercises the D_max hub bypass path."""
+    edges = np.stack([np.zeros(n - 1, dtype=np.int64), np.arange(1, n)], axis=1)
+    return CSRGraph.from_edges(n, edges)
+
+
+def ring_graph(n: int) -> CSRGraph:
+    src = np.arange(n, dtype=np.int64)
+    dst = (src + 1) % n
+    return CSRGraph.from_edges(n, np.stack([src, dst], axis=1))

@@ -1,0 +1,69 @@
+"""METIS-format graph IO (the paper's input format).
+
+METIS format: first line `n m [fmt]`; line i+1 lists the (1-indexed)
+neighbors of node i; fmt=1 adds edge weights, fmt=10 node weights, fmt=11
+both. The paper converts all instances to METIS format with unit weights.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+
+
+def write_metis(g: CSRGraph, path: str) -> None:
+    has_ew = not np.all(g.edge_w == 1.0)
+    has_nw = not np.all(g.node_w == 1.0)
+    fmt = f"{int(has_nw)}{int(has_ew)}"
+    with open(path, "w") as f:
+        header = f"{g.n} {g.m}"
+        if fmt != "00":
+            header += f" {fmt}"
+        f.write(header + "\n")
+        for v in range(g.n):
+            parts: list[str] = []
+            if has_nw:
+                parts.append(str(int(g.node_w[v])))
+            nbrs = g.neighbors(v)
+            wts = g.neighbor_weights(v)
+            for u, w in zip(nbrs, wts):
+                parts.append(str(int(u) + 1))
+                if has_ew:
+                    parts.append(str(int(w)))
+            f.write(" ".join(parts) + "\n")
+
+
+def read_metis(path: str) -> CSRGraph:
+    with open(path) as f:
+        header = f.readline().split()
+        n, m = int(header[0]), int(header[1])
+        fmt = header[2] if len(header) > 2 else "00"
+        fmt = fmt.zfill(2)
+        has_nw, has_ew = fmt[0] == "1", fmt[1] == "1"
+        indptr = np.zeros(n + 1, dtype=np.int64)
+        indices: list[int] = []
+        weights: list[float] = []
+        node_w = np.ones(n, dtype=np.float32)
+        for v in range(n):
+            toks = f.readline().split()
+            i = 0
+            if has_nw:
+                node_w[v] = float(toks[0])
+                i = 1
+            while i < len(toks):
+                indices.append(int(toks[i]) - 1)
+                i += 1
+                if has_ew:
+                    weights.append(float(toks[i]))
+                    i += 1
+                else:
+                    weights.append(1.0)
+            indptr[v + 1] = len(indices)
+    g = CSRGraph(
+        indptr=indptr,
+        indices=np.asarray(indices, dtype=np.int32),
+        edge_w=np.asarray(weights, dtype=np.float32),
+        node_w=node_w,
+    )
+    assert g.m == m, f"header m={m} != parsed m={g.m}"
+    return g

@@ -1,0 +1,50 @@
+"""Node-streaming iterator — the partitioner's only view of the graph.
+
+Streaming partitioners must not hold the full graph; `NodeStream` enforces
+this contract at the API level: it yields (node_id, neighbor_ids,
+neighbor_weights, node_weight) tuples one at a time (or in chunks for the
+pipelined driver), and tracks the bytes a *real* streaming pass would have
+resident — used for the paper's memory accounting (§4 methodology).
+"""
+from __future__ import annotations
+
+from collections.abc import Iterator
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+
+
+class NodeStream:
+    """Streams nodes 0..n-1 of `g` in id order.
+
+    Use `apply_order(g, perm)` first to realize a specific stream order —
+    matching the paper's protocol of permuting node ids.
+    """
+
+    def __init__(self, g: CSRGraph):
+        self._g = g
+        self.n = g.n
+        self.m = g.m
+
+    def __iter__(self) -> Iterator[tuple[int, np.ndarray, np.ndarray, float]]:
+        g = self._g
+        for v in range(g.n):
+            yield v, g.neighbors(v), g.neighbor_weights(v), float(g.node_w[v])
+
+    def chunks(self, chunk: int) -> Iterator[dict]:
+        """Yield contiguous chunks as padded-ELL dicts (pipelined driver)."""
+        g = self._g
+        for start in range(0, g.n, chunk):
+            nodes = np.arange(start, min(start + chunk, g.n), dtype=np.int64)
+            nbr, wts, mask = g.ell_block(nodes)
+            yield {
+                "nodes": nodes,
+                "nbr": nbr,
+                "nbr_w": wts,
+                "mask": mask,
+                "node_w": g.node_w[nodes],
+            }
+
+    def degree(self, v: int) -> int:
+        return int(self._g.indptr[v + 1] - self._g.indptr[v])

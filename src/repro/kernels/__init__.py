@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the system's compute hot spots.
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), a jit'd wrapper
+in ops.py, and a pure-jnp oracle in ref.py. Validated with interpret=True on
+CPU; compiled path engages automatically on TPU backends.
+"""
+from repro.kernels.ops import (
+    block_histogram,
+    fennel_choose_batch,
+    embedding_bag,
+    swa_attention_decode,
+)
+
+__all__ = [
+    "block_histogram",
+    "fennel_choose_batch",
+    "embedding_bag",
+    "swa_attention_decode",
+]

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: embedding bag (gather + segment-sum pooling).
+
+JAX has no native EmbeddingBag; DLRM's hot path is pooled lookups over huge
+tables. The TPU-native pattern is *scalar-prefetch gather*: bag indices are
+prefetched into SMEM and drive the BlockSpec index_map, so each grid step
+DMAs exactly one table row block HBM→VMEM (no one-hot matmul over the
+vocab, no O(V) traffic). The output block revisits across the L (bag) grid
+axis and accumulates in VMEM; padded slots are masked with a per-slot
+weight of 0.
+
+Layout: table (V, D) with D a 128 multiple; grid (B, L); out (B, D).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _bag_kernel(idx_ref, mask_ref, table_row_ref, out_ref):
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += table_row_ref[...] * mask_ref[0, 0]
+
+
+def embedding_bag(
+    table: jnp.ndarray,
+    idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """pooled (B, D) = Σ_l table[idx[b, l]] * mask[b, l].
+
+    idx must be pre-clamped to [0, V); mask carries the padding zeros
+    (and any per-sample weights).
+    """
+    v, d = table.shape
+    b, l = idx.shape
+    flat_idx = idx.reshape(-1).astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, l),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi, li, idx_ref: (bi, li)),
+            pl.BlockSpec((1, d), lambda bi, li, idx_ref: (idx_ref[bi * l + li], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda bi, li, idx_ref: (bi, 0)),
+    )
+    return pl.pallas_call(
+        _bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+    )(flat_idx, mask.astype(table.dtype), table)

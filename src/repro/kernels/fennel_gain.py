@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: fused Fennel gain + argmax.
+
+Fuses the ELL histogram with the balance penalty, feasibility mask and the
+block argmax so the (B, k) counts tile never round-trips to HBM — on a v5e
+the histogram tile is VMEM-resident and the epilogue is a handful of VPU
+reductions. This is the wavefront assignment engine of the vectorized
+BuffCut driver (core/vector_stream.py): all nodes in a wave see the same
+block loads, exactly matching the driver's semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ell_histogram import DEFAULT_TB, DEFAULT_WC
+
+_NEG_INF = -1e30
+
+
+def _fennel_kernel(
+    blk_ref, w_ref, loads_ref, node_w_ref, best_ref, score_ref,
+    *, k: int, wc: int, alpha: float, gamma: float, cap: float,
+):
+    tb, w_total = blk_ref.shape
+    ids = jax.lax.broadcasted_iota(jnp.int32, (tb, wc, k), 2)
+
+    def body(step, acc):
+        start = step * wc
+        blk = jax.lax.dynamic_slice(blk_ref[...], (0, start), (tb, wc))
+        wts = jax.lax.dynamic_slice(w_ref[...], (0, start), (tb, wc))
+        onehot = (blk[:, :, None] == ids).astype(jnp.float32)
+        return acc + jnp.sum(onehot * wts[:, :, None], axis=1)
+
+    counts = jax.lax.fori_loop(
+        0, w_total // wc, body, jnp.zeros((tb, k), dtype=jnp.float32)
+    )
+    loads = loads_ref[0, :]  # (k,)
+    penalty = alpha * gamma * jnp.power(jnp.maximum(loads, 0.0), gamma - 1.0)
+    score = counts - penalty[None, :]
+    feasible = (loads[None, :] + node_w_ref[...]) <= cap  # (tb, k)
+    masked = jnp.where(feasible, score, _NEG_INF)
+    # argmax with lowest-id tie-break == jnp.argmax semantics
+    best = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    any_ok = feasible.any(axis=1)
+    fallback = jnp.argmin(loads).astype(jnp.int32)
+    best = jnp.where(any_ok, best, fallback)
+    best_ref[...] = best[:, None]
+    score_ref[...] = jnp.max(masked, axis=1)[:, None]
+
+
+def fennel_gain(
+    nbr_blk: jnp.ndarray,
+    nbr_w: jnp.ndarray,
+    loads: jnp.ndarray,
+    node_w: jnp.ndarray,
+    *,
+    alpha: float,
+    gamma: float,
+    cap: float,
+    tb: int = DEFAULT_TB,
+    wc: int = DEFAULT_WC,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (best_block (B,), best_score (B,)). Shapes pre-padded by ops."""
+    b, w = nbr_blk.shape
+    k = loads.shape[0]
+    assert b % tb == 0 and w % wc == 0
+    kernel = functools.partial(
+        _fennel_kernel, k=k, wc=wc, alpha=float(alpha), gamma=float(gamma), cap=float(cap)
+    )
+    best, score = pl.pallas_call(
+        kernel,
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, w), lambda i: (i, 0)),
+            pl.BlockSpec((tb, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(nbr_blk, nbr_w, loads.reshape(1, k), node_w.reshape(b, 1))
+    return best[:, 0], score[:, 0]

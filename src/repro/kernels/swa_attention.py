@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: sliding-window decode attention (GQA).
+
+Serves the long-context decode shapes (e.g. h2o-danube long_500k): one new
+token attends to the last `window` positions only, so compute and VMEM are
+O(window) regardless of cache length. The ops.py wrapper dynamic-slices an
+aligned window out of the (possibly 512k-long) cache; the kernel runs one
+grid step per (batch, kv-head) with the whole window resident in VMEM —
+window·d_head ≤ 4096·128·4B = 2 MiB, comfortably inside the ~16 MiB budget,
+so no online-softmax tiling is needed at these shapes (it would only add
+loop overhead; revisit if window > 16k).
+
+GQA: the G = H/KVH query heads of a group are processed together as the
+rows of a (G, D) matmul against the group's (W, D) K/V tiles — MXU-shaped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _swa_kernel(
+    q_ref, k_ref, v_ref, pos_ref, start_ref, out_ref, *, window: int, scale: float
+):
+    wp = k_ref.shape[2]
+    q = q_ref[0, 0]          # (G, D)
+    k = k_ref[0, 0]          # (Wp, D)
+    v = v_ref[0, 0]          # (Wp, D)
+    pos = pos_ref[0, 0]      # scalar int32: cache fill level
+    start = start_ref[0, 0]  # absolute position of window slot 0
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                # (G, Wp)
+    abs_pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, wp), 1)
+    lo = jnp.maximum(pos - window, 0)
+    valid = (abs_pos >= lo) & (abs_pos < pos)
+    scores = jnp.where(valid, scores, _NEG_INF)
+    m = jnp.max(scores, axis=1, keepdims=True)
+    e = jnp.where(valid, jnp.exp(scores - m), 0.0)  # exact 0 on masked lanes
+    denom = jnp.sum(e, axis=1, keepdims=True)
+    probs = e / jnp.maximum(denom, 1e-30)  # empty window -> all-zero probs
+    out = jax.lax.dot_general(
+        probs, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out_ref[0, 0] = out.astype(out_ref.dtype)
+
+
+def swa_attention_decode(
+    q: jnp.ndarray,
+    k_win: jnp.ndarray,
+    v_win: jnp.ndarray,
+    pos: jnp.ndarray,
+    win_start: jnp.ndarray,
+    *,
+    window: int,
+    scale: float,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """q (B, KVH, G, D); k_win/v_win (B, KVH, Wp, D); pos/win_start (B,).
+
+    Returns (B, KVH, G, D). D should be padded to 128, Wp to 8. `scale` is
+    1/sqrt(true d_head) — passed explicitly because D may be lane-padded.
+    """
+    b, kvh, g, d = q.shape
+    wp = k_win.shape[2]
+    kernel = functools.partial(_swa_kernel, window=int(window), scale=float(scale))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kvh),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, wp, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, wp, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        interpret=interpret,
+    )(q, k_win, v_win, pos.reshape(b, 1).astype(jnp.int32), win_start.reshape(b, 1).astype(jnp.int32))

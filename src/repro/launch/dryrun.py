@@ -1,0 +1,140 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract memory / cost / collective analyses.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 placeholder host devices.
+(`from __future__` is therefore deliberately absent here.)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --json out.json
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, lower_cell
+from repro.launch.hlo_analysis import analyze_compiled, collective_bytes
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+             unroll: bool = False) -> dict:
+    # unroll=False: the PRODUCTION (rolled-scan) artifact is what must
+    # compile and fit; loop-corrected cost extraction lives in
+    # benchmarks.roofline (two-point unrolled fit).
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.time()
+    cell = build_cell(arch_id, shape_name, mesh, unroll=unroll)
+    if cell.skip:
+        return {
+            "arch": arch_id, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "status": "skip", "reason": cell.skip,
+        }
+    lowered = lower_cell(cell, mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    terms = analyze_compiled(compiled, n_dev, cell.model_flops)
+    coll = collective_bytes(compiled.as_text())
+    out = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "kind": cell.kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "bytes_per_device": {
+            "args": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp": int(getattr(mem, "temp_size_in_bytes", 0)),
+            # donated args alias their outputs: count aliased bytes once
+            "peak": int(
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                - getattr(mem, "alias_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+            ),
+        },
+        "collectives": {k: int(v) for k, v in coll.items()},
+        "roofline": terms.as_dict(),
+        "notes": cell.notes,
+    }
+    if verbose:
+        gb = out["bytes_per_device"]
+        print(
+            f"[{out['mesh']}] {arch_id} x {shape_name} ({cell.kind}): "
+            f"compile {t_compile:.0f}s  peak/dev "
+            f"{gb['peak'] / 1e9:.2f} GB  "
+            f"coll {coll['total'] / 1e6:.1f} MB  "
+            f"bottleneck={terms.bottleneck}",
+            flush=True,
+        )
+        print(f"  memory_analysis: {mem}", flush=True)
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        keep = {k: v for k, v in ca.items() if k in ("flops", "bytes accessed")}
+        print(f"  cost_analysis: {keep}", flush=True)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--json", default=None, help="append results to this JSON-lines file")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for aid, spec in ARCHS.items():
+            for sname in spec.shapes:
+                cells.append((aid, sname))
+    else:
+        assert args.arch, "--arch required unless --all"
+        spec = get_arch(args.arch)
+        shapes = [args.shape] if args.shape else list(spec.shapes)
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    results, failures = [], 0
+    for arch_id, shape_name in cells:
+        for multi in meshes:
+            try:
+                res = run_cell(arch_id, shape_name, multi)
+            except Exception as e:  # a failure here is a bug in our sharding
+                failures += 1
+                res = {
+                    "arch": arch_id, "shape": shape_name,
+                    "mesh": "2x16x16" if multi else "16x16",
+                    "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                }
+                print(f"FAIL {arch_id} x {shape_name}: {e}", flush=True)
+                traceback.print_exc()
+            results.append(res)
+            if args.json:
+                with open(args.json, "a") as f:
+                    f.write(json.dumps(res) + "\n")
+    ok = sum(1 for r in results if r["status"] == "ok")
+    skip = sum(1 for r in results if r["status"] == "skip")
+    print(f"\ndry-run summary: {ok} ok, {skip} skip, {failures} FAIL", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

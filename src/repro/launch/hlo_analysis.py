@@ -1,0 +1,145 @@
+"""Compiled-HLO analysis: collective bytes + roofline terms.
+
+cost_analysis() gives FLOPs and HBM bytes but not collective traffic; we
+parse the post-SPMD HLO text and sum the *output* shape bytes of every
+collective op (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute). Hardware constants are TPU v5e per the assignment:
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]")
+# matches: "%name = TYPE[dims]{layout} all-gather(...)" and tuple forms
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9\[\],{}:#\s\.]*?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output bytes per collective kind. '-done' ops are skipped (the
+    '-start' op already carries the shape) to avoid double counting."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _OP_RE.search(stripped)
+        if not m:
+            continue
+        if f"{m.group(2)}-done(" in stripped:
+            continue
+        shape_part = m.group(1)
+        kind = m.group(2)
+        out[kind] += _shape_bytes(shape_part)
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def remat_duplication(hlo_text: str) -> float:
+    """Rough remat waste signal: ratio of fusion ops inside while-loop bodies
+    vs total (higher after remat)."""
+    n_fusion = hlo_text.count(" fusion(")
+    n_all = max(hlo_text.count(" = "), 1)
+    return n_fusion / n_all
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """All byte/flop counts are PER-DEVICE: under SPMD the compiled module
+    (and its cost_analysis) is the per-device program, so the assignment's
+    `HLO_FLOPs / (chips x peak)` equals `flops_per_device / peak`."""
+
+    flops: float              # HLO FLOPs per device
+    hbm_bytes: float          # HLO bytes accessed per device
+    coll_bytes: float         # collective output bytes per device
+    n_devices: int
+    model_flops: float = 0.0  # 6*N*D useful flops for the WHOLE step
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        total = self.flops * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+        }
+
+
+def analyze_compiled(compiled, n_devices: int, model_flops: float = 0.0) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_bytes(hlo)
+    return RooflineTerms(
+        flops=flops, hbm_bytes=byts, coll_bytes=float(coll["total"]),
+        n_devices=n_devices, model_flops=model_flops,
+    )

@@ -1,0 +1,469 @@
+"""Per-(arch x shape) step construction for the dry-run and the trainers.
+
+build_cell() returns everything needed to lower one cell on one mesh:
+  step_fn        the jittable function (train / prefill / decode / serve)
+  arg_structs    ShapeDtypeStructs for every argument (params included —
+                 nothing is ever allocated)
+  in_shardings / out_shardings / donate
+  model_flops    6*N*D (dense) or 6*N_active*D (MoE) for §Roofline
+
+Leading batch/node/edge dims that are not divisible by the DP degree are
+padded up (masked padding rows — standard practice; noted per cell).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeDef
+from repro.distributed.sharding import (
+    ShardingRules, lm_sharding_rules, lm_decode_sharding_rules,
+    gnn_sharding_rules, dlrm_sharding_rules, param_shardings, batch_shardings,
+)
+from repro.launch.mesh import dp_size
+from repro.models import transformer as tfm
+from repro.models import gnn as gnn_mod
+from repro.models import dlrm as dlrm_mod
+from repro.train.adamw import AdamW
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    step_fn: object
+    arg_structs: tuple
+    in_shardings: tuple
+    out_shardings: object
+    donate: tuple
+    model_flops: float
+    notes: str = ""
+    skip: str | None = None
+
+
+def _eval_shape(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _pad_dim0(struct: jax.ShapeDtypeStruct, mult: int) -> jax.ShapeDtypeStruct:
+    if not struct.shape:
+        return struct
+    d0 = struct.shape[0]
+    target = math.ceil(d0 / mult) * mult
+    if target == d0:
+        return struct
+    return jax.ShapeDtypeStruct((target,) + struct.shape[1:], struct.dtype)
+
+
+def _pad_tree_dim0(tree, mult: int):
+    return jax.tree.map(lambda s: _pad_dim0(s, mult), tree)
+
+
+def _shardings_with_fallback(rules: ShardingRules, mesh: Mesh, tree):
+    """batch shardings, replicating any leaf whose dim0 doesn't divide."""
+    base = batch_shardings(rules, mesh, tree)
+
+    def fix(struct, sh):
+        spec = list(sh.spec) + [None] * (len(struct.shape) - len(sh.spec))
+        for i, (dim, ax) in enumerate(zip(struct.shape, spec)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            if dim % n != 0:
+                spec[i] = None  # fallback: replicate this dim
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(fix, tree, base)
+
+
+# =====================================================================
+# LM cells
+# =====================================================================
+
+def _lm_model_flops(cfg, tokens: int, kind: str) -> float:
+    n_active = cfg.active_param_count()
+    per_tok = 6.0 * n_active if kind == "train" else 2.0 * n_active
+    return per_tok * tokens
+
+
+def _build_lm_cell(spec, cfg, shape: ShapeDef, mesh: Mesh,
+                   attn_mode: str = "seq") -> Cell:
+    """attn_mode: 'seq' (baseline — sequence-parallel attention, valid for
+    any head count) or 'head_tp' (§Perf H1 — Megatron head-parallel QKVO;
+    requires n_heads % tp == 0; kv heads shard only when they divide)."""
+    tp = mesh.shape["model"]
+    head_tp = attn_mode == "head_tp" and cfg.n_heads % tp == 0
+    kv_tp = head_tp and cfg.n_kv_heads % tp == 0
+    rules = lm_sharding_rules(moe=cfg.n_experts > 0, head_tp=head_tp, kv_tp=kv_tp)
+    dp_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    # sequence parallelism: batch over dp, sequence over the TP axis
+    seq_spec = P(dp_axes, "model", None)
+    if head_tp:
+        # (B, S, H, hd): heads over the TP axis; kv heads likewise if they
+        # divide, else replicated (GQA-native flash handles both)
+        q_spec = P(dp_axes, None, "model", None)
+        kv_spec = P(dp_axes, None, "model" if kv_tp else None, None)
+    else:
+        # q sequence-sharded over 'model' (each device owns a q block vs
+        # replicated-on-model KV) — valid for every head count
+        q_spec = P(dp_axes, "model", None, None)
+        kv_spec = P(dp_axes, None, None, None)
+
+    def attn_shard(x, role):
+        spec_ = q_spec if role == "q" else kv_spec
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec_))
+
+    def act_shard(x):
+        if x.ndim == 3:
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, seq_spec))
+        return x
+
+    params_struct = _eval_shape(lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+    p_shard = param_shardings(rules, mesh, params_struct)
+    batch_struct = spec.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt = AdamW()
+        opt_struct = _eval_shape(opt.init, params_struct)
+        o_shard = param_shardings(rules, mesh, opt_struct._asdict())
+        o_shard = type(opt_struct)(**o_shard)
+        b_shard = _shardings_with_fallback(rules, mesh, batch_struct)
+        # gradient-accumulation microbatches: activation memory scales 1/m;
+        # the per-microbatch reduce-scatter also overlaps with the next
+        # microbatch's backward under XLA's latency-hiding scheduler.
+        micro = 2 if cfg.d_model < 8192 else 8
+
+        def shard_like_params(tree):
+            return jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, p_shard
+            )
+
+        def train_step(params, opt_state, batch):
+            tfm.set_activation_sharding(act_shard)
+            tfm.set_attn_sharding(attn_shard)
+            if cfg.n_experts:
+                tfm.set_moe_spmd(mesh, x_spec=seq_spec)
+
+            def loss_of(p, b):
+                return tfm.loss_fn(p, b, cfg)
+
+            if micro == 1:
+                loss, grads = jax.value_and_grad(loss_of)(params, batch)
+            else:
+                def mb(i):
+                    return jax.tree.map(
+                        lambda x: jax.lax.dynamic_slice_in_dim(
+                            x, i * (x.shape[0] // micro), x.shape[0] // micro, 0
+                        ),
+                        batch,
+                    )
+
+                def body(carry, i):
+                    acc_l, acc_g = carry
+                    l_i, g_i = jax.value_and_grad(loss_of)(params, mb(i))
+                    g_i = jax.tree.map(lambda x: x.astype(jnp.float32), g_i)
+                    acc_g = shard_like_params(
+                        jax.tree.map(jnp.add, acc_g, g_i)
+                    )
+                    return (acc_l + l_i, acc_g), None
+
+                zero_g = shard_like_params(
+                    jax.tree.map(
+                        lambda s: jnp.zeros(s.shape, jnp.float32), params
+                    )
+                )
+                # unroll in analysis mode (scan_unroll>1) so cost_analysis
+                # sees every microbatch, not just one while-loop body
+                (loss, grads), _ = jax.lax.scan(
+                    body, (jnp.zeros(()), zero_g), jnp.arange(micro),
+                    unroll=micro if cfg.scan_unroll > 1 else 1,
+                )
+                loss = loss / micro
+                grads = jax.tree.map(lambda g: g / micro, grads)
+            new_p, new_o, gnorm = opt.update(grads, opt_state, params)
+            tfm.set_activation_sharding(None)
+            tfm.set_attn_sharding(None)
+            tfm.set_moe_spmd(None)
+            return new_p, new_o, {"loss": loss, "grad_norm": gnorm}
+
+        return Cell(
+            arch_id=spec.arch_id, shape_name=shape.name, kind="train",
+            step_fn=train_step,
+            arg_structs=(params_struct, opt_struct, batch_struct),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate=(0, 1),
+            model_flops=_lm_model_flops(
+                cfg, shape.dims["batch"] * shape.dims["seq"], "train"
+            ),
+        )
+
+    if shape.kind == "prefill":
+        # prefill is compute-shaped like training: FSDP weights +
+        # sequence-parallel attention (decode rules would psum huge
+        # (B, 32k, d) activations per projection)
+        rules_d = rules
+        p_shard_d = param_shardings(rules_d, mesh, params_struct)
+        b_shard = _shardings_with_fallback(rules_d, mesh, batch_struct)
+        max_len = shape.dims["seq"]
+
+        def prefill_step(params, batch):
+            tfm.set_activation_sharding(act_shard)
+            tfm.set_attn_sharding(attn_shard)
+            if cfg.n_experts:
+                tfm.set_moe_spmd(mesh, x_spec=seq_spec)
+            out = tfm.forward_prefill(params, batch["tokens"], cfg, max_len)
+            tfm.set_activation_sharding(None)
+            tfm.set_attn_sharding(None)
+            tfm.set_moe_spmd(None)
+            return out
+
+        # output: (logits, cache) — pin the cache to the decode layout so
+        # XLA does not materialize it replicated (412 GB at moonshot 32k)
+        cache_struct = {
+            "k": jax.ShapeDtypeStruct(
+                (cfg.n_layers, shape.dims["batch"], max_len, cfg.n_kv_heads, cfg.d_head),
+                cfg.jdtype),
+            "v": jax.ShapeDtypeStruct(
+                (cfg.n_layers, shape.dims["batch"], max_len, cfg.n_kv_heads, cfg.d_head),
+                cfg.jdtype),
+            "pos": jax.ShapeDtypeStruct((shape.dims["batch"],), jnp.int32),
+        }
+        cache_shard = _shardings_with_fallback(rules_d, mesh, {"cache": cache_struct})["cache"]
+        out_sh = (None, cache_shard)
+        return Cell(
+            arch_id=spec.arch_id, shape_name=shape.name, kind="prefill",
+            step_fn=prefill_step,
+            arg_structs=(params_struct, batch_struct),
+            in_shardings=(p_shard_d, b_shard),
+            out_shardings=out_sh,
+            donate=(),
+            model_flops=_lm_model_flops(
+                cfg, shape.dims["batch"] * shape.dims["seq"], "prefill"
+            ),
+        )
+
+    # decode (incl. long_500k)
+    rules_d = lm_decode_sharding_rules()
+    p_shard_d = param_shardings(rules_d, mesh, params_struct)
+    b_shard = _shardings_with_fallback(rules_d, mesh, batch_struct)
+
+    def decode_step(params, batch):
+        if cfg.n_experts:
+            tfm.set_moe_spmd(mesh, x_spec=P(dp_axes, None, None))  # decode: (B,1,d)
+        logits, cache = tfm.forward_decode(params, batch["tokens"], batch["cache"], cfg)
+        tfm.set_moe_spmd(None)
+        return logits, cache
+
+    return Cell(
+        arch_id=spec.arch_id, shape_name=shape.name, kind="decode",
+        step_fn=decode_step,
+        arg_structs=(params_struct, batch_struct),
+        in_shardings=(p_shard_d, b_shard),
+        out_shardings=(None, b_shard["cache"]),  # new cache keeps its layout
+        donate=(1,),  # donate the cache
+        model_flops=_lm_model_flops(cfg, shape.dims["batch"], "decode"),
+    )
+
+
+# =====================================================================
+# GNN cells
+# =====================================================================
+
+_GNN_LOSS = {
+    "egnn": (gnn_mod.egnn_loss, "d_in"),
+    "meshgraphnet": (gnn_mod.mgn_loss, "d_node_in"),
+    "schnet": (gnn_mod.schnet_loss, None),
+    "graphsage-reddit": (gnn_mod.sage_loss, "d_in"),
+}
+
+_GNN_INIT = {
+    "egnn": gnn_mod.egnn_init,
+    "meshgraphnet": gnn_mod.mgn_init,
+    "schnet": gnn_mod.schnet_init,
+    "graphsage-reddit": gnn_mod.sage_init,
+}
+
+_GNN_FLOP_FACTOR = {  # ~flops per (edge + node) unit per layer: 2*d^2-ish
+    "egnn": 6, "meshgraphnet": 10, "schnet": 6, "graphsage-reddit": 4,
+}
+
+
+def _gnn_model_flops(arch_id: str, cfg, shape: ShapeDef) -> float:
+    n, e = shape.dims["n"], shape.dims["e_dir"]
+    d = getattr(cfg, "d_hidden", 64)
+    layers = getattr(cfg, "n_layers", getattr(cfg, "n_interactions", 3))
+    # message MLP ~ 2*d^2 per edge, node MLP ~ 2*d^2 per node, x3 for bwd
+    return 3.0 * layers * (e + n) * 2.0 * d * d * _GNN_FLOP_FACTOR[arch_id] / 4.0
+
+
+def _build_gnn_cell(spec, cfg, shape: ShapeDef, mesh: Mesh) -> Cell:
+    rules = gnn_sharding_rules()
+    f = shape.dims["f"]
+    loss_fn_base, din_field = _GNN_LOSS[spec.arch_id]
+    if din_field is not None:
+        cfg = dataclasses.replace(cfg, **{din_field: f})
+    if spec.arch_id == "graphsage-reddit":
+        n_cls = 41 if shape.name == "minibatch_lg" else 47
+        cfg = dataclasses.replace(cfg, n_classes=n_cls)
+
+    params_struct = _eval_shape(
+        lambda: _GNN_INIT[spec.arch_id](jax.random.PRNGKey(0), cfg)
+    )
+    p_shard = param_shardings(rules, mesh, params_struct)
+    dp = dp_size(mesh)
+    batch_struct = _pad_tree_dim0(spec.input_specs(cfg, shape), dp)
+    b_shard = _shardings_with_fallback(rules, mesh, batch_struct)
+
+    n_graphs = shape.dims.get("graphs", 1)
+
+    def loss_fn(p, b):
+        if spec.arch_id == "schnet":
+            b = dict(b)
+            b["n_graphs"] = max(
+                math.ceil(n_graphs / dp) * dp, dp
+            ) if n_graphs > 1 else 1
+        return loss_fn_base(p, b, cfg)
+
+    opt = AdamW()
+    opt_struct = _eval_shape(opt.init, params_struct)
+    o_shard = param_shardings(rules, mesh, opt_struct._asdict())
+    o_shard = type(opt_struct)(**o_shard)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_p, new_o, gnorm = opt.update(grads, opt_state, params)
+        return new_p, new_o, {"loss": loss, "grad_norm": gnorm}
+
+    return Cell(
+        arch_id=spec.arch_id, shape_name=shape.name, kind="train",
+        step_fn=train_step,
+        arg_structs=(params_struct, opt_struct, batch_struct),
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, None),
+        donate=(0, 1),
+        model_flops=_gnn_model_flops(spec.arch_id, cfg, shape),
+        notes=f"leading dims padded to multiples of dp={dp}",
+    )
+
+
+# =====================================================================
+# DLRM cells
+# =====================================================================
+
+def _dlrm_model_flops(cfg, shape: ShapeDef) -> float:
+    b = shape.dims.get("batch", 1)
+    mlp = 0
+    sizes = (cfg.n_dense,) + cfg.bot_mlp
+    mlp += sum(2 * a * o for a, o in zip(sizes, sizes[1:]))
+    d_top = cfg.n_interact + cfg.embed_dim
+    sizes = (d_top,) + cfg.top_mlp
+    mlp += sum(2 * a * o for a, o in zip(sizes, sizes[1:]))
+    interact = 2 * (cfg.n_sparse + 1) ** 2 * cfg.embed_dim
+    factor = 3.0 if shape.kind == "train" else 1.0
+    flops = factor * b * (mlp + interact)
+    if shape.kind == "retrieval":
+        flops += 2.0 * shape.dims["candidates"] * cfg.embed_dim
+    return flops
+
+
+def _build_dlrm_cell(spec, cfg, shape: ShapeDef, mesh: Mesh) -> Cell:
+    rules = dlrm_sharding_rules()
+    params_struct = _eval_shape(lambda: dlrm_mod.dlrm_init(jax.random.PRNGKey(0), cfg))
+    p_shard = param_shardings(rules, mesh, params_struct)
+    batch_struct = spec.input_specs(cfg, shape)
+    b_shard = _shardings_with_fallback(rules, mesh, batch_struct)
+
+    if shape.kind == "train":
+        opt = AdamW()
+        opt_struct = _eval_shape(opt.init, params_struct)
+        o_shard = param_shardings(rules, mesh, opt_struct._asdict())
+        o_shard = type(opt_struct)(**o_shard)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: dlrm_mod.dlrm_loss(p, batch, cfg)
+            )(params)
+            new_p, new_o, gnorm = opt.update(grads, opt_state, params)
+            return new_p, new_o, {"loss": loss, "grad_norm": gnorm}
+
+        return Cell(
+            arch_id=spec.arch_id, shape_name=shape.name, kind="train",
+            step_fn=train_step,
+            arg_structs=(params_struct, opt_struct, batch_struct),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate=(0, 1),
+            model_flops=_dlrm_model_flops(cfg, shape),
+        )
+
+    if shape.kind == "retrieval":
+        def retrieval_step(params, batch):
+            return dlrm_mod.dlrm_retrieval(params, batch, cfg)
+        fn = retrieval_step
+    else:
+        def serve_step(params, batch):
+            return dlrm_mod.dlrm_forward(params, batch, cfg)
+        fn = serve_step
+
+    return Cell(
+        arch_id=spec.arch_id, shape_name=shape.name, kind=shape.kind,
+        step_fn=fn,
+        arg_structs=(params_struct, batch_struct),
+        in_shardings=(p_shard, b_shard),
+        out_shardings=None,
+        donate=(),
+        model_flops=_dlrm_model_flops(cfg, shape),
+    )
+
+
+# =====================================================================
+# dispatch
+# =====================================================================
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh, *, unroll: bool = False,
+               cfg_override=None, attn_mode: str = "seq") -> Cell:
+    """unroll=True fully unrolls the LM layer scan so cost_analysis and the
+    collective-bytes parse see every layer (dry-run analysis mode); the
+    rolled scan remains the production/training path. cfg_override replaces
+    the arch config entirely (roofline two-point fits)."""
+    spec = get_arch(arch_id)
+    shape = spec.shapes[shape_name]
+    if shape.skip:
+        return Cell(
+            arch_id=arch_id, shape_name=shape_name, kind=shape.kind,
+            step_fn=None, arg_structs=(), in_shardings=(), out_shardings=None,
+            donate=(), model_flops=0.0, skip=shape.skip,
+        )
+    cfg = cfg_override if cfg_override is not None else spec.full_config()
+    if spec.family == "lm":
+        if unroll and cfg_override is None:
+            cfg = dataclasses.replace(cfg, scan_unroll=cfg.n_layers)
+        return _build_lm_cell(spec, cfg, shape, mesh, attn_mode=attn_mode)
+    if spec.family == "gnn":
+        return _build_gnn_cell(spec, cfg, shape, mesh)
+    if spec.family == "recsys":
+        return _build_dlrm_cell(spec, cfg, shape, mesh)
+    raise ValueError(spec.family)
+
+
+def lower_cell(cell: Cell, mesh: Mesh):
+    """jit + lower (no compile). Returns the Lowered object."""
+    jitted = jax.jit(
+        cell.step_fn,
+        in_shardings=cell.in_shardings,
+        out_shardings=cell.out_shardings,
+        donate_argnums=cell.donate,
+    )
+    with mesh:
+        return jitted.lower(*cell.arg_structs)

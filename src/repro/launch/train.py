@@ -1,0 +1,94 @@
+"""End-to-end training driver.
+
+Runs any `--arch` at its smoke (CPU) or full (pod) scale with the real
+substrate: sharded params, AdamW, fault-tolerant loop, checkpoints, data
+pipeline. On this container use --preset smoke (reduced config, 1 device);
+on a pod the same code path takes --preset full --mesh single|multi.
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b \
+      --preset smoke --steps 200 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import transformer as tfm
+from repro.models import gnn as gnn_mod
+from repro.models import dlrm as dlrm_mod
+from repro.train.adamw import AdamW
+from repro.train.loop import make_train_step, TrainLoop, LoopConfig
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import token_batches, gnn_batches, dlrm_batches
+
+
+def build_training(arch_id: str, preset: str, batch: int, seq: int):
+    spec = get_arch(arch_id)
+    cfg = spec.smoke_config() if preset == "smoke" else spec.full_config()
+    rng = jax.random.PRNGKey(0)
+    if spec.family == "lm":
+        params = tfm.init_params(rng, cfg)
+        loss = lambda p, b: tfm.loss_fn(p, b, cfg)
+        data = token_batches(cfg.vocab, batch, seq)
+    elif spec.family == "gnn":
+        from repro.launch.steps import _GNN_INIT, _GNN_LOSS  # noqa: PLC0415
+        init_fn = _GNN_INIT[arch_id]
+        loss_base, _ = _GNN_LOSS[arch_id]
+        params = init_fn(rng, cfg)
+        loss = lambda p, b: loss_base(p, b, cfg)
+        data = gnn_batches(lambda s: spec.smoke_batch(cfg, s))
+    else:
+        params = dlrm_mod.dlrm_init(rng, cfg)
+        loss = lambda p, b: dlrm_mod.dlrm_loss(p, b, cfg)
+        data = dlrm_batches(cfg, batch)
+    return cfg, params, loss, data
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--preset", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg, params, loss, data = build_training(args.arch, args.preset, args.batch, args.seq)
+    opt = AdamW(lr=args.lr, warmup_steps=min(args.steps // 10 + 1, 100))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(loss, opt))
+    ckpt = CheckpointManager(args.ckpt_dir)
+    start = 0
+    if args.resume:
+        restored = ckpt.restore_latest(template=(params, opt_state))
+        if restored:
+            (params, opt_state), start = restored["state"], restored["step"]
+            print(f"resumed from step {start}")
+    loop = TrainLoop(
+        step_fn, ckpt,
+        LoopConfig(total_steps=args.steps, checkpoint_every=args.ckpt_every),
+    )
+    t0 = time.time()
+    (params, opt_state), history = loop.run(params, opt_state, data, start_step=start)
+    dt = time.time() - t0
+    n = max(len(history), 1)
+    print(
+        f"arch={args.arch} steps={len(history)} "
+        f"loss {history[0]:.4f} -> {history[-1]:.4f} "
+        f"({dt:.1f}s, {dt / n * 1e3:.0f} ms/step, "
+        f"stragglers={len(loop.stragglers)}, retries={loop.retries})"
+    )
+    assert not np.isnan(history[-1]), "training diverged"
+
+
+if __name__ == "__main__":
+    main()

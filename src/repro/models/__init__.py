@@ -1,0 +1,4 @@
+"""Model zoo: LM transformers (dense/MoE/GQA/SWA), GNNs, DLRM."""
+from repro.models import transformer, gnn, dlrm
+
+__all__ = ["transformer", "gnn", "dlrm"]

@@ -1,0 +1,161 @@
+"""Attention layers: GQA full/causal, sliding-window, chunked flash-style.
+
+`flash_attention` is the pure-JAX double-chunked online-softmax formulation
+(q chunks via lax.map, kv chunks via lax.scan, jax.checkpoint on the
+per-q-chunk body so backward recomputes scores instead of storing the
+(S, S) matrix) — this is what makes 32k-token prefill lowerable. On real
+TPUs the same structure is what SplashAttention/Pallas emit; here XLA fuses
+the per-chunk body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    ).astype(x.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """q (B, Sq, H, D); k/v (B, Skv, KVH, D) with H % KVH == 0.
+
+    GQA-native: KV heads are never materialized per query head — the G
+    query heads of a group contract against their shared KV tile inside the
+    einsum (saves the (B, S, H, D) repeat, 1.6 GB/layer at command-r scale).
+    window: sliding-window size (None = full). q_offset: absolute position
+    of q[0] relative to k[0] (for prefill continuation).
+    """
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    n_q = -(-sq // q_chunk)
+    n_kv = -(-skv // kv_chunk)
+    q_pad = n_q * q_chunk - sq
+    kv_pad = n_kv * kv_chunk - skv
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    if kv_pad:
+        k = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+
+    # (B, KVH, G, n_q, Qc, D) query blocks; (B, KVH, n_kv, Kc, D) kv blocks
+    qq = jnp.moveaxis(q.reshape(b, n_q * q_chunk, kvh, g, d), 1, 3)
+    qq = qq.reshape(b, kvh, g, n_q, q_chunk, d)
+    kq = jnp.moveaxis(k, 2, 1).reshape(b, kvh, n_kv, kv_chunk, d)
+    vq = jnp.moveaxis(v, 2, 1).reshape(b, kvh, n_kv, kv_chunk, d)
+
+    kv_pos = jnp.arange(n_kv * kv_chunk).reshape(n_kv, kv_chunk)
+
+    @functools.partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def one_q_chunk(args):
+        qc, qi = args  # (B, KVH, G, Qc, D), scalar chunk index
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kc, vc, kpos = inputs  # (B,KVH,Kc,D), (B,KVH,Kc,D), (Kc,)
+            s = jnp.einsum(
+                "bhgqd,bhkd->bhgqk", qc, kc, preferred_element_type=jnp.float32
+            ) * scale
+            mask = kpos[None, :] < skv  # drop kv padding
+            if causal:
+                mask &= q_pos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= kpos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vc, preferred_element_type=jnp.float32
+            )
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, kvh, g, q_chunk), NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, g, q_chunk), jnp.float32),
+            jnp.zeros((b, kvh, g, q_chunk, d), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.moveaxis(kq, 2, 0), jnp.moveaxis(vq, 2, 0), kv_pos),
+            unroll=n_kv if unroll else 1,
+        )
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    def q_step(_, args):
+        return None, one_q_chunk(args)
+
+    _, out = jax.lax.scan(
+        q_step, None, (jnp.moveaxis(qq, 3, 0), jnp.arange(n_q)),
+        unroll=n_q if unroll else 1,
+    )  # (n_q, B, KVH, G, Qc, D)
+    out = jnp.moveaxis(out, 0, 4)  # (B, KVH, G, Qc, n_q, D) -> fix below
+    out = jnp.moveaxis(out, 4, 3).reshape(b, kvh * g, n_q * q_chunk, d)
+    out = jnp.moveaxis(out, 1, 2)[:, :sq]  # (B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,
+    window: int | None = None,
+) -> jnp.ndarray:
+    """One-token decode vs full cache. q (B, 1, H, D); cache (B, S, KVH, D);
+    pos (B,) = current fill level (attends to [max(0, pos-window), pos)).
+
+    With the cache sequence-sharded, the masked softmax reduces over the
+    sharded dim via psum-of-partials (flash-decoding layout) — each shard
+    touches only its local slice, no cache re-gather. This is the
+    `masked_full` SWA decode mode (§Perf H2): O(S/shards) compute instead
+    of the O(window) slice+kernel path, but ~zero collective bytes."""
+    b, s, kvh, d = k_cache.shape
+    h = q.shape[2]
+    groups = h // kvh
+    qg = q[:, 0].reshape(b, kvh, groups, d)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    positions = jnp.arange(s)[None, :]
+    valid = positions < pos[:, None]  # (B, S)
+    if window is not None:
+        valid &= positions >= (pos[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.where(valid[:, None, None, :], jnp.exp(scores - m), 0.0)
+    probs = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache, preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)

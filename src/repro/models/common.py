@@ -1,0 +1,66 @@
+"""Shared model building blocks (pure JAX, functional params-as-pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(rng, fan_in: int, fan_out: int, dtype=jnp.float32) -> jnp.ndarray:
+    scale = 1.0 / np.sqrt(fan_in)
+    return jax.random.uniform(rng, (fan_in, fan_out), dtype, -scale, scale)
+
+
+def mlp_init(rng, sizes: list[int], dtype=jnp.float32) -> dict:
+    keys = jax.random.split(rng, len(sizes) - 1)
+    return {
+        f"w{i}": dense_init(keys[i], sizes[i], sizes[i + 1], dtype)
+        for i in range(len(sizes) - 1)
+    } | {
+        f"b{i}": jnp.zeros((sizes[i + 1],), dtype)
+        for i in range(len(sizes) - 1)
+    }
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, act=jax.nn.relu, final_act=None) -> jnp.ndarray:
+    n = len([k for k in params if k.startswith("w")])
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-6):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray, mask=None) -> jnp.ndarray:
+    """Mean token cross-entropy; logits (..., V), labels (...) int32.
+
+    The gold logit is selected with a fused masked-reduce rather than a
+    take_along_axis gather: a gather over the vocab dim forces GSPMD to
+    replicate vocab-sharded logits (13 GB/device at llama4-scout scale),
+    while the masked reduction shards cleanly (reduce + psum)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, logits.ndim - 1
+    )
+    gold = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None].astype(jnp.int32), logits, 0.0),
+        axis=-1,
+    )
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,114 @@
+"""DLRM [Naumov et al., arXiv:1906.00091] — MLPerf benchmark config.
+
+Bottom MLP over 13 dense features, 26 sparse categorical features looked up
+through embedding bags (kernels/embedding_bag: JAX has no native
+EmbeddingBag — gather + segment-sum IS the implementation), dot-product
+feature interaction, top MLP to a click logit. The retrieval shape scores
+one query against 10^6 candidates as a single batched matmul.
+
+Embedding tables are stacked (N_SPARSE, V, D) so the model-axis sharding
+rule is a single PartitionSpec (table-wise sharding; DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import mlp_init, mlp_apply
+from repro.kernels.ops import embedding_bag
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 128
+    vocab_size: int = 1048576     # rows/table (2^20 Criteo stand-in; divides any pod mesh)
+    bot_mlp: tuple[int, ...] = (512, 256, 128)
+    top_mlp: tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    multi_hot: int = 1            # lookups per sparse feature
+
+    @property
+    def n_interact(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+    def param_count(self) -> int:
+        emb = self.n_sparse * self.vocab_size * self.embed_dim
+        bot = sum(
+            a * b for a, b in zip((self.n_dense,) + self.bot_mlp[:-1], self.bot_mlp)
+        )
+        d_top_in = self.n_interact + self.embed_dim
+        top = sum(
+            a * b for a, b in zip((d_top_in,) + self.top_mlp[:-1], self.top_mlp)
+        )
+        return emb + bot + top
+
+
+def dlrm_init(rng, cfg: DLRMConfig) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    d_top_in = cfg.n_interact + cfg.embed_dim
+    return {
+        "tables": jax.random.normal(
+            k1, (cfg.n_sparse, cfg.vocab_size, cfg.embed_dim), jnp.float32
+        ) / jnp.sqrt(cfg.embed_dim),
+        "bot": mlp_init(k2, [cfg.n_dense, *cfg.bot_mlp]),
+        "top": mlp_init(k3, [d_top_in, *cfg.top_mlp]),
+    }
+
+
+def _interact(dense_v: jnp.ndarray, sparse_v: jnp.ndarray) -> jnp.ndarray:
+    """Dot interaction: pairwise dots among [dense] + 26 sparse vectors."""
+    b = dense_v.shape[0]
+    feats = jnp.concatenate([dense_v[:, None, :], sparse_v], axis=1)  # (B, F, D)
+    f = feats.shape[1]
+    dots = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    iu, ju = jnp.triu_indices(f, k=1)
+    return dots[:, iu, ju]  # (B, F*(F-1)/2)
+
+
+def dlrm_forward(params: dict, batch: dict, cfg: DLRMConfig,
+                 use_kernel: bool = False) -> jnp.ndarray:
+    """batch: dense (B, 13) float, sparse_idx (B, 26, M) int32,
+    sparse_mask (B, 26, M) float. Returns click logits (B,)."""
+    dense_v = mlp_apply(params["bot"], batch["dense"], act=jax.nn.relu,
+                        final_act=jax.nn.relu)  # (B, D)
+    b = batch["dense"].shape[0]
+
+    def lookup(table, idx, mask):
+        return embedding_bag(table, idx, mask, use_kernel=use_kernel)
+
+    # vmap over the 26 tables (stacked layout)
+    sparse_v = jax.vmap(lookup, in_axes=(0, 1, 1), out_axes=1)(
+        params["tables"], batch["sparse_idx"], batch["sparse_mask"]
+    )  # (B, 26, D)
+    z = _interact(dense_v, sparse_v)
+    top_in = jnp.concatenate([dense_v, z], axis=-1)
+    return mlp_apply(params["top"], top_in, act=jax.nn.relu)[:, 0]
+
+
+def dlrm_loss(params: dict, batch: dict, cfg: DLRMConfig) -> jnp.ndarray:
+    logits = dlrm_forward(params, batch, cfg)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def dlrm_retrieval(params: dict, batch: dict, cfg: DLRMConfig) -> jnp.ndarray:
+    """Score one query embedding against N candidate item embeddings.
+
+    batch: query_dense (1, 13), query_sparse_idx/mask (1, 26, M),
+    candidates (N, D). Returns scores (N,) = candidate · user-tower output.
+    """
+    dense_v = mlp_apply(params["bot"], batch["query_dense"], act=jax.nn.relu,
+                        final_act=jax.nn.relu)
+    sparse_v = jax.vmap(
+        lambda t, i, m: embedding_bag(t, i, m, use_kernel=False),
+        in_axes=(0, 1, 1), out_axes=1,
+    )(params["tables"], batch["query_sparse_idx"], batch["query_sparse_mask"])
+    user = dense_v[0] + sparse_v[0].mean(axis=0)  # (D,) pooled user tower
+    return batch["candidates"] @ user

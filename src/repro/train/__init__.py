@@ -1,0 +1,12 @@
+"""Training substrate: optimizer, loop, checkpointing, fault tolerance."""
+from repro.train.adamw import AdamW, AdamWState
+from repro.train.loop import make_train_step, TrainLoop, LoopConfig
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import token_batches, gnn_batches, dlrm_batches
+
+__all__ = [
+    "AdamW", "AdamWState",
+    "make_train_step", "TrainLoop", "LoopConfig",
+    "CheckpointManager",
+    "token_batches", "gnn_batches", "dlrm_batches",
+]

@@ -1,0 +1,63 @@
+"""AdamW (decoupled weight decay) as pure pytree ops.
+
+Optimizer state shardings follow the param shardings leaf-for-leaf (FSDP:
+the m/v moments inherit the 'fsdp'-sharded layout automatically under pjit,
+which is what makes the memory math of §Dry-run work)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    count: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def schedule(self, step: jnp.ndarray) -> jnp.ndarray:
+        warm = jnp.minimum(step.astype(jnp.float32) / max(self.warmup_steps, 1), 1.0)
+        return self.lr * warm
+
+    def update(self, grads, state: AdamWState, params):
+        # global-norm clip
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+        count = state.count + 1
+        lr = self.schedule(count)
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        new_m = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g, state.m, grads)
+        new_v = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g, state.v, grads)
+
+        def step_fn(p, m, v):
+            upd = (m / b1c) / (jnp.sqrt(v / b2c) + self.eps)
+            return (p.astype(jnp.float32) - lr * (upd + self.weight_decay * p.astype(jnp.float32))).astype(p.dtype)
+
+        new_params = jax.tree.map(step_fn, params, new_m, new_v)
+        return new_params, AdamWState(m=new_m, v=new_v, count=count), gnorm

@@ -1,0 +1,118 @@
+"""Atomic, mesh-agnostic checkpointing.
+
+Checkpoints are written as a flat npz (one entry per pytree path) plus a
+json manifest with step, wall time and a content digest; writes go to a
+temp file and are renamed into place (atomic on POSIX), so a process killed
+mid-save can never corrupt the restore path. Arrays are pulled to host
+first, which makes checkpoints mesh-agnostic: restoring onto a different
+mesh size (elastic rescale) is just device_put with the new shardings
+(train/elastic.py)."""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.dir = directory
+        self.keep_n = keep_n
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, payload: dict) -> str:
+        """payload: {"state": pytree, "step": int, ...extra json-ables}."""
+        flat = _flatten(payload["state"])
+        tmp = os.path.join(self.dir, f".tmp_{step}_{os.getpid()}.npz")
+        final = os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, final)  # atomic
+        digest = hashlib.sha256()
+        with open(final, "rb") as f:
+            for chunk in iter(lambda: f.read(1 << 20), b""):
+                digest.update(chunk)
+        manifest = {
+            "step": int(step),
+            "time": time.time(),
+            "file": os.path.basename(final),
+            "sha256": digest.hexdigest(),
+            "n_arrays": len(flat),
+        }
+        mtmp = os.path.join(self.dir, f".tmp_manifest_{step}.json")
+        with open(mtmp, "w") as f:
+            json.dump(manifest, f)
+        os.replace(mtmp, os.path.join(self.dir, f"ckpt_{step:08d}.json"))
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep_n]:
+            for ext in ("npz", "json"):
+                try:
+                    os.remove(os.path.join(self.dir, f"ckpt_{s:08d}.{ext}"))
+                except FileNotFoundError:
+                    pass
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("ckpt_") and name.endswith(".json"):
+                steps.append(int(name[5:13]))
+        return sorted(steps)
+
+    def restore(self, step: int, template=None) -> dict | None:
+        path = os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+        mpath = os.path.join(self.dir, f"ckpt_{step:08d}.json")
+        if not (os.path.exists(path) and os.path.exists(mpath)):
+            return None
+        with open(mpath) as f:
+            manifest = json.load(f)
+        digest = hashlib.sha256()
+        with open(path, "rb") as f:
+            for chunk in iter(lambda: f.read(1 << 20), b""):
+                digest.update(chunk)
+        if digest.hexdigest() != manifest["sha256"]:
+            return None  # corrupted: caller falls back to an older step
+        data = dict(np.load(path))
+        if template is not None:
+            state = self._unflatten_like(template, data)
+        else:
+            state = data
+        return {"state": state, "step": manifest["step"]}
+
+    def restore_latest(self, template=None) -> dict | None:
+        for step in reversed(self.all_steps()):
+            out = self.restore(step, template)
+            if out is not None:
+                return out
+        return None
+
+    @staticmethod
+    def _unflatten_like(template, flat: dict[str, np.ndarray]):
+        paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for path, leaf in paths:
+            key = "/".join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+            )
+            arr = flat[key]
+            leaves.append(np.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape))
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,57 @@
+"""Deterministic synthetic data pipelines (host-side, per-shard aware).
+
+Real deployments swap these for file readers; the contract (an iterator of
+device-ready dict batches, seeded per (epoch, step, shard) so restarts and
+elastic rescales replay identically) is what the loop depends on."""
+from __future__ import annotations
+
+from collections.abc import Iterator
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def token_batches(
+    vocab: int, batch: int, seq: int, *, seed: int = 0, steps: int | None = None,
+    shard: int = 0, n_shards: int = 1,
+) -> Iterator[dict]:
+    """Zipf-ish synthetic token stream (power-law unigram — cheap stand-in
+    with a realistic softmax loss landscape)."""
+    step = 0
+    probs = 1.0 / np.arange(1, vocab + 1) ** 1.1
+    probs /= probs.sum()
+    while steps is None or step < steps:
+        rng = np.random.default_rng((seed, step, shard))
+        toks = rng.choice(vocab, size=(batch // n_shards, seq + 1), p=probs)
+        yield {
+            "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+        }
+        step += 1
+
+
+def gnn_batches(
+    smoke_batch_fn, *, seed: int = 0, steps: int | None = None
+) -> Iterator[dict]:
+    step = 0
+    while steps is None or step < steps:
+        yield smoke_batch_fn(seed + step)
+        step += 1
+
+
+def dlrm_batches(
+    cfg, batch: int, *, seed: int = 0, steps: int | None = None
+) -> Iterator[dict]:
+    step = 0
+    while steps is None or step < steps:
+        rng = np.random.default_rng((seed, step))
+        m = cfg.multi_hot
+        yield {
+            "dense": jnp.asarray(rng.standard_normal((batch, cfg.n_dense)), jnp.float32),
+            "sparse_idx": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (batch, cfg.n_sparse, m)), jnp.int32
+            ),
+            "sparse_mask": jnp.ones((batch, cfg.n_sparse, m), jnp.float32),
+            "labels": jnp.asarray(rng.integers(0, 2, batch), jnp.int32),
+        }
+        step += 1

@@ -1,0 +1,34 @@
+"""Elastic rescaling: move a checkpointed state onto a different mesh.
+
+Checkpoints are host-numpy (mesh-agnostic); rescaling = rebuilding the
+shardings for the new mesh from the same logical rules and device_put-ing.
+Supports both shrink (node loss: 2x16x16 -> 16x16) and grow. Batch-size
+invariance across rescale is the data pipeline's job (global batch fixed,
+per-shard batch = global / n_dp_shards)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import ShardingRules, param_shardings
+
+
+def reshard_state(state, rules: ShardingRules, new_mesh: Mesh):
+    """state: host-numpy pytree (from CheckpointManager.restore). Returns the
+    same pytree placed on `new_mesh` under `rules`."""
+    shardings = param_shardings(rules, new_mesh, state)
+    return jax.tree.map(jax.device_put, state, shardings)
+
+
+def dp_degree(mesh: Mesh) -> int:
+    size = 1
+    for name in ("pod", "data"):
+        if name in mesh.axis_names:
+            size *= mesh.shape[name]
+    return size
+
+
+def per_shard_batch(global_batch: int, mesh: Mesh) -> int:
+    dp = dp_degree(mesh)
+    assert global_batch % dp == 0, (global_batch, dp)
+    return global_batch // dp

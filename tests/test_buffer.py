@@ -1,0 +1,122 @@
+"""Bucket priority queue (paper Alg. 2) vs oracle; VectorBuffer parity."""
+import heapq
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buffer import BucketPQ, VectorBuffer
+
+
+@st.composite
+def op_sequences(draw):
+    """Random insert / increase_key / extract_max traces with monotone keys."""
+    n_ops = draw(st.integers(5, 60))
+    ops = []
+    alive: dict[int, float] = {}
+    next_id = 0
+    for _ in range(n_ops):
+        choice = draw(st.integers(0, 2))
+        if choice == 0 or not alive:
+            s = draw(st.floats(0, 1, allow_nan=False))
+            ops.append(("insert", next_id, s))
+            alive[next_id] = s
+            next_id += 1
+        elif choice == 1:
+            v = draw(st.sampled_from(sorted(alive)))
+            s = min(alive[v] + draw(st.floats(0, 0.5, allow_nan=False)), 1.0)
+            ops.append(("increase", v, s))
+            alive[v] = s
+        else:
+            ops.append(("extract", None, None))
+            if alive:
+                # oracle removes *a* max-bucket element; id decided at runtime
+                pass
+    return ops
+
+
+@given(op_sequences())
+@settings(max_examples=80, deadline=None)
+def test_bucket_pq_matches_oracle_keys(ops):
+    """extract_max must always return an element of the max bucket, and
+    sizes/membership must track exactly."""
+    pq = BucketPQ(s_max=1.0, disc_factor=100)
+    oracle: dict[int, int] = {}  # id -> bucket key
+    for op, v, s in ops:
+        if op == "insert":
+            pq.insert(v, s)
+            oracle[v] = pq.idx(s)
+        elif op == "increase":
+            if v in oracle:
+                pq.increase_key(v, s)
+                oracle[v] = max(oracle[v], pq.idx(s))
+        else:
+            if not oracle:
+                continue
+            got = pq.extract_max()
+            assert got in oracle
+            assert oracle[got] == max(oracle.values())
+            oracle.pop(got)
+        assert len(pq) == len(oracle)
+    while len(pq):
+        got = pq.extract_max()
+        assert oracle[got] == max(oracle.values())
+        oracle.pop(got)
+    assert not oracle
+
+
+def test_bucket_pq_lifo_tiebreak():
+    pq = BucketPQ(s_max=1.0, disc_factor=10)
+    pq.insert(1, 0.5)
+    pq.insert(2, 0.5)
+    pq.insert(3, 0.5)
+    assert pq.extract_max() == 3  # LIFO within a bucket
+    assert pq.extract_max() == 2
+    pq.insert(4, 0.5)
+    assert pq.extract_max() == 4
+
+
+def test_bucket_pq_increase_key_moves_bucket():
+    pq = BucketPQ(s_max=1.0, disc_factor=10)
+    for i, s in enumerate([0.1, 0.2, 0.3]):
+        pq.insert(i, s)
+    pq.increase_key(0, 0.9)
+    assert pq.extract_max() == 0
+    assert pq.extract_max() == 2
+    assert pq.extract_max() == 1
+    assert len(pq) == 0
+
+
+def test_vector_buffer_matches_bucket_pq_simple():
+    """With unique buckets and no mid-bucket swaps the orders must match."""
+    scores = [0.11, 0.52, 0.33, 0.74, 0.25, 0.96, 0.47, 0.68]
+    pq = BucketPQ(1.0, 100)
+    vb = VectorBuffer(len(scores), 1.0, 100)
+    for i, s in enumerate(scores):
+        pq.insert(i, s)
+    vb.insert_many(np.arange(len(scores)), np.array(scores))
+    order_pq = [pq.extract_max() for _ in range(len(scores))]
+    order_vb = list(vb.evict(len(scores)))
+    assert order_pq == order_vb
+
+
+def test_vector_buffer_tie_stamps():
+    vb = VectorBuffer(4, 1.0, 100)
+    vb.insert_many(np.array([0, 1, 2]), np.array([0.5, 0.5, 0.5]))
+    assert list(vb.evict(3)) == [2, 1, 0]  # LIFO like the bucket PQ
+
+
+def test_vector_buffer_update_scores_monotone_guard():
+    vb = VectorBuffer(3, 1.0, 100)
+    vb.insert_many(np.array([0, 1]), np.array([0.9, 0.1]))
+    vb.update_scores(np.array([0]), np.array([0.2]))  # decrease ignored
+    assert list(vb.evict(1)) == [0]
+
+
+def test_vector_buffer_wave_eviction():
+    vb = VectorBuffer(10, 1.0, 1000)
+    scores = np.linspace(0.05, 0.95, 10)
+    vb.insert_many(np.arange(10), scores)
+    top3 = list(vb.evict(3))
+    assert top3 == [9, 8, 7]
+    assert len(vb) == 7

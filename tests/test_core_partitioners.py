@@ -1,0 +1,150 @@
+"""System invariants of every partitioner + paper-claim direction checks."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs import (
+    rmat_graph, grid_mesh_graph, sbm_graph, star_graph, random_order, apply_order,
+)
+from repro.core import (
+    BuffCutConfig, CuttanaConfig, MultilevelConfig,
+    buffcut_partition, heistream_partition, cuttana_partition,
+    fennel_partition, ldg_partition, restream,
+    buffcut_partition_vectorized, buffcut_partition_pipelined,
+    cut_ratio, is_balanced, balance, edge_cut, block_loads,
+)
+
+
+def _cfg(g, k=8, **kw):
+    base = dict(
+        k=k, buffer_size=max(g.n // 8, 16), batch_size=max(g.n // 16, 8),
+        d_max=max(g.n / 8, 32),
+    )
+    base.update(kw)
+    return BuffCutConfig(**base)
+
+
+PARTITIONERS = {
+    "buffcut": lambda g, cfg: buffcut_partition(g, cfg)[0],
+    "heistream": lambda g, cfg: heistream_partition(g, cfg)[0],
+    "cuttana": lambda g, cfg: cuttana_partition(
+        g, CuttanaConfig(k=cfg.k, buffer_size=cfg.buffer_size,
+                         batch_size=cfg.batch_size, d_max=cfg.d_max)
+    )[0],
+    "fennel": lambda g, cfg: fennel_partition(g, cfg.k, cfg.eps),
+    "ldg": lambda g, cfg: ldg_partition(g, cfg.k, cfg.eps),
+    "vectorized": lambda g, cfg: buffcut_partition_vectorized(g, cfg, wave=8, chunk=8)[0],
+    "pipelined": lambda g, cfg: buffcut_partition_pipelined(g, cfg)[0],
+}
+
+
+@pytest.mark.parametrize("name", sorted(PARTITIONERS))
+def test_partitioner_invariants(name, random_grid):
+    """Every node assigned exactly once; balance cap respected; k blocks."""
+    g = random_grid
+    cfg = _cfg(g)
+    block = PARTITIONERS[name](g, cfg)
+    assert block.shape == (g.n,)
+    assert (block >= 0).all() and (block < cfg.k).all()
+    assert is_balanced(g, block, cfg.k, cfg.eps), balance(g, block, cfg.k)
+    # beats random assignment on a structured graph
+    rng = np.random.default_rng(0)
+    rand_cut = cut_ratio(g, rng.integers(0, cfg.k, g.n))
+    assert cut_ratio(g, block) < rand_cut
+
+
+def test_buffcut_deterministic(random_grid):
+    g = random_grid
+    cfg = _cfg(g)
+    b1, _ = buffcut_partition(g, cfg)
+    b2, _ = buffcut_partition(g, cfg)
+    assert np.array_equal(b1, b2)
+
+
+def test_q1_equals_heistream(random_grid):
+    """Paper sanity: Q_max=1 degenerates to contiguous batches (HeiStream)."""
+    g = random_grid
+    cfg = _cfg(g, buffer_size=1)
+    bb, _ = buffcut_partition(g, cfg)
+    hh, _ = heistream_partition(g, cfg)
+    assert edge_cut(g, bb) == pytest.approx(edge_cut(g, hh))
+
+
+def test_buffer_improves_cut_under_random_order(random_grid):
+    """Paper Fig. 5 direction: larger buffer => lower cut, higher IER."""
+    g = random_grid
+    cuts, iers = [], []
+    for q in (1, g.n // 8, g.n // 3):
+        cfg = _cfg(g, buffer_size=max(q, 1))
+        cfg = BuffCutConfig(**{**cfg.__dict__, "collect_stats": True})
+        b, st = buffcut_partition(g, cfg)
+        cuts.append(edge_cut(g, b))
+        iers.append(st.mean_ier)
+    assert cuts[-1] < cuts[0]
+    assert iers[-1] > iers[0]
+
+
+def test_buffcut_beats_heistream_on_random_order(random_grid):
+    g = random_grid
+    cfg = _cfg(g)
+    bb, _ = buffcut_partition(g, cfg)
+    hh, _ = heistream_partition(g, cfg)
+    assert edge_cut(g, bb) < edge_cut(g, hh)
+
+
+def test_restream_improves(random_grid):
+    """Paper Table 2 direction: extra passes reduce cut, keep balance."""
+    g = random_grid
+    cfg = _cfg(g)
+    b0, _ = buffcut_partition(g, cfg)
+    b1 = restream(g, b0, cfg, 1)
+    assert edge_cut(g, b1) <= edge_cut(g, b0)
+    assert is_balanced(g, b1, cfg.k, cfg.eps)
+
+
+def test_hub_bypass(small_rmat):
+    """Nodes above D_max must be Fennel-assigned immediately (counted)."""
+    g = star_graph(300)
+    cfg = BuffCutConfig(k=4, buffer_size=32, batch_size=16, d_max=50,
+                        collect_stats=True)
+    block, st = buffcut_partition(g, cfg)
+    assert st.n_hubs == 1  # the star center
+    assert is_balanced(g, block, 4, cfg.eps)
+
+
+def test_vectorized_wave1_quality_parity(random_grid):
+    g = random_grid
+    cfg = _cfg(g)
+    bs, _ = buffcut_partition(g, cfg)
+    bv, _ = buffcut_partition_vectorized(g, cfg, wave=1, chunk=1)
+    # same discretized-priority policy; tie-order may differ (DESIGN.md §3)
+    assert abs(cut_ratio(g, bv) - cut_ratio(g, bs)) < 0.05
+
+
+def test_sbm_recovers_communities(small_sbm):
+    """On a well-separated SBM with k == n_blocks, cut should be far below
+    the random baseline (communities recovered)."""
+    g = small_sbm
+    cfg = _cfg(g, k=8)
+    block, _ = buffcut_partition(g, cfg)
+    rng = np.random.default_rng(0)
+    assert cut_ratio(g, block) < 0.6 * cut_ratio(g, rng.integers(0, 8, g.n))
+
+
+def test_all_scores_run(random_grid):
+    g = random_grid
+    for score in ("anr", "cbs", "haa", "nss", "cms"):
+        cfg = _cfg(g, score=score)
+        block, _ = buffcut_partition(g, cfg)
+        assert is_balanced(g, block, cfg.k, cfg.eps), score
+
+
+@given(st.integers(2, 16), st.floats(0.01, 0.2))
+@settings(max_examples=10, deadline=None)
+def test_balance_property(k, eps):
+    """Property: any k, eps -> balanced output on a fixed graph."""
+    g = grid_mesh_graph(16)
+    cfg = BuffCutConfig(k=k, eps=eps, buffer_size=32, batch_size=16, d_max=64)
+    block, _ = buffcut_partition(g, cfg)
+    assert is_balanced(g, block, k, eps)
+    assert (np.bincount(block, minlength=k) > 0).sum() >= min(k, g.n)

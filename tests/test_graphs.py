@@ -1,0 +1,142 @@
+"""Graph substrate: CSR invariants, generators, orderings, IO, locality."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs import (
+    CSRGraph, rmat_graph, rgg_graph, grid_mesh_graph, sbm_graph, ring_graph,
+    star_graph, rhg_like_graph, source_order, random_order, konect_order,
+    bfs_order, apply_order, mean_aid, write_metis, read_metis, NodeStream,
+    sample_multihop, cross_block_fraction,
+)
+
+
+@st.composite
+def edge_lists(draw):
+    n = draw(st.integers(4, 40))
+    n_e = draw(st.integers(0, 120))
+    edges = draw(
+        st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            min_size=n_e, max_size=n_e,
+        )
+    )
+    return n, np.array(edges, dtype=np.int64).reshape(-1, 2)
+
+
+@given(edge_lists())
+@settings(max_examples=50, deadline=None)
+def test_from_edges_invariants(data):
+    n, edges = data
+    g = CSRGraph.from_edges(n, edges)
+    # symmetry: (u,v) present iff (v,u) present
+    fwd = set()
+    for v in range(g.n):
+        for u in g.neighbors(v):
+            assert u != v  # no self loops
+            fwd.add((v, int(u)))
+    for u, v in fwd:
+        assert (v, u) in fwd
+    # degree sum == 2m
+    assert g.degrees.sum() == 2 * g.m
+    g.validate()
+
+
+@given(edge_lists())
+@settings(max_examples=30, deadline=None)
+def test_apply_order_preserves_structure(data):
+    n, edges = data
+    g = CSRGraph.from_edges(n, edges)
+    perm = np.random.default_rng(0).permutation(g.n)
+    g2 = apply_order(g, perm)
+    assert g2.n == g.n and g2.m == g.m
+    assert np.allclose(np.sort(g2.degrees), np.sort(g.degrees))
+
+
+def test_generators_shapes():
+    assert rmat_graph(128, 4).n == 128
+    assert grid_mesh_graph(8).n == 64
+    assert ring_graph(10).m == 10
+    assert star_graph(17).m == 16
+    assert star_graph(17).max_degree == 16
+    g = rgg_graph(200, seed=1)
+    assert g.n == 200
+    g = rhg_like_graph(256, 6, seed=2)
+    assert g.n == 256
+    g = sbm_graph(128, 4)
+    assert g.n == 128
+
+
+def test_orderings_are_permutations(small_rmat):
+    g = small_rmat
+    for fn in (source_order, lambda g: random_order(g, 1),
+               lambda g: konect_order(g, 1), bfs_order):
+        p = fn(g)
+        assert sorted(p.tolist()) == list(range(g.n))
+
+
+def test_random_order_reduces_locality(small_grid):
+    g = small_grid
+    assert mean_aid(apply_order(g, random_order(g, 5))) > mean_aid(g) * 1.5
+
+
+def test_bfs_order_high_locality(small_rmat):
+    g = small_rmat
+    gb = apply_order(g, bfs_order(g))
+    gr = apply_order(g, random_order(g, 0))
+    assert mean_aid(gb) < mean_aid(gr)
+
+
+def test_metis_roundtrip(tmp_path, small_rmat):
+    p = str(tmp_path / "g.metis")
+    write_metis(small_rmat, p)
+    g2 = read_metis(p)
+    assert g2.n == small_rmat.n and g2.m == small_rmat.m
+    assert np.array_equal(g2.indptr, small_rmat.indptr)
+    assert np.array_equal(g2.indices, small_rmat.indices)
+
+
+def test_metis_weighted_roundtrip(tmp_path):
+    edges = np.array([[0, 1], [1, 2], [0, 2]])
+    g = CSRGraph.from_edges(
+        4, edges, edge_weights=np.array([2.0, 3.0, 4.0], np.float32),
+        node_weights=np.array([1, 2, 3, 4], np.float32),
+    )
+    p = str(tmp_path / "w.metis")
+    write_metis(g, p)
+    g2 = read_metis(p)
+    assert np.allclose(g2.edge_w, g.edge_w)
+    assert np.allclose(g2.node_w, g.node_w)
+
+
+def test_node_stream(small_rmat):
+    g = small_rmat
+    seen = 0
+    for v, nbrs, w, nw in NodeStream(g):
+        assert nbrs.shape == w.shape
+        seen += 1
+    assert seen == g.n
+    chunks = list(NodeStream(g).chunks(100))
+    assert sum(c["nodes"].shape[0] for c in chunks) == g.n
+
+
+def test_ell_block(small_rmat):
+    g = small_rmat
+    nodes = np.arange(10)
+    nbr, w, mask = g.ell_block(nodes)
+    assert nbr.shape == w.shape == mask.shape
+    for i, v in enumerate(nodes):
+        true_n = set(g.neighbors(int(v)).tolist())
+        got = set(nbr[i][mask[i]].tolist())
+        assert got == true_n
+
+
+def test_sampler_partition_aware(small_grid):
+    g = small_grid
+    block = (np.arange(g.n) * 4 // g.n).astype(np.int64)  # 4 contiguous blocks
+    seeds = np.arange(0, g.n, 16)
+    biased = sample_multihop(g, seeds, (8, 4), seed=0, block_of=block)
+    plain = sample_multihop(g, seeds, (8, 4), seed=0)
+    f_biased = cross_block_fraction(g, biased, block)
+    f_plain = cross_block_fraction(g, plain, block)
+    assert f_biased <= f_plain + 0.02  # bias reduces cross-shard gathers

@@ -1,0 +1,84 @@
+"""Launch layer: HLO analysis parser, cell building on host mesh, specs."""
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import collective_bytes, _shape_bytes, RooflineTerms
+from repro.configs import ARCHS, all_cells, get_arch
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[4,8]") == 128
+    assert _shape_bytes("bf16[10]") == 20
+    assert _shape_bytes("(f32[2,2], s32[3])") == 28
+    assert _shape_bytes("pred[16]") == 16
+
+
+def test_collective_parser():
+    hlo = """
+  %ag = f32[16,128]{1,0} all-gather(%x), replica_groups=...
+  %ar.1 = (bf16[8,8]{1,0}, bf16[8,8]{1,0}) all-reduce(%a, %b), to_apply=%sum
+  %rs = f32[4]{0} reduce-scatter(%y), dimensions={0}
+  %cp = f32[2,2]{1,0} collective-permute(%z), source_target_pairs=...
+  %done = f32[16,128]{1,0} all-gather-done(%ag_start)
+  %nothing = f32[4]{0} add(%p, %q)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 128 * 4
+    assert out["all-reduce"] == 2 * 64 * 2
+    assert out["reduce-scatter"] == 16
+    assert out["collective-permute"] == 16
+    assert out["total"] == sum(
+        out[k] for k in ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute")
+    )
+
+
+def test_roofline_terms_bottleneck():
+    t = RooflineTerms(flops=197e12, hbm_bytes=1e9, coll_bytes=1e9, n_devices=256)
+    assert t.t_compute == pytest.approx(1.0)
+    assert t.bottleneck == "compute"
+    t2 = RooflineTerms(flops=1e9, hbm_bytes=819e9 * 2, coll_bytes=0, n_devices=256)
+    assert t2.bottleneck == "memory"
+
+
+def test_registry_cell_count():
+    cells = all_cells()
+    assert len(cells) == 40  # 5 LM x 4 + 4 GNN x 4 + 1 recsys x 4
+    skips = [
+        (a, s) for a, s in cells if get_arch(a).shapes[s].skip
+    ]
+    # exactly the 4 pure-full-attention long_500k cells are skipped
+    assert len(skips) == 4
+    assert all(s == "long_500k" for _, s in skips)
+    assert ("h2o-danube-1.8b", "long_500k") not in skips
+
+
+def test_input_specs_are_abstract():
+    """input_specs must never allocate: every leaf is a ShapeDtypeStruct."""
+    for arch_id, spec in ARCHS.items():
+        cfg = spec.full_config()
+        for sname, shape in spec.shapes.items():
+            if shape.skip:
+                continue
+            tree = spec.input_specs(cfg, shape)
+            for leaf in jax.tree.leaves(tree):
+                assert isinstance(leaf, jax.ShapeDtypeStruct), (arch_id, sname)
+
+
+def test_build_cell_on_host_mesh():
+    """Cells must build (not lower) against an arbitrary mesh object."""
+    from repro.launch.steps import build_cell
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cell = build_cell("graphsage-reddit", "molecule", mesh)
+    assert cell.kind == "train"
+    assert cell.model_flops > 0
+    cell2 = build_cell("llama4-scout-17b-a16e", "long_500k", mesh)
+    assert cell2.skip  # documented inapplicability
+
+
+def test_production_mesh_requires_512_devices():
+    from repro.launch.mesh import make_production_mesh
+    if len(jax.devices()) < 512:
+        with pytest.raises(Exception):
+            make_production_mesh()

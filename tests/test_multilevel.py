@@ -1,0 +1,143 @@
+"""Multilevel batch partitioner: coarsening, model graph, refinement."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs import grid_mesh_graph, rmat_graph, sbm_graph
+from repro.core.fennel import FennelParams
+from repro.core.batch_model import build_batch_model
+from repro.core.multilevel import (
+    MultilevelConfig, multilevel_partition, lp_cluster, contract,
+    initial_fennel, lp_refine,
+)
+from repro.core.metrics import edge_cut, block_loads
+
+
+def _params(g, k=4, eps=0.1):
+    return FennelParams(k=k, n_total=float(g.node_w.sum()),
+                        m_total=g.total_edge_weight(), eps=eps)
+
+
+def test_batch_model_structure(small_rmat):
+    g = small_rmat
+    k = 4
+    block = np.full(g.n, -1, dtype=np.int64)
+    block[:100] = np.arange(100) % k  # first 100 assigned
+    batch = np.arange(120, 180)
+    model = build_batch_model(g, batch, block, k)
+    assert model.graph.n == batch.size + k
+    assert (model.pinned_block[: batch.size] == -1).all()
+    assert np.array_equal(model.pinned_block[batch.size:], np.arange(k))
+    # aux node weights are zero (loads tracked separately)
+    assert np.allclose(model.graph.node_w[batch.size:], 0.0)
+    # internal edge weight == edges among batch nodes in g
+    in_b = np.zeros(g.n, bool)
+    in_b[batch] = True
+    expected = sum(
+        w for v in batch for u, w in zip(g.neighbors(int(v)), g.neighbor_weights(int(v)))
+        if in_b[u] and int(v) < u
+    )
+    got = 0.0
+    for i in range(batch.size):
+        for u, w in zip(model.graph.neighbors(i), model.graph.neighbor_weights(i)):
+            if u < batch.size and i < u:
+                got += w
+    assert got == pytest.approx(expected)
+    # aux edge weight for node v to block p == assigned-nbr weight in p
+    for i, v in enumerate(batch[:10]):
+        conn = np.zeros(k)
+        for u, w in zip(g.neighbors(int(v)), g.neighbor_weights(int(v))):
+            if block[u] >= 0:
+                conn[block[u]] += w
+        model_conn = np.zeros(k)
+        for u, w in zip(model.graph.neighbors(i), model.graph.neighbor_weights(i)):
+            if u >= batch.size:
+                model_conn[u - batch.size] += w
+        assert np.allclose(model_conn, conn)
+
+
+def test_lp_cluster_respects_pins_and_caps(small_grid):
+    g = small_grid
+    pinned = np.full(g.n, -1, dtype=np.int64)
+    pinned[:4] = np.arange(4)
+    cap = 10.0
+    cluster = lp_cluster(g, pinned, cap, iters=3, rng=np.random.default_rng(0))
+    # pinned nodes stay singletons
+    for v in range(4):
+        assert cluster[v] == v
+        assert (cluster[4:] != v).all()
+    # cluster weights within cap
+    sizes = np.bincount(cluster, minlength=g.n).astype(float)
+    assert sizes.max() <= cap + 1e-6
+
+
+def test_contract_preserves_total_edge_weight(small_grid):
+    g = small_grid
+    pinned = np.full(g.n, -1, dtype=np.int64)
+    cluster = lp_cluster(g, pinned, 8.0, 2, np.random.default_rng(0))
+    cg, cpin, node_map = contract(g, cluster, pinned)
+    # total weight = internal (dropped) + kept; kept equals cross-cluster
+    src = np.repeat(np.arange(g.n), np.diff(g.indptr))
+    dst = g.indices
+    cross = cluster[src] != cluster[dst]
+    assert cg.total_edge_weight() == pytest.approx(g.edge_w[cross].sum() / 2)
+    assert cg.node_w.sum() == pytest.approx(g.node_w.sum())
+
+
+def test_multilevel_balanced_and_better_than_random(small_grid):
+    g = small_grid
+    k = 4
+    p = _params(g, k)
+    pinned = np.full(g.n, -1, dtype=np.int64)
+    labels = multilevel_partition(g, pinned, p, np.zeros(k), MultilevelConfig())
+    assert (labels >= 0).all() and (labels < k).all()
+    loads = np.bincount(labels, weights=g.node_w, minlength=k)
+    assert loads.max() <= p.cap + 1e-6
+    rng = np.random.default_rng(0)
+    assert edge_cut(g, labels) < edge_cut(g, rng.integers(0, k, g.n))
+
+
+def test_multilevel_respects_existing_loads(small_grid):
+    """With block 0 nearly full, new nodes must flow to other blocks.
+
+    n_total must include the pre-existing load (as the streaming driver's
+    FennelParams always does — it is the FULL graph weight)."""
+    g = small_grid
+    k = 4
+    preload = 100.0
+    p = FennelParams(
+        k=k, n_total=float(g.node_w.sum()) + preload,
+        m_total=g.total_edge_weight(), eps=0.05,
+    )
+    pinned = np.full(g.n, -1, dtype=np.int64)
+    loads = np.zeros(k)
+    loads[0] = preload
+    labels = multilevel_partition(g, pinned, p, loads, MultilevelConfig())
+    new_in_0 = g.node_w[labels == 0].sum()
+    assert loads[0] + new_in_0 <= p.cap + 1e-6
+
+
+def test_lp_refine_monotone(small_grid):
+    g = small_grid
+    k = 4
+    p = _params(g, k)
+    rng = np.random.default_rng(1)
+    labels = rng.integers(0, k, g.n)
+    pinned = np.full(g.n, -1, dtype=np.int64)
+    loads = np.bincount(labels, weights=g.node_w, minlength=k).astype(np.float64)
+    before = edge_cut(g, labels)
+    refined, _ = lp_refine(g, labels, pinned, p, loads, rounds=4)
+    assert edge_cut(g, refined) <= before
+
+
+@given(st.integers(2, 8), st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_multilevel_property(k, seed):
+    g = rmat_graph(128, 6, seed=seed % 97)
+    p = _params(g, k)
+    pinned = np.full(g.n, -1, dtype=np.int64)
+    labels = multilevel_partition(g, pinned, p, np.zeros(k),
+                                  MultilevelConfig(seed=seed))
+    assert (labels >= 0).all() and (labels < k).all()
+    loads = np.bincount(labels, weights=g.node_w, minlength=k)
+    assert loads.max() <= p.cap + 1e-6
