@@ -1,0 +1,190 @@
+"""Hot-path microbenchmarks: histogram inner op, eviction scaling, e2e driver.
+
+Tracks the de-quadratized assignment-side inner loops from PR 1 onward
+(EXPERIMENTS.md §Hotpath):
+
+  histogram — the multilevel inner op (neighbor-label aggregation + per-node
+      best-move selection) as lp_cluster runs it: the seed's argsort+lexsort
+      formulation vs the O(m) engine (core/histogram.py).  `round0` is the
+      labels-all-distinct shape every level starts with (the dominant cost);
+      `mid` is a mid-coarsening shape with L=256 live labels.
+  evict — VectorBuffer.evict wall time at fixed buffer occupancy across
+      graph sizes n.  The incremental engine must stay flat in n; the seed
+      `scan` engine rescans all n slots per wave.
+  e2e — the full vectorized BuffCut driver.
+
+Usage:  python benchmarks/bench_hotpath.py [--smoke] [--out PATH]
+Emits BENCH_hotpath.json (repo root by default).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.graphs import rmat_graph  # noqa: E402
+from repro.core import BuffCutConfig, cut_ratio  # noqa: E402
+from repro.core.buffer import VectorBuffer  # noqa: E402
+from repro.core.histogram import (  # noqa: E402
+    best_label_per_src,
+    neighbor_label_weights,
+    sorted_neighbor_label_weights,
+)
+from repro.core.vector_stream import buffcut_partition_vectorized  # noqa: E402
+
+
+def _best_of(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# ------------------------------------------------------------- histogram
+
+def _seed_inner_op(g, labels):
+    """Seed lp_cluster inner op: argsort aggregation + lexsort best-move."""
+    src, lab, wsum = sorted_neighbor_label_weights(g, labels)
+    valid = lab != labels[src]
+    src, lab, wsum = src[valid], lab[valid], wsum[valid]
+    order = np.lexsort((lab, -wsum, src))
+    first = np.ones(order.shape[0], dtype=bool)
+    first[1:] = src[order][1:] != src[order][:-1]
+    sel = order[first]
+    return src[sel], lab[sel], wsum[sel]
+
+
+def _new_inner_op(g, labels):
+    src, lab, wsum = neighbor_label_weights(g, labels)
+    keep = lab != labels[src]
+    return best_label_per_src(src[keep], lab[keep], wsum[keep], g.n)
+
+
+def bench_histogram(smoke: bool) -> dict:
+    n, deg = (4096, 8) if smoke else (65536, 16)
+    reps = 3 if smoke else 5
+    g = rmat_graph(n, deg, seed=1)
+    rng = np.random.default_rng(0)
+    shapes = {
+        "round0": rng.permutation(g.n).astype(np.int64),
+        "mid": rng.integers(0, min(256, g.n // 4), g.n),
+    }
+    out = {"n": g.n, "directed_edges": int(g.indices.size), "shapes": {}}
+    for name, labels in shapes.items():
+        a = _seed_inner_op(g, labels)
+        b = _new_inner_op(g, labels)
+        assert np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
+        np.testing.assert_allclose(a[2], b[2], rtol=1e-9)
+        t_seed = _best_of(lambda: _seed_inner_op(g, labels), reps)
+        t_new = _best_of(lambda: _new_inner_op(g, labels), reps)
+        out["shapes"][name] = {
+            "seed_ms": t_seed * 1e3,
+            "new_ms": t_new * 1e3,
+            "speedup": t_seed / t_new,
+        }
+    out["speedup"] = out["shapes"]["round0"]["speedup"]  # headline: the
+    # labels-all-distinct shape every LP level starts from
+    return out
+
+
+# ----------------------------------------------------------------- evict
+
+def bench_evict(smoke: bool) -> dict:
+    sizes = [10_000, 100_000] if smoke else [10_000, 100_000, 1_000_000]
+    # occupancy stays full-size even in smoke: the CI gate asserts the
+    # flatness ratio, which needs a milliseconds-scale timed region (64
+    # evictions), not microseconds of noise
+    occupancy = 4096
+    wave = 64
+    reps = 3 if smoke else 5
+    out = {"occupancy": occupancy, "wave": wave, "per_n": {}}
+    for n in sizes:
+        row = {}
+        for engine in ("scan", "incremental"):
+            rng = np.random.default_rng(0)
+            ids = rng.choice(n, size=occupancy, replace=False)
+            scores = rng.random(occupancy)
+            best = float("inf")
+            for _ in range(reps):
+                # setup (O(n) allocation + inserts) stays outside the timer:
+                # the claim under test is the eviction cost itself
+                vb = VectorBuffer(n, 1.0, 1000, engine=engine)
+                vb.insert_many(ids, scores)
+                t0 = time.perf_counter()
+                while len(vb):
+                    vb.evict(wave)
+                best = min(best, time.perf_counter() - t0)
+            row[engine] = {"us_per_evict": best / (occupancy / wave) * 1e6}
+        out["per_n"][str(n)] = row
+    inc = [out["per_n"][str(n)]["incremental"]["us_per_evict"] for n in sizes]
+    scn = [out["per_n"][str(n)]["scan"]["us_per_evict"] for n in sizes]
+    out["incremental_flatness"] = max(inc) / min(inc)  # ~1.0 == n-independent
+    out["scan_growth"] = max(scn) / min(scn)
+    return out
+
+
+# ------------------------------------------------------------------- e2e
+
+def bench_e2e(smoke: bool) -> dict:
+    n, deg = (2048, 8) if smoke else (32768, 8)
+    g = rmat_graph(n, deg, seed=2)
+    cfg = BuffCutConfig(
+        k=16,
+        buffer_size=max(g.n // 8, 64),
+        batch_size=max(g.n // 32, 32),
+        d_max=max(g.n / 16, 64.0),
+    )
+    out = {"n": g.n, "directed_edges": int(g.indices.size), "engines": {}}
+    for engine in ("scan", "incremental"):
+        t0 = time.perf_counter()
+        block, stats = buffcut_partition_vectorized(
+            g, cfg, wave=32, chunk=32, engine=engine
+        )
+        dt = time.perf_counter() - t0
+        out["engines"][engine] = {
+            "runtime_s": dt,
+            "cut_ratio": cut_ratio(g, block),
+        }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized quick run")
+    ap.add_argument(
+        "--out",
+        default=str(Path(__file__).resolve().parent.parent / "BENCH_hotpath.json"),
+    )
+    args = ap.parse_args()
+    report = {
+        "bench": "hotpath",
+        "smoke": args.smoke,
+        "histogram": bench_histogram(args.smoke),
+        "evict": bench_evict(args.smoke),
+        "e2e": bench_e2e(args.smoke),
+    }
+    Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+    h, e = report["histogram"], report["evict"]
+    print(f"histogram inner op speedup (round0): {h['speedup']:.1f}x")
+    for name, row in h["shapes"].items():
+        print(f"  {name:>7}: seed {row['seed_ms']:8.2f} ms  new {row['new_ms']:8.2f} ms  ({row['speedup']:.1f}x)")
+    print(f"evict flatness (incremental, max/min over n): {e['incremental_flatness']:.2f}")
+    print(f"evict growth   (scan baseline):               {e['scan_growth']:.2f}")
+    for n, row in e["per_n"].items():
+        print(f"  n={n:>8}: scan {row['scan']['us_per_evict']:8.1f} us/evict"
+              f"  incremental {row['incremental']['us_per_evict']:8.1f} us/evict")
+    for engine, row in report["e2e"]["engines"].items():
+        print(f"e2e {engine:>11}: {row['runtime_s']:.2f} s  cut_ratio {row['cut_ratio']:.4f}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

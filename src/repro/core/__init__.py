@@ -10,6 +10,13 @@ from repro.core.metrics import (
 )
 from repro.core.scores import ScoreSpec, get_score, ANR, CBS, HAA, NSS, CMS
 from repro.core.buffer import BucketPQ, VectorBuffer
+from repro.core.rescore import RescoreState, weighted_degrees
+from repro.core.histogram import (
+    neighbor_label_weights,
+    sorted_neighbor_label_weights,
+    label_histogram_ell,
+    best_label_per_src,
+)
 from repro.core.fennel import (
     FennelParams,
     fennel_partition,
@@ -30,6 +37,9 @@ __all__ = [
     "internal_edge_ratio",
     "ScoreSpec", "get_score", "ANR", "CBS", "HAA", "NSS", "CMS",
     "BucketPQ", "VectorBuffer",
+    "RescoreState", "weighted_degrees",
+    "neighbor_label_weights", "sorted_neighbor_label_weights",
+    "label_histogram_ell", "best_label_per_src",
     "FennelParams", "fennel_partition", "ldg_partition", "fennel_choose",
     "BatchModel", "build_batch_model",
     "MultilevelConfig", "multilevel_partition",

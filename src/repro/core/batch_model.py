@@ -41,14 +41,12 @@ def build_batch_model(
     local_of = np.full(g.n, -1, dtype=np.int64)
     local_of[batch] = np.arange(b)
 
-    # gather all incident edges of batch nodes
+    # gather all incident edges of batch nodes (one vectorized CSR slice)
     degs = (g.indptr[batch + 1] - g.indptr[batch]).astype(np.int64)
     src_l = np.repeat(np.arange(b, dtype=np.int64), degs)
-    gather = np.concatenate(
-        [np.arange(g.indptr[v], g.indptr[v + 1]) for v in batch]
-    ) if b else np.empty(0, dtype=np.int64)
-    dst_g = g.indices[gather].astype(np.int64) if b else np.empty(0, dtype=np.int64)
-    w = g.edge_w[gather] if b else np.empty(0, dtype=np.float32)
+    gather = g.slice_indices(batch)
+    dst_g = g.indices[gather].astype(np.int64)
+    w = g.edge_w[gather]
 
     dst_l = local_of[dst_g]
     internal = dst_l >= 0

@@ -18,6 +18,7 @@ import numpy as np
 from repro.graphs.csr import CSRGraph
 from repro.graphs.stream import NodeStream
 from repro.core.buffer import BucketPQ
+from repro.core.rescore import RescoreState
 from repro.core.scores import ScoreSpec, get_score
 from repro.core.fennel import FennelParams, fennel_choose
 from repro.core.batch_model import build_batch_model
@@ -58,68 +59,32 @@ class StreamStats:
         return float(np.mean(self.ier_per_batch)) if self.ier_per_batch else 0.0
 
 
-class _State:
-    """Per-stream incremental counters feeding the buffer scores."""
+class _State(RescoreState):
+    """Per-stream counters (core/rescore.py) with BucketPQ-mirrored
+    membership: the drivers flip `member` at insert/extract so every bump
+    is one batched CSR-slice pass instead of a per-edge Python loop."""
 
-    def __init__(self, g: CSRGraph, spec: ScoreSpec, k: int):
-        n = g.n
-        self.g = g
-        self.spec = spec
-        self.assigned_w = np.zeros(n, dtype=np.float64)   # assigned-or-batched nbr weight
-        self.deg_w = np.zeros(n, dtype=np.float64)
-        for v in range(n):
-            self.deg_w[v] = g.neighbor_weights(v).sum()
-        self.buffered_w = np.zeros(n, dtype=np.float64) if spec.needs_buffered_count else None
-        self.blk_cnt: dict[int, np.ndarray] | None = {} if spec.needs_block_counts else None
-        self.cmax = np.zeros(n, dtype=np.float64) if spec.needs_block_counts else None
-        self.k = k
 
-    def score(self, v: int) -> float:
-        q = self.buffered_w[v] if self.buffered_w is not None else 0.0
-        cm = self.cmax[v] if self.cmax is not None else 0.0
-        return float(self.spec(self.assigned_w[v], self.deg_w[v], q, cm))
+def _apply(pq: BucketPQ, touched: np.ndarray, scores: np.ndarray) -> None:
+    """Forward batched rescores to the PQ in CSR (first-occurrence) order —
+    the same IncreaseKey sequence the per-edge loop produced."""
+    for w_, s in zip(touched.tolist(), scores.tolist()):
+        pq.increase_key(w_, s)
 
 
 def _bump_assigned(st: _State, pq: BucketPQ, u: int, was_buffered: bool) -> None:
     """Node u became assigned-or-batched: rescore its buffered neighbors."""
-    g = st.g
-    for w_, ew in zip(g.neighbors(u), g.neighbor_weights(u)):
-        w_ = int(w_)
-        if w_ in pq:
-            st.assigned_w[w_] += ew
-            if was_buffered and st.buffered_w is not None:
-                st.buffered_w[w_] -= ew
-            pq.increase_key(w_, st.score(w_))
+    _apply(pq, *st.bump_assigned(np.array([u], dtype=np.int64), was_buffered))
 
 
 def _bump_block_counts(st: _State, pq: BucketPQ, u: int, blk: int) -> None:
     """CMS only: u got a *concrete* block; update buffered nbr majorities."""
-    if st.blk_cnt is None:
-        return
-    g = st.g
-    for w_, ew in zip(g.neighbors(u), g.neighbor_weights(u)):
-        w_ = int(w_)
-        if w_ in pq:
-            cnt = st.blk_cnt.setdefault(w_, np.zeros(st.k, dtype=np.float64))
-            cnt[blk] += ew
-            if cnt[blk] > st.cmax[w_]:
-                st.cmax[w_] = cnt[blk]
-                pq.increase_key(w_, st.score(w_))
+    _apply(pq, *st.bump_block_counts(u, blk))
 
 
 def _bump_buffered(st: _State, pq: BucketPQ, v: int) -> None:
     """NSS only: v entered the buffer; count mutual buffered neighbors."""
-    if st.buffered_w is None:
-        return
-    g = st.g
-    total = 0.0
-    for w_, ew in zip(g.neighbors(v), g.neighbor_weights(v)):
-        w_ = int(w_)
-        if w_ in pq and w_ != v:
-            st.buffered_w[w_] += ew
-            pq.increase_key(w_, st.score(w_))
-            total += ew
-    st.buffered_w[v] = total
+    _apply(pq, *st.bump_buffered(np.array([v], dtype=np.int64)))
 
 
 def buffcut_partition(
@@ -156,15 +121,15 @@ def buffcut_partition(
             )
         stats.n_batches += 1
         # CMS: buffered neighbors now see concrete blocks
-        if st.blk_cnt is not None:
+        if st.blk_w is not None:
             for u, b_ in zip(bnodes, labels[: bnodes.shape[0]]):
                 _bump_block_counts(st, pq, int(u), int(b_))
         batch.clear()
 
     def evict_one() -> None:
         u = pq.extract_max()
-        if st.blk_cnt is not None:
-            st.blk_cnt.pop(u, None)
+        st.member[u] = False
+        st.drop_block_counts(u)
         batch.append(u)
         if cfg.collect_stats:
             stats.evictions.append(u)
@@ -184,6 +149,7 @@ def buffcut_partition(
         else:
             _bump_buffered(st, pq, v)
             pq.insert(v, st.score(v))
+            st.member[v] = True
             if cfg.collect_stats:
                 stats.peak_mem_items = max(stats.peak_mem_items, len(pq) + len(batch))
         while len(pq) >= cfg.buffer_size and len(batch) < cfg.batch_size:

@@ -20,8 +20,33 @@ from __future__ import annotations
 import numpy as np
 
 
+def _select_top(comp: np.ndarray, wave: int) -> np.ndarray:
+    """Indices of the `wave` largest composite keys, descending.
+
+    The composite keys are unique (stamps are globally unique), so this is
+    a total order — the single tie-break policy both eviction engines share
+    and the engine-equivalence tests pin down."""
+    if wave < comp.size:
+        part = np.argpartition(comp, comp.size - wave)[comp.size - wave :]
+    else:
+        part = np.arange(comp.size)
+    return part[np.argsort(comp[part], kind="stable")[::-1]]
+
+
 class BucketPQ:
-    """Paper Algorithm 2. Keys are discretized scores; ties break LIFO."""
+    """Paper Algorithm 2. Keys are discretized scores; ties break LIFO.
+
+    Middle-of-bucket removal (IncreaseKey moving a node up) tombstones the
+    vacated slot instead of swapping the tail into it: indices in the
+    location map stay stable, each tombstone is popped exactly once from the
+    tail (O(1) amortized, same as the swap), and — unlike the swap, which
+    permutes survivors — the within-bucket LIFO order of the remaining
+    nodes is preserved.  That order-preservation is what lets the dense
+    `VectorBuffer` mirror this structure with plain insertion stamps and
+    reproduce ExtractMax order bit-exactly at wave=1 (DESIGN.md §3.2).
+    """
+
+    _HOLE = -1  # tombstone marker (node ids are >= 0)
 
     def __init__(self, s_max: float, disc_factor: int = 1000):
         self.disc = int(disc_factor)
@@ -30,6 +55,7 @@ class BucketPQ:
         self.loc: dict[int, tuple[int, int]] = {}
         self.rho = 0
         self._size = 0
+        self._holes = [0] * self.n_buckets  # live tombstones per bucket
 
     def idx(self, s: float) -> int:
         return min(int(round(s * self.disc)), self.n_buckets - 1)
@@ -52,24 +78,52 @@ class BucketPQ:
     def increase_key(self, v: int, s: float) -> None:
         b_old, p = self.loc[v]
         b_new = self.idx(s)
-        if b_new == b_old:
-            return  # same bucket: nothing to move (scores only increase)
+        if b_new <= b_old:
+            # Same bucket or attempted decrease: IncreaseKey is a no-op.
+            # Paper scores are monotone non-decreasing by construction
+            # (scores.py, paper §3.2), so decreases only arise from
+            # out-of-paper parameterizations (e.g. NSS eta > 1); both
+            # buffer implementations ignore them identically, which keeps
+            # the wave=1 bit-exactness even there.
+            return
         bucket = self.buckets[b_old]
-        x = bucket.pop()  # pop O(1)
-        if p < len(bucket):  # v was not the tail: swap the tail into its slot
-            bucket[p] = x
-            self.loc[x] = (b_old, p)
+        if p == len(bucket) - 1:
+            bucket.pop()  # tail: remove directly, no hole
+            self._pop_tombstones(b_old)
+        else:
+            bucket[p] = self._HOLE  # tombstone; indices stay valid
+            self._holes[b_old] += 1
+            if self._holes[b_old] > len(bucket) - self._holes[b_old]:
+                self._compact(b_old)  # amortized O(1): holes outnumber live
         del self.loc[v]
         self._size -= 1
         self.insert(v, s)
 
+    def _pop_tombstones(self, b: int) -> None:
+        bucket = self.buckets[b]
+        while bucket and bucket[-1] == self._HOLE:
+            bucket.pop()
+            self._holes[b] -= 1
+
+    def _compact(self, b: int) -> None:
+        """Drop a bucket's tombstones, preserving live order (and thereby
+        the LIFO tie-break) and refreshing the location map."""
+        live = [v for v in self.buckets[b] if v != self._HOLE]
+        self.buckets[b] = live
+        self._holes[b] = 0
+        for p, v in enumerate(live):
+            self.loc[v] = (b, p)
+
     def extract_max(self) -> int:
+        self._pop_tombstones(self.rho)
         while self.rho > 0 and not self.buckets[self.rho]:
             self.rho -= 1  # rare worst-case O(B)
+            self._pop_tombstones(self.rho)
         bucket = self.buckets[self.rho]
         v = bucket.pop()
         del self.loc[v]
         self._size -= 1
+        self._pop_tombstones(self.rho)
         return v
 
     def peek_bucket(self, v: int) -> int:
@@ -85,9 +139,24 @@ class VectorBuffer:
     the next `wave` nodes in exactly the order a sequence of ExtractMax calls
     would produce them *if scores did not change in between* — which is the
     wavefront approximation (exact for wave=1).
+
+    Two eviction engines share this contract (DESIGN.md §3.2):
+
+    * ``incremental`` (default) — a compact active-candidate array (append
+      on insert, compact on evict) plus per-bucket occupancy counts.  An
+      eviction scans only the occupancy cumsum from the top bucket and the
+      live candidates, so its cost is O(buffer occupancy + B), independent
+      of n.  Both engines produce bit-identical eviction orders (stamps are
+      globally unique, so the composite key is a total order).
+    * ``scan`` — the seed's full rescan of all n slots per wave; kept as the
+      oracle for equivalence tests and the benchmark baseline.
     """
 
-    def __init__(self, n: int, s_max: float, disc_factor: int = 1000):
+    def __init__(self, n: int, s_max: float, disc_factor: int = 1000,
+                 engine: str = "incremental"):
+        if engine not in ("incremental", "scan"):
+            raise ValueError(f"unknown eviction engine {engine!r}")
+        self.engine = engine
         self.disc = int(disc_factor)
         self.n_buckets = int(round(s_max * disc_factor)) + 1
         self.in_buf = np.zeros(n, dtype=bool)
@@ -95,6 +164,15 @@ class VectorBuffer:
         self.stamp = np.zeros(n, dtype=np.int64)
         self._next_stamp = 1
         self._size = 0
+        # incremental-engine state: compact id/key/stamp arrays over live
+        # slots (so eviction reads no n-sized vector), a position map for
+        # O(1) slot lookup, and per-bucket occupancy counts
+        self._active = np.empty(n, dtype=np.int64)
+        self._akey = np.empty(n, dtype=np.int64)
+        self._astamp = np.empty(n, dtype=np.int64)
+        self._pos = np.full(n, -1, dtype=np.int64)
+        self._bucket_count = np.zeros(self.n_buckets, dtype=np.int64)
+        self._rho = 0  # upper bound on the max occupied bucket
 
     def idx(self, s: np.ndarray | float) -> np.ndarray | int:
         k = np.minimum(np.round(np.asarray(s) * self.disc).astype(np.int64), self.n_buckets - 1)
@@ -105,38 +183,96 @@ class VectorBuffer:
 
     def insert_many(self, vs: np.ndarray, scores: np.ndarray) -> None:
         vs = np.asarray(vs, dtype=np.int64)
+        keys = np.asarray(self.idx(scores))
+        stamps = np.arange(self._next_stamp, self._next_stamp + vs.size)
         self.in_buf[vs] = True
-        self.key[vs] = self.idx(scores)
+        self.key[vs] = keys
         # preserve arrival order inside the insert batch
-        self.stamp[vs] = np.arange(self._next_stamp, self._next_stamp + vs.size)
+        self.stamp[vs] = stamps
         self._next_stamp += vs.size
+        sl = slice(self._size, self._size + vs.size)
+        self._active[sl] = vs
+        self._akey[sl] = keys
+        self._astamp[sl] = stamps
+        self._pos[vs] = np.arange(self._size, self._size + vs.size)
+        np.add.at(self._bucket_count, keys, 1)
+        if vs.size:
+            self._rho = max(self._rho, int(np.max(keys)))
         self._size += int(vs.size)
 
     def update_scores(self, vs: np.ndarray, scores: np.ndarray) -> None:
-        """IncreaseKey semantics; stamps refresh only on bucket change (the
-        bucket PQ re-appends on a move, making moved nodes newest)."""
+        """IncreaseKey semantics; stamps refresh only on a genuine bucket
+        increase (the bucket PQ re-appends on a move, making moved nodes
+        newest; attempted decreases keep both the key and the stamp)."""
         vs = np.asarray(vs, dtype=np.int64)
-        new_key = self.idx(scores)
-        moved = new_key != self.key[vs]
-        self.key[vs] = np.maximum(self.key[vs], new_key)  # monotone guard
-        mv = vs[moved]
-        self.stamp[mv] = np.arange(self._next_stamp, self._next_stamp + mv.size)
+        live = self.in_buf[vs]
+        if not live.all():  # tolerate non-members (seed behavior): their
+            vs = vs[live]   # stale _pos would corrupt the compact arrays
+            scores = np.asarray(scores)[live]
+        new_key = np.asarray(self.idx(scores))
+        old_key = self.key[vs]
+        moved = new_key > old_key  # monotone: only genuine increases move
+        mv, mv_key = vs[moved], new_key[moved]
+        if mv.size == 0:
+            return
+        stamps = np.arange(self._next_stamp, self._next_stamp + mv.size)
+        self.key[mv] = mv_key
+        self.stamp[mv] = stamps
         self._next_stamp += mv.size
+        p = self._pos[mv]
+        self._akey[p] = mv_key
+        self._astamp[p] = stamps
+        np.add.at(self._bucket_count, old_key[moved], -1)
+        np.add.at(self._bucket_count, mv_key, 1)
+        self._rho = max(self._rho, int(np.max(mv_key)))
 
     def evict(self, wave: int = 1) -> np.ndarray:
         """Pop the `wave` max-priority nodes (bucket desc, stamp desc)."""
         wave = min(wave, self._size)
         if wave == 0:
             return np.empty(0, dtype=np.int64)
+        if self.engine == "scan":
+            return self._evict_scan(wave)
+        # drop the rho bound to the top non-empty bucket (amortized O(1))
+        while self._rho > 0 and self._bucket_count[self._rho] == 0:
+            self._rho -= 1
+        # smallest bucket the wave can reach: cumulative occupancy from the
+        # top; everything strictly above it must be evicted, so candidates
+        # are exactly the members of buckets >= threshold
+        occ_desc = np.cumsum(self._bucket_count[: self._rho + 1][::-1])
+        threshold = self._rho - int(np.searchsorted(occ_desc, wave))
+        keys = self._akey[: self._size]
+        cand = np.nonzero(keys >= threshold)[0]
+        comp = keys[cand] * np.int64(self._next_stamp + 1) + self._astamp[: self._size][cand]
+        positions = cand[_select_top(comp, wave)]
+        out = self._active[positions]
+        self._remove(out, positions)
+        return out.astype(np.int64)
+
+    def _remove(self, out: np.ndarray, positions: np.ndarray) -> None:
+        """Swap-delete `positions` from the compact arrays: surviving tail
+        occupants drop into the vacated low slots — O(wave) touches of the
+        n-sized vectors, O(wave) compact moves."""
+        self.in_buf[out] = False
+        self._pos[out] = -1
+        np.add.at(self._bucket_count, self.key[out], -1)
+        new_size = self._size - positions.size
+        holes = positions[positions < new_size]
+        tail_keep = np.ones(self._size - new_size, dtype=bool)
+        tail_keep[positions[positions >= new_size] - new_size] = False
+        movers_slots = np.nonzero(tail_keep)[0] + new_size
+        if holes.size:
+            mv_ids = self._active[movers_slots]
+            self._active[holes] = mv_ids
+            self._akey[holes] = self._akey[movers_slots]
+            self._astamp[holes] = self._astamp[movers_slots]
+            self._pos[mv_ids] = holes
+        self._size = new_size
+
+    def _evict_scan(self, wave: int) -> np.ndarray:
         ids = np.nonzero(self.in_buf)[0]
         # composite key: bucket * big + stamp  (stamp < _next_stamp)
         comp = self.key[ids] * np.int64(self._next_stamp + 1) + self.stamp[ids]
-        if wave < ids.size:
-            part = np.argpartition(comp, ids.size - wave)[ids.size - wave :]
-        else:
-            part = np.arange(ids.size)
-        order = part[np.argsort(comp[part], kind="stable")[::-1]]
-        out = ids[order]
-        self.in_buf[out] = False
-        self._size -= int(out.size)
+        out = ids[_select_top(comp, wave)]
+        self._remove(out, self._pos[out])
         return out.astype(np.int64)

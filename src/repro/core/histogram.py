@@ -1,0 +1,204 @@
+"""Neighbor-label histogram engine — the assignment-side inner op.
+
+Every decision in this system (LP clustering, LP refinement, Fennel gains)
+reduces to "for each node, sum edge weight per neighbor label, then pick the
+best label".  The seed implementation sorted all m edge entries by a
+composite key every round — O(m log m) with a large constant.  This module
+provides the O(m) replacements (DESIGN.md §3.3):
+
+sparse path (`neighbor_label_weights`)
+    Composite-key `np.bincount` over compacted labels: key = src·L + lab′
+    where L = #distinct labels.  Costs O(m + n·L) time/scratch.  Two
+    short-circuits make the common rounds cheap: when every label is
+    distinct (LP round 0: labels = arange(n)) the CSR *is* the histogram and
+    is returned directly in O(m); when n·L would exceed `dense_cap` the
+    engine falls back to the seed's sort-aggregation (kept as
+    `sorted_neighbor_label_weights`, also the benchmark baseline).
+
+dense/ELL path (`label_histogram_ell`)
+    Packs neighbor labels into the padded ELL layout and dispatches
+    `kernels.ops.block_histogram` — the Pallas `ell_histogram` kernel on
+    TPU, its jnp reference under XLA elsewhere.  Returns the dense (n, L)
+    count matrix the synchronous-LP update consumes directly (row argmax).
+
+best-move selection (`best_label_per_src`)
+    Scatter-max over the sparse triplets — O(#triplets), replacing the
+    per-round lexsort.  Ties break toward the lower label, matching the
+    seed's deterministic policy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+
+# n·L ceiling for the dense-bincount scratch (8 MiB of float64 per 2^20).
+DENSE_KEYSPACE_CAP = 1 << 24
+
+
+def compact_labels(labels: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Map label values to 0..L-1 preserving order; returns (labc, uniq)
+    with labc[i] the compact id of labels[i].
+
+    `uniq` is ascending, so compact ids are order-isomorphic to raw labels —
+    argmax tie-breaks over compact ids match "lower raw label wins".  Works
+    for arbitrary label values (no dense value-indexed scratch).
+    """
+    uniq, labc = np.unique(labels, return_inverse=True)
+    return labc.astype(np.int64), uniq
+
+
+def _edge_src(g: CSRGraph) -> np.ndarray:
+    return np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr))
+
+
+def dense_key_ok(keyspace: int, n_entries: int, cap: int = DENSE_KEYSPACE_CAP) -> bool:
+    """Dense bincount scratch pays off only while it stays O(entries)."""
+    return keyspace <= min(max(4 * n_entries, 1 << 16), cap)
+
+
+def aggregate_by_key(
+    key: np.ndarray, w: np.ndarray, keyspace: int, cap: int = DENSE_KEYSPACE_CAP
+) -> tuple[np.ndarray, np.ndarray]:
+    """Sum float64 `w` per composite key; returns (unique keys asc, sums).
+
+    Dense bincount when `dense_key_ok`, radix-sort reduceat otherwise.
+    Exact-zero sums are dropped on both paths (the dense path cannot
+    represent them).
+    """
+    if key.size == 0:
+        return np.empty(0, dtype=np.int64), np.empty(0)
+    if dense_key_ok(keyspace, key.size, cap):
+        sums = np.bincount(key, weights=w, minlength=keyspace)
+        uk = np.nonzero(sums)[0]
+        return uk, sums[uk]
+    order = np.argsort(key, kind="stable")
+    key_s, w_s = key[order], w[order]
+    boundary = np.ones(key_s.shape[0], dtype=bool)
+    boundary[1:] = key_s[1:] != key_s[:-1]
+    starts = np.nonzero(boundary)[0]
+    sums = np.add.reduceat(w_s, starts)
+    uk = key_s[starts]
+    keep = sums != 0  # match the dense path's zero-drop
+    return uk[keep], sums[keep]
+
+
+def sorted_neighbor_label_weights(
+    g: CSRGraph, labels: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Seed formulation (argsort + reduceat): the O(m log m) baseline.
+
+    Kept as the fallback for keyspaces too large to bincount densely and as
+    the benchmark reference for bench_hotpath.py.  Labels are compacted
+    first so the composite key never collides or overflows for arbitrary
+    label values (the seed's src*(n+1)+lab broke for labels > n).
+    """
+    if g.indices.size == 0:
+        e = np.empty(0, dtype=np.int64)
+        return e, e.copy(), np.empty(0)
+    labc, uniq = compact_labels(labels)
+    L = np.int64(uniq.shape[0])
+    src = _edge_src(g)
+    key = src * L + labc[g.indices.astype(np.int64)]
+    order = np.argsort(key, kind="stable")
+    key_s, w_s = key[order], g.edge_w[order]
+    boundary = np.ones(key_s.shape[0], dtype=bool)
+    boundary[1:] = key_s[1:] != key_s[:-1]
+    starts = np.nonzero(boundary)[0]
+    sums = np.add.reduceat(w_s.astype(np.float64), starts)
+    uk = key_s[starts]
+    keep = sums != 0  # match the engine's zero-drop (dense bincount
+    return uk[keep] // L, uniq[uk[keep] % L], sums[keep]  # can't keep 0s)
+
+
+def neighbor_label_weights(
+    g: CSRGraph,
+    labels: np.ndarray,
+    *,
+    dense_cap: int = DENSE_KEYSPACE_CAP,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sparse per-(node, neighbor-label) weight sums: (src, lab, wsum).
+
+    O(m + n·L) composite-key bincount; O(m) when labels are all-distinct;
+    sort fallback above `dense_cap`.
+    """
+    n = g.n
+    m2 = g.indices.size
+    if m2 == 0:
+        e = np.empty(0, dtype=np.int64)
+        return e, e.copy(), np.empty(0)
+    labc_node, uniq = compact_labels(labels)
+    L = uniq.shape[0]
+    if L == n:
+        # all labels distinct (e.g. LP round 0): no two entries of a node's
+        # neighbor list share a label (simple graph) — the CSR is already
+        # the histogram.
+        src = _edge_src(g)
+        lab = labels[g.indices.astype(np.int64)]
+        w = g.edge_w.astype(np.float64)
+        keep = w != 0  # match aggregate_by_key's zero-drop
+        return src[keep], lab[keep], w[keep]
+    src = _edge_src(g)
+    labc = labc_node[g.indices.astype(np.int64)]
+    key = src * np.int64(L) + labc
+    uk, sums = aggregate_by_key(key, g.edge_w.astype(np.float64), n * L, dense_cap)
+    return uk // L, uniq[uk % L], sums
+
+
+def best_label_per_src(
+    src: np.ndarray,
+    lab: np.ndarray,
+    wsum: np.ndarray,
+    n: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-src (max weight, tie -> lower label) over sparse triplets.
+
+    `src` must be grouped (all entries of a node contiguous) — true for
+    every producer in this module: CSR order, bincount order and the sort
+    fallback are all src-major.  Segment reduceat maxima, O(#triplets).
+    Returns (movers, targets, gains) for srcs holding >= 1 triplet.
+    """
+    if src.size == 0:
+        e = np.empty(0, dtype=np.int64)
+        return e, e.copy(), np.empty(0)
+    seg = np.ones(src.size, dtype=bool)
+    seg[1:] = src[1:] != src[:-1]
+    starts = np.nonzero(seg)[0]
+    movers = src[starts]
+    gains = np.maximum.reduceat(wsum, starts)
+    seg_len = np.diff(np.append(starts, src.size))
+    is_best = wsum == np.repeat(gains, seg_len)
+    lab_masked = np.where(is_best, lab, np.iinfo(np.int64).max)
+    targets = np.minimum.reduceat(lab_masked, starts)
+    return movers, targets, gains
+
+
+def label_histogram_ell(
+    g: CSRGraph,
+    labels: np.ndarray,
+    *,
+    use_kernel: bool | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Dense (n, L) neighbor-label count matrix via the ELL histogram op.
+
+    Packs neighbor labels (compacted to L columns) into the padded ELL
+    layout and dispatches kernels.ops.block_histogram: the Pallas
+    `ell_histogram` kernel on TPU, the jnp reference under XLA elsewhere.
+    Returns (counts, uniq) with counts[i, j] = summed weight from node i to
+    label uniq[j] (float32 — kernel accumulator dtype).
+    """
+    from repro.kernels import ops as _ops  # deferred: keeps jax off the
+    import jax.numpy as jnp                # sparse-only import path
+
+    labc_node, uniq = compact_labels(labels)
+    L = uniq.shape[0]
+    nbr, wts, mask = g.ell_block(np.arange(g.n, dtype=np.int64))
+    nbr_lab = np.where(mask, labc_node[np.where(mask, nbr, 0)], -1).astype(np.int32)
+    if use_kernel is None:
+        use_kernel = _ops.USE_KERNELS_DEFAULT
+    # round L up so jit recompiles per 128-bucket, not per distinct L
+    l_pad = max(((L + 127) // 128) * 128, 128)
+    counts = _ops.block_histogram(
+        jnp.asarray(nbr_lab), jnp.asarray(wts), l_pad, use_kernel=use_kernel
+    )
+    return np.asarray(counts)[:, :L], uniq

@@ -18,6 +18,16 @@ import numpy as np
 
 from repro.graphs.csr import CSRGraph
 from repro.core.fennel import FennelParams, fennel_penalty
+from repro.core.histogram import (
+    aggregate_by_key,
+    best_label_per_src,
+    label_histogram_ell,
+    neighbor_label_weights,
+)
+
+# ELL dense-path ceilings: padded tile volume and max padded row width
+_ELL_VOLUME_CAP = 1 << 24
+_ELL_WIDTH_CAP = 4096
 
 
 @dataclasses.dataclass
@@ -28,32 +38,68 @@ class MultilevelConfig:
     refine_rounds: int = 3         # LP refinement rounds per level
     min_shrink: float = 0.95       # stop coarsening if shrink factor above
     seed: int = 0
+    engine: str = "auto"           # "auto" | "sparse" | "ell" inner-op engine
+
+
+def _resolve_engine(engine: str, g: CSRGraph) -> str:
+    """auto -> ELL tiles through the Pallas/jnp histogram op on TPU (where
+    the dense formulation is the fast one), sparse bincount elsewhere."""
+    if engine in ("sparse", "ell"):
+        return engine
+    if engine != "auto":
+        raise ValueError(f"unknown multilevel engine {engine!r}")
+    from repro.kernels import ops as _ops
+
+    if not _ops.USE_KERNELS_DEFAULT:
+        return "sparse"
+    w_pad = max(8, ((g.max_degree + 7) // 8) * 8)
+    if w_pad > _ELL_WIDTH_CAP or g.n * w_pad > _ELL_VOLUME_CAP:
+        return "sparse"  # too ragged for ELL padding — bincount instead
+    return "ell"
 
 
 # --------------------------------------------------------------------------
-# vectorized per-(node, neighbor-label) weight aggregation
+# per-(node, neighbor-label) best-move extraction (both engines)
 # --------------------------------------------------------------------------
 
-def _neighbor_label_weights(
-    g: CSRGraph, labels: np.ndarray
-) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """For every (node, label-of-neighbor) pair return summed edge weight.
+def _best_moves(
+    g: CSRGraph,
+    labels: np.ndarray,
+    engine: str,
+    *,
+    forbidden_label: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Per node: heaviest neighbor label != own (ties -> lower label).
 
-    Returns (src_node, label, weight) arrays — the sparse histogram that is
-    the inner op of both clustering and refinement.
+    Returns (movers, targets, gain_w, cur_conn) where `movers` lists nodes
+    with at least one eligible neighbor label, `gain_w` the weight to the
+    best label and `cur_conn` (dense, n) the weight to the node's own label.
+    `forbidden_label` masks labels that may never be targets (pinned-owned
+    clusters during coarsening).
     """
     n = g.n
-    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(g.indptr))
-    lab = labels[g.indices.astype(np.int64)]
-    key = src * np.int64(n + 1) + lab
-    order = np.argsort(key, kind="stable")
-    key_s, w_s = key[order], g.edge_w[order]
-    boundary = np.ones(key_s.shape[0], dtype=bool)
-    boundary[1:] = key_s[1:] != key_s[:-1]
-    starts = np.nonzero(boundary)[0]
-    sums = np.add.reduceat(w_s.astype(np.float64), starts) if starts.size else np.empty(0)
-    uk = key_s[starts]
-    return uk // (n + 1), uk % (n + 1), sums
+    if engine == "ell":
+        counts, uniq = label_histogram_ell(g, labels)
+        counts = counts.astype(np.float64)
+        own_col = np.searchsorted(uniq, labels)
+        rows = np.arange(n)
+        cur_conn = counts[rows, own_col].copy()
+        if forbidden_label is not None:
+            counts[:, forbidden_label[uniq]] = -np.inf
+        counts[rows, own_col] = -np.inf
+        best_col = np.argmax(counts, axis=1)
+        gain_w = counts[rows, best_col]
+        movers = np.nonzero(gain_w > 0.0)[0]
+        return movers, uniq[best_col[movers]], gain_w[movers], cur_conn
+    src, lab, wsum = neighbor_label_weights(g, labels)
+    cur_conn = np.zeros(n, dtype=np.float64)
+    is_cur = lab == labels[src]
+    cur_conn[src[is_cur]] = wsum[is_cur]
+    keep = ~is_cur
+    if forbidden_label is not None:
+        keep &= ~forbidden_label[lab]
+    movers, targets, gain_w = best_label_per_src(src[keep], lab[keep], wsum[keep], n)
+    return movers, targets, gain_w, cur_conn
 
 
 def _accept_with_capacity(
@@ -96,6 +142,7 @@ def lp_cluster(
     max_cluster_w: float,
     iters: int,
     rng: np.random.Generator,
+    engine: str = "auto",
 ) -> np.ndarray:
     """Size-constrained label propagation clustering. Pinned nodes stay
     singletons and free nodes never join them."""
@@ -103,19 +150,17 @@ def lp_cluster(
     cluster = np.arange(n, dtype=np.int64)
     is_pinned = pinned >= 0
     cw = g.node_w.astype(np.float64).copy()
+    engine = _resolve_engine(engine, g)
     for _ in range(iters):
-        src, lab, wsum = _neighbor_label_weights(g, cluster)
-        # forbid pinned-owned clusters as targets and pinned nodes as movers
-        valid = ~is_pinned[lab] & ~is_pinned[src] & (lab != cluster[src])
-        src, lab, wsum = src[valid], lab[valid], wsum[valid]
-        if src.size == 0:
+        # per-node best target cluster (max weight, tie -> lower label);
+        # pinned-owned clusters are never targets, pinned nodes never move
+        movers, targets, gains, _ = _best_moves(
+            g, cluster, engine, forbidden_label=is_pinned
+        )
+        free = ~is_pinned[movers]
+        movers, targets, gains = movers[free], targets[free], gains[free]
+        if movers.size == 0:
             break
-        # per-src best target (max weight, tie -> lower label for determinism)
-        order = np.lexsort((lab, -wsum, src))
-        first = np.ones(order.shape[0], dtype=bool)
-        first[1:] = src[order][1:] != src[order][:-1]
-        sel = order[first]
-        movers, targets, gains = src[sel], lab[sel], wsum[sel]
         # keep only proper moves that could fit
         fit = cw[targets] + g.node_w[movers] <= max_cluster_w
         movers, targets, gains = movers[fit], targets[fit], gains[fit]
@@ -148,19 +193,8 @@ def contract(
     dst = node_map[g.indices.astype(np.int64)]
     keep = src < dst
     s, d, w = src[keep], dst[keep], g.edge_w[keep].astype(np.float64)
-    key = s * np.int64(nc) + d
-    order = np.argsort(key, kind="stable")
-    key_s, w_s = key[order], w[order]
-    b = np.ones(key_s.shape[0], dtype=bool)
-    b[1:] = key_s[1:] != key_s[:-1]
-    starts = np.nonzero(b)[0]
-    if starts.size:
-        sums = np.add.reduceat(w_s, starts)
-        uk = key_s[starts]
-        edges = np.stack([uk // nc, uk % nc], axis=1)
-    else:
-        sums = np.empty(0)
-        edges = np.empty((0, 2), dtype=np.int64)
+    uk, sums = aggregate_by_key(s * np.int64(nc) + d, w, nc * nc)
+    edges = np.stack([uk // nc, uk % nc], axis=1)
     cg = CSRGraph.from_edges(nc, edges, edge_weights=sums.astype(np.float32),
                              node_weights=cw.astype(np.float32))
     return cg, cpin, node_map
@@ -203,32 +237,22 @@ def lp_refine(
     p: FennelParams,
     loads: np.ndarray,
     rounds: int,
+    engine: str = "auto",
 ) -> tuple[np.ndarray, np.ndarray]:
     """Balanced synchronous LP refinement: move to max-connectivity block if
     the cut gain is positive and the balance cap holds."""
     labels = labels.copy()
     loads = loads.copy()
     free = pinned < 0
+    engine = _resolve_engine(engine, g)
     for _ in range(rounds):
-        src, lab, wsum = _neighbor_label_weights(g, labels)
-        # current-block connectivity per node
-        cur_conn = np.zeros(g.n, dtype=np.float64)
-        is_cur = lab == labels[src]
-        cur_conn[src[is_cur]] = wsum[is_cur]
-        # candidate moves: free nodes to a different block with higher conn
-        cand = free[src] & ~is_cur
-        src_c, lab_c, w_c = src[cand], lab[cand], wsum[cand]
-        gain = w_c - cur_conn[src_c]
-        pos = gain > 1e-12
-        src_c, lab_c, gain = src_c[pos], lab_c[pos], gain[pos]
-        if src_c.size == 0:
+        # best foreign block per node and own-block connectivity in one pass
+        movers, targets, best_w, cur_conn = _best_moves(g, labels, engine)
+        gains = best_w - cur_conn[movers]
+        ok = free[movers] & (gains > 1e-12)
+        movers, targets, gains = movers[ok], targets[ok], gains[ok]
+        if movers.size == 0:
             break
-        # best target per node
-        order = np.lexsort((lab_c, -gain, src_c))
-        first = np.ones(order.shape[0], dtype=bool)
-        first[1:] = src_c[order][1:] != src_c[order][:-1]
-        sel = order[first]
-        movers, targets, gains = src_c[sel], lab_c[sel], gain[sel]
         capacity = np.maximum(p.cap - loads, 0.0)
         acc = _accept_with_capacity(movers, targets, gains, g.node_w, capacity)
         movers, targets = movers[acc], targets[acc]
@@ -266,7 +290,8 @@ def multilevel_partition(
     for _ in range(cfg.max_levels):
         if int((cur_pin < 0).sum()) <= cfg.coarsen_target:
             break
-        cluster = lp_cluster(cur_g, cur_pin, max_cluster_w, cfg.lp_iters, rng)
+        cluster = lp_cluster(cur_g, cur_pin, max_cluster_w, cfg.lp_iters, rng,
+                             engine=cfg.engine)
         cg, cpin, node_map = contract(cur_g, cluster, cur_pin)
         if cg.n >= cfg.min_shrink * cur_g.n:
             break
@@ -278,11 +303,13 @@ def multilevel_partition(
     loads = loads_base.copy()
     fr = cur_pin < 0
     np.add.at(loads, labels[fr], cur_g.node_w[fr].astype(np.float64))
-    labels, loads = lp_refine(cur_g, labels, cur_pin, p, loads, cfg.refine_rounds)
+    labels, loads = lp_refine(cur_g, labels, cur_pin, p, loads, cfg.refine_rounds,
+                              engine=cfg.engine)
 
     # ---- uncoarsen + refine
     for fine_g, fine_pin, node_map in reversed(levels):
         labels = labels[node_map]
         labels[fine_pin >= 0] = fine_pin[fine_pin >= 0]
-        labels, loads = lp_refine(fine_g, labels, fine_pin, p, loads, cfg.refine_rounds)
+        labels, loads = lp_refine(fine_g, labels, fine_pin, p, loads,
+                                  cfg.refine_rounds, engine=cfg.engine)
     return labels

@@ -100,14 +100,17 @@ def buffcut_partition_pipelined(
         else:
             _bump_buffered(st, pq, v)
             pq.insert(v, st.score(v))
+            st.member[v] = True
         while len(pq) >= cfg.buffer_size and len(batch) < cfg.batch_size:
             u = pq.extract_max()
+            st.member[u] = False
             batch.append(u)
             _bump_assigned(st, pq, u, was_buffered=True)
             if len(batch) == cfg.batch_size:
                 flush_batch()
     while len(pq) > 0:
         u = pq.extract_max()
+        st.member[u] = False
         batch.append(u)
         _bump_assigned(st, pq, u, was_buffered=True)
         if len(batch) == cfg.batch_size:

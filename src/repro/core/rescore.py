@@ -1,0 +1,165 @@
+"""Batched CSR-slice rescoring — the streaming-side inner op.
+
+Every driver event (hub assignment, batch admission, buffer arrival) must
+rescore the buffered neighbors of the affected nodes.  The seed drivers did
+this with per-edge Python loops (`_bump_*` in buffcut.py / pipeline.py and
+the per-node NSS chunk loop in vector_stream.py); this module is the one
+shared O(slice) implementation: a vectorized CSR gather, masked scatter-adds
+into the counter vectors, and a batched score recompute (DESIGN.md §3.4).
+
+`RescoreState` owns the per-stream counters the scores are closed-form
+functions of (scores.py):
+
+  assigned_w  — weight to assigned-or-batched neighbors (all scores),
+  deg_w       — weighted degree (static; computed in one segment-sum),
+  buffered_w  — weight to currently-buffered neighbors (NSS),
+  blk_w/cmax  — per-block weight to assigned neighbors + running max (CMS).
+
+Membership of the buffer is a dense bool mask; the vectorized driver shares
+`VectorBuffer.in_buf` directly (zero-copy), the sequential/pipelined drivers
+mirror their BucketPQ membership into it at insert/extract.
+
+All bumps return touched node ids in first-occurrence CSR order together
+with their fresh scores: exactly the order the sequential driver issues
+`IncreaseKey` in, so both buffer implementations see identical update (and
+therefore LIFO tie-break) sequences — the property the wave=1 equivalence
+tests pin down.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+from repro.core.scores import ScoreSpec
+
+_EMPTY = np.empty(0, dtype=np.int64)
+
+
+def weighted_degrees(g: CSRGraph) -> np.ndarray:
+    """Per-node total incident edge weight, float64, in one segment-sum."""
+    return np.bincount(
+        np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr)),
+        weights=g.edge_w.astype(np.float64),
+        minlength=g.n,
+    )
+
+
+def _first_occurrence(ids: np.ndarray) -> np.ndarray:
+    """Deduplicate preserving first-occurrence order (CSR order)."""
+    uniq, first = np.unique(ids, return_index=True)
+    return uniq[np.argsort(first, kind="stable")]
+
+
+class RescoreState:
+    """Stream counters + buffer membership, with batched bump updates."""
+
+    def __init__(
+        self,
+        g: CSRGraph,
+        spec: ScoreSpec,
+        k: int,
+        member: np.ndarray | None = None,
+    ):
+        n = g.n
+        self.g = g
+        self.spec = spec
+        self.k = k
+        self.deg_w = weighted_degrees(g)
+        self.assigned_w = np.zeros(n, dtype=np.float64)
+        self.buffered_w = np.zeros(n, dtype=np.float64) if spec.needs_buffered_count else None
+        # CMS: per-buffered-node block-weight rows (dict keeps the working
+        # set bounded by buffer occupancy, not n*k) + dense running max
+        self.blk_w: dict[int, np.ndarray] | None = {} if spec.needs_block_counts else None
+        self.cmax = np.zeros(n, dtype=np.float64) if spec.needs_block_counts else None
+        # buffer membership; pass VectorBuffer.in_buf to share it zero-copy
+        self.member = np.zeros(n, dtype=bool) if member is None else member
+
+    # ------------------------------------------------------------- scoring
+    def scores_of(self, vs: np.ndarray) -> np.ndarray:
+        q = self.buffered_w[vs] if self.buffered_w is not None else 0.0
+        cm = self.cmax[vs] if self.cmax is not None else 0.0
+        return np.asarray(
+            self.spec(self.assigned_w[vs], self.deg_w[vs], q, cm), dtype=np.float64
+        )
+
+    def score(self, v: int) -> float:
+        return float(self.scores_of(np.array([v], dtype=np.int64))[0])
+
+    # ------------------------------------------------------------- gathers
+    def _buffered_slice(self, us: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(neighbor ids, weights) of buffered neighbors of `us`, CSR order."""
+        pos = self.g.slice_indices(us)
+        nbr = self.g.indices[pos].astype(np.int64)
+        keep = self.member[nbr]
+        return nbr[keep], self.g.edge_w[pos][keep].astype(np.float64)
+
+    # --------------------------------------------------------------- bumps
+    def bump_assigned(
+        self, us: np.ndarray, was_buffered: bool
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Nodes `us` became assigned-or-batched: credit their edge weight
+        to buffered neighbors (and, for NSS, debit the buffered count when
+        the bumping nodes leave the buffer).  Returns (touched, scores)."""
+        us = np.asarray(us, dtype=np.int64)
+        if us.size == 0:
+            return _EMPTY, np.empty(0)
+        nbr_b, w_b = self._buffered_slice(us)
+        if nbr_b.size == 0:
+            return _EMPTY, np.empty(0)
+        np.add.at(self.assigned_w, nbr_b, w_b)
+        if was_buffered and self.buffered_w is not None:
+            np.add.at(self.buffered_w, nbr_b, -w_b)
+        touched = _first_occurrence(nbr_b)
+        return touched, self.scores_of(touched)
+
+    def bump_buffered(self, vs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """NSS arrivals `vs` (not yet members): count mutual buffered
+        weight both ways.  Returns (touched existing members, scores);
+        the arrivals' own buffered_w is set, their scores are computed by
+        the caller at insert time."""
+        vs = np.asarray(vs, dtype=np.int64)
+        if self.buffered_w is None or vs.size == 0:
+            return _EMPTY, np.empty(0)
+        pos = self.g.slice_indices(vs)
+        nbr = self.g.indices[pos].astype(np.int64)
+        keep = self.member[nbr]
+        w = self.g.edge_w[pos].astype(np.float64)
+        degs = self.g.indptr[vs + 1] - self.g.indptr[vs]
+        seg = np.repeat(np.arange(vs.size, dtype=np.int64), degs)
+        self.buffered_w[vs] = np.bincount(
+            seg[keep], weights=w[keep], minlength=vs.size
+        )
+        nbr_b, w_b = nbr[keep], w[keep]
+        if nbr_b.size == 0:
+            return _EMPTY, np.empty(0)
+        np.add.at(self.buffered_w, nbr_b, w_b)
+        touched = _first_occurrence(nbr_b)
+        return touched, self.scores_of(touched)
+
+    def bump_block_counts(self, u: int, blk: int) -> tuple[np.ndarray, np.ndarray]:
+        """CMS: node `u` received concrete block `blk`; update the buffered
+        neighbors whose majority count improved.  Returns (touched, scores).
+
+        The membership filter is the batched gather; the per-neighbor loop
+        stays (CMS is the sequential-only score and each neighbor owns a
+        k-vector row, allocated lazily and dropped on eviction so memory
+        tracks buffer occupancy)."""
+        if self.blk_w is None:
+            return _EMPTY, np.empty(0)
+        nbr_b, w_b = self._buffered_slice(np.array([u], dtype=np.int64))
+        if nbr_b.size == 0:
+            return _EMPTY, np.empty(0)
+        touched = []
+        for w_, ew in zip(nbr_b.tolist(), w_b.tolist()):
+            cnt = self.blk_w.setdefault(w_, np.zeros(self.k, dtype=np.float64))
+            cnt[blk] += ew
+            if cnt[blk] > self.cmax[w_]:
+                self.cmax[w_] = cnt[blk]
+                touched.append(w_)
+        touched = np.asarray(touched, dtype=np.int64)
+        return touched, self.scores_of(touched)
+
+    def drop_block_counts(self, u: int) -> None:
+        """CMS: node `u` left the buffer; free its block-count row."""
+        if self.blk_w is not None:
+            self.blk_w.pop(u, None)

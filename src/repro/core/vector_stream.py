@@ -29,6 +29,7 @@ from repro.core.fennel import FennelParams, fennel_choose
 from repro.core.batch_model import build_batch_model
 from repro.core.multilevel import multilevel_partition
 from repro.core.metrics import internal_edge_ratio
+from repro.core.rescore import RescoreState
 
 
 @partial(jax.jit, static_argnames=("kind",))
@@ -65,6 +66,7 @@ def buffcut_partition_vectorized(
     *,
     wave: int = 1,
     chunk: int = 1,
+    engine: str = "incremental",
 ) -> tuple[np.ndarray, StreamStats]:
     spec = cfg.score_spec()
     if spec.needs_block_counts:
@@ -74,21 +76,9 @@ def buffcut_partition_vectorized(
         eps=cfg.eps, gamma=cfg.gamma,
     )
     n = g.n
-    deg_w = np.zeros(n, dtype=np.float64)
-    np.add.at(
-        deg_w,
-        np.repeat(np.arange(n, dtype=np.int64), np.diff(g.indptr)),
-        g.edge_w.astype(np.float64),
-    )
-    assigned_w = np.zeros(n, dtype=np.float64)
-    buffered_w = np.zeros(n, dtype=np.float64)
-
-    def scores_of(vs: np.ndarray) -> np.ndarray:
-        return np.asarray(
-            spec(assigned_w[vs], deg_w[vs], buffered_w[vs], 0.0), dtype=np.float64
-        )
-
-    buf = VectorBuffer(n, spec.s_max, cfg.disc_factor)
+    buf = VectorBuffer(n, spec.s_max, cfg.disc_factor, engine=engine)
+    # the rescore state shares the buffer's membership mask zero-copy
+    st = RescoreState(g, spec, cfg.k, member=buf.in_buf)
     block = np.full(n, -1, dtype=np.int64)
     loads = np.zeros(cfg.k, dtype=np.float64)
     batch: list[np.ndarray] = []
@@ -97,22 +87,10 @@ def buffcut_partition_vectorized(
     t0 = time.perf_counter()
 
     def rescore_neighbors_of(us: np.ndarray, was_buffered: bool) -> None:
-        """Admitted/assigned wave `us`: one scatter-add over its edges."""
-        if us.size == 0:
-            return
-        gather = np.concatenate(
-            [np.arange(g.indptr[u], g.indptr[u + 1]) for u in us]
-        )
-        nbr = g.indices[gather].astype(np.int64)
-        w = g.edge_w[gather].astype(np.float64)
-        in_b = buf.in_buf[nbr]
-        nbr_b, w_b = nbr[in_b], w[in_b]
-        np.add.at(assigned_w, nbr_b, w_b)
-        if was_buffered and spec.needs_buffered_count:
-            np.add.at(buffered_w, nbr_b, -w_b)
-        touched = np.unique(nbr_b)
+        """Admitted/assigned wave `us`: one batched CSR-slice rescore."""
+        touched, scores = st.bump_assigned(us, was_buffered)
         if touched.size:
-            buf.update_scores(touched, scores_of(touched))
+            buf.update_scores(touched, scores)
 
     def commit_batch() -> None:
         nonlocal batch_count
@@ -158,16 +136,15 @@ def buffcut_partition_vectorized(
         rest = vs[degs[vs] <= cfg.d_max]
         if rest.size:
             if spec.needs_buffered_count:
-                # mutual buffered counts for the arriving chunk
-                for v in rest:
-                    nb = g.neighbors(int(v)).astype(np.int64)
-                    inb = nb[buf.in_buf[nb]]
-                    w = g.neighbor_weights(int(v))[buf.in_buf[nb]].astype(np.float64)
-                    buffered_w[v] = w.sum()
-                    np.add.at(buffered_w, inb, w)
-                    if inb.size:
-                        buf.update_scores(inb, scores_of(inb))
-            buf.insert_many(rest, scores_of(rest))
+                # mutual buffered counts for the arriving chunk (one batched
+                # CSR-slice pass). Edges between chunk-mates are never
+                # credited (membership is checked before the chunk inserts),
+                # so chunk>1 under-counts NSS — exact for chunk=1, the
+                # paper's semantics.
+                touched, scores = st.bump_buffered(rest)
+                if touched.size:
+                    buf.update_scores(touched, scores)
+            buf.insert_many(rest, st.scores_of(rest))
         while len(buf) >= cfg.buffer_size:
             admit(buf.evict(min(wave, len(buf) - cfg.buffer_size + 1)))
     while len(buf) > 0:

@@ -51,6 +51,19 @@ class CSRGraph:
     def neighbor_weights(self, v: int) -> np.ndarray:
         return self.edge_w[self.indptr[v] : self.indptr[v + 1]]
 
+    def slice_indices(self, nodes: np.ndarray) -> np.ndarray:
+        """Flat CSR positions of all edges incident to `nodes`, in node
+        order then CSR order — the batched equivalent of concatenating
+        `arange(indptr[v], indptr[v+1])` per node, without a Python loop."""
+        nodes = np.asarray(nodes, dtype=np.int64)
+        degs = self.indptr[nodes + 1] - self.indptr[nodes]
+        total = int(degs.sum())
+        if total == 0:
+            return np.empty(0, dtype=np.int64)
+        # within-slice offset = position minus the start of its own segment
+        seg_start = np.repeat(np.cumsum(degs) - degs, degs)
+        return np.arange(total, dtype=np.int64) - seg_start + np.repeat(self.indptr[nodes], degs)
+
     def total_edge_weight(self) -> float:
         return float(self.edge_w.sum() / 2.0)
 
@@ -137,9 +150,13 @@ class CSRGraph:
         w = max(8, ((w + 7) // 8) * 8)
         nbr = np.full((nodes.shape[0], w), -1, dtype=np.int32)
         wts = np.zeros((nodes.shape[0], w), dtype=np.float32)
-        for i, v in enumerate(nodes):
-            s, e = self.indptr[v], self.indptr[v + 1]
-            d = min(int(e - s), w)
-            nbr[i, :d] = self.indices[s : s + d]
-            wts[i, :d] = self.edge_w[s : s + d]
+        degs_c = np.minimum(degs, w)  # rows over pad_width are truncated
+        total = int(degs_c.sum())
+        if total:
+            seg_start = np.repeat(np.cumsum(degs_c) - degs_c, degs_c)
+            col = np.arange(total, dtype=np.int64) - seg_start
+            pos = col + np.repeat(self.indptr[nodes], degs_c)
+            row = np.repeat(np.arange(nodes.shape[0], dtype=np.int64), degs_c)
+            nbr[row, col] = self.indices[pos]
+            wts[row, col] = self.edge_w[pos]
         return nbr, wts, nbr >= 0

@@ -1,0 +1,154 @@
+"""Minimal hypothesis fallback so the suite runs where hypothesis is absent.
+
+Registered by conftest.py into sys.modules as `hypothesis` /
+`hypothesis.strategies` only when the real package cannot be imported.
+Implements just the surface this suite uses — `given`, `settings`,
+`strategies.{integers,floats,lists,tuples,sampled_from,composite}` — as a
+seeded random-example runner (no shrinking, no database). Example counts are
+capped (STUB_MAX_EXAMPLES env var, default 10) to keep the fallback fast;
+CI installs real hypothesis and never loads this module.
+"""
+from __future__ import annotations
+
+import inspect
+import os
+import random
+import sys
+import types
+import zlib
+
+_MAX_EXAMPLES_CAP = int(os.environ.get("STUB_MAX_EXAMPLES", "10"))
+
+
+class Strategy:
+    def example(self, rng: random.Random):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def example(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(Strategy):
+    def __init__(self, min_value=0.0, max_value=1.0, **_kw):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def example(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Lists(Strategy):
+    def __init__(self, elements, min_size=0, max_size=10):
+        self.elements, self.lo, self.hi = elements, int(min_size), int(max_size)
+
+    def example(self, rng):
+        return [self.elements.example(rng) for _ in range(rng.randint(self.lo, self.hi))]
+
+
+class _Tuples(Strategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def example(self, rng):
+        return tuple(s.example(rng) for s in self.strategies)
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def example(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Composite(Strategy):
+    def __init__(self, fn, args, kwargs):
+        self.fn, self.args, self.kwargs = fn, args, kwargs
+
+    def example(self, rng):
+        draw = lambda strategy: strategy.example(rng)
+        return self.fn(draw, *self.args, **self.kwargs)
+
+
+def integers(min_value, max_value):
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value=0.0, max_value=1.0, **kw):
+    return _Floats(min_value, max_value, **kw)
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Lists(elements, min_size=min_size, max_size=max_size)
+
+
+def tuples(*strategies):
+    return _Tuples(*strategies)
+
+
+def sampled_from(elements):
+    return _SampledFrom(elements)
+
+
+def composite(fn):
+    def make(*args, **kwargs):
+        return _Composite(fn, args, kwargs)
+
+    return make
+
+
+def settings(max_examples=None, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies, **kw_strategies):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters)
+        bound = set(kw_strategies)
+        # positional strategies bind the rightmost non-keyword-bound params
+        pos_names = [p for p in params if p not in bound][-len(strategies):] if strategies else []
+        fixture_names = [p for p in params if p not in bound and p not in pos_names]
+
+        def wrapper(**fixtures):
+            n = getattr(wrapper, "_stub_max_examples", None) or getattr(
+                fn, "_stub_max_examples", None
+            ) or _MAX_EXAMPLES_CAP
+            n = min(int(n), _MAX_EXAMPLES_CAP)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = {name: s.example(rng) for name, s in zip(pos_names, strategies)}
+                drawn.update({name: s.example(rng) for name, s in kw_strategies.items()})
+                fn(**fixtures, **drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = sig.replace(
+            parameters=[sig.parameters[p] for p in fixture_names]
+        )
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this module as `hypothesis` (+ `.strategies`) in sys.modules."""
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "tuples", "sampled_from", "composite"):
+        setattr(strat, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strat
+    hyp.__stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

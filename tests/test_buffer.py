@@ -120,3 +120,70 @@ def test_vector_buffer_wave_eviction():
     top3 = list(vb.evict(3))
     assert top3 == [9, 8, 7]
     assert len(vb) == 7
+
+
+def test_vector_buffer_decrease_keeps_stamp():
+    """Regression: an attempted decrease must keep the LIFO position (the
+    bucket PQ's IncreaseKey is a no-op there); refreshing the stamp would
+    wrongly make the node 'newest' in its unchanged bucket."""
+    vb = VectorBuffer(4, 1.0, 100)
+    vb.insert_many(np.array([0, 1]), np.array([0.5, 0.5]))
+    vb.update_scores(np.array([0]), np.array([0.3]))  # monotone guard holds key
+    # LIFO within the bucket: 1 (inserted last) must still pop first
+    assert list(vb.evict(2)) == [1, 0]
+
+
+def test_vector_buffer_same_bucket_update_keeps_stamp():
+    """An increase that lands in the same bucket must not refresh the stamp
+    (BucketPQ returns early without re-appending)."""
+    vb = VectorBuffer(4, 1.0, 10)
+    vb.insert_many(np.array([0, 1]), np.array([0.50, 0.52]))  # same bucket 5
+    vb.update_scores(np.array([0]), np.array([0.53]))  # still bucket 5
+    assert list(vb.evict(2)) == [1, 0]
+
+
+@given(op_sequences())
+@settings(max_examples=60, deadline=None)
+def test_vector_buffer_matches_bucket_pq_trace(ops):
+    """Full-trace oracle: under any insert/increase/extract interleaving the
+    dense buffer's evict(1) must reproduce BucketPQ.extract_max exactly
+    (same discretization, same LIFO tie-break, same IncreaseKey no-ops)."""
+    pq = BucketPQ(s_max=1.0, disc_factor=100)
+    vb = VectorBuffer(128, 1.0, 100)
+    seen = set()
+    for op, v, s in ops:
+        if op == "insert" and v < 128:
+            pq.insert(v, s)
+            vb.insert_many(np.array([v]), np.array([s]))
+            seen.add(v)
+        elif op == "increase" and v in pq:
+            pq.increase_key(v, s)
+            vb.update_scores(np.array([v]), np.array([s]))
+        elif op == "extract" and len(pq):
+            assert [pq.extract_max()] == list(vb.evict(1))
+    while len(pq):
+        assert [pq.extract_max()] == list(vb.evict(1))
+    assert len(vb) == 0
+
+
+@given(op_sequences(), st.integers(1, 5))
+@settings(max_examples=40, deadline=None)
+def test_incremental_matches_scan_engine(ops, wave):
+    """Both eviction engines must emit bit-identical waves for any trace."""
+    a = VectorBuffer(128, 1.0, 100, engine="incremental")
+    b = VectorBuffer(128, 1.0, 100, engine="scan")
+    live = set()
+    for op, v, s in ops:
+        if op == "insert" and v < 128:
+            a.insert_many(np.array([v]), np.array([s]))
+            b.insert_many(np.array([v]), np.array([s]))
+            live.add(v)
+        elif op == "increase" and v in live:
+            a.update_scores(np.array([v]), np.array([s]))
+            b.update_scores(np.array([v]), np.array([s]))
+        elif op == "extract" and live:
+            ea, eb = a.evict(wave), b.evict(wave)
+            assert np.array_equal(ea, eb)
+            live -= set(int(x) for x in ea)
+    while len(a):
+        assert np.array_equal(a.evict(wave), b.evict(wave))

@@ -131,6 +131,28 @@ def test_ell_block(small_rmat):
         assert got == true_n
 
 
+def test_ell_block_preserves_csr_order_and_weights(small_rmat):
+    """The vectorized packer must keep CSR neighbor order and pad with 0s."""
+    g = small_rmat
+    nodes = np.array([3, 0, 7, 3, 11])  # duplicates and arbitrary order OK
+    nbr, w, mask = g.ell_block(nodes)
+    for i, v in enumerate(nodes):
+        d = int(g.indptr[v + 1] - g.indptr[v])
+        assert np.array_equal(nbr[i, :d], g.neighbors(int(v)))
+        assert np.array_equal(w[i, :d], g.neighbor_weights(int(v)))
+        assert (nbr[i, d:] == -1).all() and (w[i, d:] == 0).all()
+
+
+def test_slice_indices_matches_naive(small_rmat):
+    g = small_rmat
+    nodes = np.array([5, 0, 9, 5])
+    naive = np.concatenate(
+        [np.arange(g.indptr[v], g.indptr[v + 1]) for v in nodes]
+    )
+    assert np.array_equal(g.slice_indices(nodes), naive)
+    assert g.slice_indices(np.empty(0, dtype=np.int64)).size == 0
+
+
 def test_sampler_partition_aware(small_grid):
     g = small_grid
     block = (np.arange(g.n) * 4 // g.n).astype(np.int64)  # 4 contiguous blocks

@@ -130,6 +130,57 @@ def test_lp_refine_monotone(small_grid):
     assert edge_cut(g, refined) <= before
 
 
+def test_histogram_engines_agree(small_rmat):
+    """Sparse bincount, sort fallback and the ELL kernel path must produce
+    the same (node, label) -> weight histogram."""
+    from repro.core.histogram import (
+        neighbor_label_weights, sorted_neighbor_label_weights,
+        label_histogram_ell, best_label_per_src,
+    )
+    g = small_rmat
+    rng = np.random.default_rng(0)
+    for labels in (rng.integers(0, 17, g.n), rng.permutation(g.n).astype(np.int64)):
+        s_new = neighbor_label_weights(g, labels)
+        s_old = sorted_neighbor_label_weights(g, labels)
+        d_new = {(int(a), int(b)): w for a, b, w in zip(*s_new)}
+        d_old = {(int(a), int(b)): w for a, b, w in zip(*s_old)}
+        assert d_new.keys() == d_old.keys()
+        for key in d_new:
+            assert d_new[key] == pytest.approx(d_old[key])
+        counts, uniq = label_histogram_ell(g, labels, use_kernel=False)
+        col = {int(l): j for j, l in enumerate(uniq)}
+        for (v, l), w in d_old.items():
+            assert counts[v, col[l]] == pytest.approx(w, rel=1e-5)
+        assert np.count_nonzero(counts) == len(d_old)
+        # best-move selection matches the seed's lexsort policy
+        src, lab, wsum = s_old
+        keep = lab != labels[src]
+        movers, targets, gains = best_label_per_src(src[keep], lab[keep], wsum[keep], g.n)
+        order = np.lexsort((lab[keep], -wsum[keep], src[keep]))
+        first = np.ones(order.shape[0], dtype=bool)
+        first[1:] = src[keep][order][1:] != src[keep][order][:-1]
+        sel = order[first]
+        assert np.array_equal(movers, src[keep][sel])
+        assert np.array_equal(targets, lab[keep][sel])
+        np.testing.assert_allclose(gains, wsum[keep][sel])
+
+
+@pytest.mark.parametrize("engine", ["sparse", "ell"])
+def test_multilevel_engine_parity(engine, small_grid):
+    """Both inner-op engines drive multilevel to the same partition."""
+    g = small_grid
+    k = 4
+    p = _params(g, k)
+    pinned = np.full(g.n, -1, dtype=np.int64)
+    ref = multilevel_partition(g, pinned, p, np.zeros(k),
+                               MultilevelConfig(engine="sparse"))
+    got = multilevel_partition(g, pinned, p, np.zeros(k),
+                               MultilevelConfig(engine=engine))
+    assert edge_cut(g, got) == edge_cut(g, ref)
+    loads = np.bincount(got, weights=g.node_w, minlength=k)
+    assert loads.max() <= p.cap + 1e-6
+
+
 @given(st.integers(2, 8), st.integers(0, 10**6))
 @settings(max_examples=10, deadline=None)
 def test_multilevel_property(k, seed):
