@@ -6,13 +6,11 @@ the largest tested), with superlinear memory growth and moderate runtime.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import (
     tuning_set, default_cfg, run_method, sweep_orders, csv_row,
     gmean_over_instances,
 )
-from repro.core import BuffCutConfig
 
 
 def run(verbose: bool = True) -> list[str]:

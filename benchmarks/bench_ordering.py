@@ -7,9 +7,8 @@ BuffCut 46.7M on random.)
 """
 from __future__ import annotations
 
-import time
 
-from repro.graphs import apply_order, random_order, bfs_order
+from repro.graphs import apply_order, random_order
 from benchmarks.common import tuning_set, default_cfg, run_method, csv_row
 
 
@@ -17,7 +16,6 @@ def run(verbose: bool = True) -> list[str]:
     g = tuning_set()["mesh-grid"]  # high-locality source order, like a crawl
     cfg = default_cfg(g)
     rows = []
-    t0 = time.perf_counter()
     for method in ("heistream", "cuttana", "buffcut"):
         src = run_method(method, g, cfg)
         rnd = run_method(method, apply_order(g, random_order(g, 100)), cfg)

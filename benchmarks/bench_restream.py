@@ -12,8 +12,6 @@ import time
 from repro.graphs import apply_order, random_order
 from repro.core import buffcut_partition, buffcut_partition_pipelined, restream, cut_ratio
 from benchmarks.common import tuning_set, default_cfg, csv_row, gmean_over_instances
-from repro.graphs.locality import geometric_mean
-import numpy as np
 
 
 def run(verbose: bool = True) -> list[str]:

@@ -5,15 +5,12 @@ than ANR (-0.9%), NSS/CMS clearly worse (> +18%).
 """
 from __future__ import annotations
 
-import time
 
-import numpy as np
 
 from benchmarks.common import (
     tuning_set, default_cfg, run_method, sweep_orders, csv_row,
     gmean_over_instances,
 )
-from repro.core import buffcut_partition, BuffCutConfig
 
 
 def run(verbose: bool = True) -> list[str]:

@@ -7,7 +7,6 @@ a modest runtime/memory overhead vs HeiStream (paper: 1.8x / 1.09x) for
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import (
     tuning_set, default_cfg, run_method, sweep_orders, csv_row,

@@ -18,9 +18,17 @@ from repro.graphs import (
 )
 from repro.graphs.locality import geometric_mean
 from repro.core import (
-    BuffCutConfig, CuttanaConfig, buffcut_partition, heistream_partition,
-    cuttana_partition, fennel_partition, ldg_partition, cut_ratio,
-    edge_cut, balance, restream, buffcut_partition_pipelined,
+    BuffCutConfig,
+    CuttanaConfig,
+    buffcut_partition,
+    heistream_partition,
+    cuttana_partition,
+    fennel_partition,
+    ldg_partition,
+    cut_ratio,
+    edge_cut,
+    balance,
+    buffcut_partition_pipelined,
     buffcut_partition_vectorized,
 )
 

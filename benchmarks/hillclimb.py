@@ -36,7 +36,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.launch.mesh import make_production_mesh, dp_size
-from repro.launch.steps import build_cell, lower_cell, param_shardings, _shardings_with_fallback
+from repro.launch.steps import param_shardings, _shardings_with_fallback
 from repro.launch.hlo_analysis import RooflineTerms
 from benchmarks.roofline import analyze_cell, _compile_metrics, analytic_hbm_bytes
 
@@ -79,7 +79,6 @@ def _build_halo_cell(mesh, halo_frac: float):
     from repro.models import gnn as gnn_mod
     from repro.train.adamw import AdamW
     from repro.distributed.sharding import gnn_sharding_rules
-    import numpy as np  # noqa: F401
 
     spec = get_arch("graphsage-reddit")
     shape = spec.shapes["ogb_products"]

@@ -29,15 +29,11 @@ import dataclasses
 import json
 import time
 
-import jax
 
 from repro.configs import ARCHS, get_arch
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_cell, lower_cell
-from repro.launch.hlo_analysis import (
-    analyze_compiled, collective_bytes, RooflineTerms,
-    PEAK_FLOPS, HBM_BW, ICI_BW,
-)
+from repro.launch.hlo_analysis import collective_bytes, RooflineTerms, HBM_BW
 
 
 def analytic_hbm_bytes(arch_id: str, shape_name: str, mesh) -> float:

@@ -2,7 +2,6 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 
 from repro.graphs import grid_mesh_graph, random_order, apply_order, mean_aid
 from repro.core import (

@@ -7,7 +7,6 @@ Container-scale presets shrink graph-dependent sizes proportionally.
 """
 from __future__ import annotations
 
-import dataclasses
 
 from repro.core.buffcut import BuffCutConfig
 from repro.core.multilevel import MultilevelConfig

@@ -1,5 +1,4 @@
 """egnn [gnn] — 4 layers, d_hidden=64, E(n)-equivariant [arXiv:2102.09844]."""
-import dataclasses
 
 from repro.configs.base import ArchSpec
 from repro.configs.gnn_common import gnn_shapes, gnn_input_specs, gnn_smoke_batch

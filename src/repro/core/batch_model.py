@@ -55,12 +55,14 @@ def build_batch_model(
     int_edges = np.stack([int_src[keep], int_dst[keep]], axis=1)
     int_w = int_w[keep]
 
-    # aux edges: accumulate weight to each block
+    # aux edges: accumulate weight to each block (composite-key bincount —
+    # one O(ext) pass instead of the np.add.at scatter into the dense grid)
     ext = ~internal
     dst_blk = block[dst_g[ext]]
     assigned = dst_blk >= 0
-    aux_w = np.zeros((b, k), dtype=np.float64)
-    np.add.at(aux_w, (src_l[ext][assigned], dst_blk[assigned]), w[ext][assigned])
+    key = src_l[ext][assigned] * np.int64(k) + dst_blk[assigned]
+    aux_w = np.bincount(key, weights=w[ext][assigned], minlength=b * k)
+    aux_w = aux_w.reshape(b, k)
     ai, ab = np.nonzero(aux_w)
     aux_edges = np.stack([ai, b + ab], axis=1)
     aux_wts = aux_w[ai, ab].astype(np.float32)

@@ -48,6 +48,7 @@ class BuffCutConfig:
 @dataclasses.dataclass
 class StreamStats:
     runtime_s: float = 0.0
+    ml_time_s: float = 0.0            # time inside multilevel_partition
     n_batches: int = 0
     n_hubs: int = 0
     ier_per_batch: list = dataclasses.field(default_factory=list)
@@ -111,7 +112,9 @@ def buffcut_partition(
             return
         bnodes = np.asarray(batch, dtype=np.int64)
         model = build_batch_model(g, bnodes, block, cfg.k)
+        t_ml = time.perf_counter()
         labels = multilevel_partition(model.graph, model.pinned_block, p, loads, cfg.ml)
+        stats.ml_time_s += time.perf_counter() - t_ml
         block[bnodes] = labels[: bnodes.shape[0]]
         np.add.at(loads, labels[: bnodes.shape[0]], g.node_w[bnodes].astype(np.float64))
         if cfg.collect_stats:

@@ -6,7 +6,6 @@ only difference from buffcut_partition is batch composition.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import numpy as np

@@ -192,7 +192,10 @@ def label_histogram_ell(
 
     labc_node, uniq = compact_labels(labels)
     L = uniq.shape[0]
-    nbr, wts, mask = g.ell_block(np.arange(g.n, dtype=np.int64))
+    # bucketed (pow2 rows/width) tiles: a stream of slightly different
+    # graph sizes reuses a handful of jit compilations instead of one per
+    # distinct (n, max_degree) pair
+    nbr, wts, mask = g.to_ell_padded()
     nbr_lab = np.where(mask, labc_node[np.where(mask, nbr, 0)], -1).astype(np.int32)
     if use_kernel is None:
         use_kernel = _ops.USE_KERNELS_DEFAULT
@@ -201,4 +204,4 @@ def label_histogram_ell(
     counts = _ops.block_histogram(
         jnp.asarray(nbr_lab), jnp.asarray(wts), l_pad, use_kernel=use_kernel
     )
-    return np.asarray(counts)[:, :L], uniq
+    return np.asarray(counts)[:g.n, :L], uniq

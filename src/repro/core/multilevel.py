@@ -38,14 +38,21 @@ class MultilevelConfig:
     refine_rounds: int = 3         # LP refinement rounds per level
     min_shrink: float = 0.95       # stop coarsening if shrink factor above
     seed: int = 0
-    engine: str = "auto"           # "auto" | "sparse" | "ell" inner-op engine
+    engine: str = "auto"           # "auto" | "sparse" | "ell" | "jax"
 
 
 def _resolve_engine(engine: str, g: CSRGraph) -> str:
     """auto -> ELL tiles through the Pallas/jnp histogram op on TPU (where
-    the dense formulation is the fast one), sparse bincount elsewhere."""
+    the dense formulation is the fast one), sparse bincount elsewhere.
+
+    "jax" selects the device-resident engine at the multilevel_partition
+    level (core/multilevel_jax.py); the host helpers below (lp_cluster,
+    lp_refine) resolve it to "sparse" so they remain directly callable.
+    """
     if engine in ("sparse", "ell"):
         return engine
+    if engine == "jax":
+        return "sparse"
     if engine != "auto":
         raise ValueError(f"unknown multilevel engine {engine!r}")
     from repro.kernels import ops as _ops
@@ -210,17 +217,25 @@ def initial_fennel(
     p: FennelParams,
     loads: np.ndarray,
 ) -> np.ndarray:
-    """Weighted Fennel on the coarsest graph, heaviest free nodes first."""
+    """Weighted Fennel on the coarsest graph, heaviest free nodes first.
+
+    Sequential by construction (each step must see earlier placements), but
+    the per-step work is one vectorized connectivity gather over the ELL
+    rows extracted once up front — no per-node `np.add.at` scatter.
+    """
     labels = pinned.copy()
     free = np.nonzero(pinned < 0)[0]
     order = free[np.lexsort((free, -g.node_w[free]))]
     loads = loads.copy()
-    for v in order:
-        conn = np.zeros(p.k, dtype=np.float64)
-        nbrs = g.neighbors(int(v))
-        lb = labels[nbrs]
-        ok = lb >= 0
-        np.add.at(conn, lb[ok], g.neighbor_weights(int(v))[ok])
+    if order.size == 0:
+        return labels
+    # one batched gather of every free node's neighbor lists (CSR-ordered)
+    nbr, wts, mask = g.ell_block(order)
+    nbr = np.where(mask, nbr, 0)
+    for step, v in enumerate(order):
+        lb = labels[nbr[step]]
+        ok = mask[step] & (lb >= 0)
+        conn = np.bincount(lb[ok], weights=wts[step][ok], minlength=p.k)
         score = conn - fennel_penalty(loads, p)
         feasible = loads + g.node_w[v] <= p.cap
         score = np.where(feasible, score, -np.inf)
@@ -277,10 +292,17 @@ def multilevel_partition(
 ) -> np.ndarray:
     """Partition the model graph; returns a label per local node. Aux nodes
     keep their pinned labels; `loads_base` are the current global block
-    loads (aux node weights are zero, see batch_model.py)."""
+    loads (aux node weights are zero, see batch_model.py).
+
+    `engine="jax"` routes the whole V-cycle to the device-resident engine
+    (core/multilevel_jax.py) — identical results, labels stay on device
+    until the batch commits."""
     cfg = cfg or MultilevelConfig()
+    if cfg.engine == "jax":
+        from repro.core.multilevel_jax import multilevel_partition_jax
+
+        return multilevel_partition_jax(g, pinned, p, loads_base, cfg)
     rng = np.random.default_rng(cfg.seed)
-    n_free = int((pinned < 0).sum())
     total_free_w = float(g.node_w[pinned < 0].sum())
     max_cluster_w = max(total_free_w / max(2 * p.k, 16), float(g.node_w.max(initial=1.0)))
 

@@ -1,0 +1,685 @@
+"""Device-resident multilevel batch engine — `MultilevelConfig(engine="jax")`.
+
+The numpy engines in core/multilevel.py run the V-cycle on host and only
+dispatch the label-histogram inner op to the device; every LP round bounces
+labels through `np.add.at`.  This module keeps the *whole* per-batch
+V-cycle (DESIGN.md §3.5) on device:
+
+  pack      the batch model graph is packed once into fixed-shape padded
+            buffers (`CSRGraph.to_coo_padded` / `to_ell_padded`, pow2
+            bucketing so jit caches a handful of compilations per stream),
+  coarsen   LP clustering rounds as a `lax.fori_loop` body; contraction is
+            a segment-sum over composite (coarse-src, coarse-dst) keys into
+            the same padded buffers,
+  initial   weighted Fennel on the coarsest level as a sequential
+            `lax.fori_loop` over the (≤ coarsen_target) free nodes,
+  refine    capacity-constrained LP refinement rounds per level.
+
+The fused best-move + greedy capacity acceptance (numpy: lexsort + grouped
+cumsum) becomes an on-device `jnp.lexsort` + segmented `lax.cummax` prefix
+scan.  Neighbor-label aggregation has three modes, picked per level by
+padded volume:
+
+  dense   scatter-add into a dense (n_pad, L_pad) count matrix — the
+          device twin of the numpy composite-key bincount,
+  ell     the padded ELL tiles through `kernels.ops.block_histogram` — the
+          Pallas `ell_histogram` kernel on TPU, its jnp reference under
+          XLA elsewhere (level 0 only: coarse degrees outgrow the tiles),
+  sort    segmented sort + prefix sums over composite keys for shapes too
+          large to densify (no volume constraint).
+
+Labels live on device across all levels and transfer to host exactly once,
+when the committed batch's assignment is read back.  All arithmetic runs
+under `jax.experimental.enable_x64` so results are *identical* to the
+numpy `sparse` oracle at fixed seed (integer-weight graphs; pinned by
+tests/test_multilevel_jax.py).  Host-side work is limited to per-level
+scalar pulls (free-node count, coarse size) that drive the level loop.
+"""
+from __future__ import annotations
+
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.core.fennel import FennelParams
+from repro.core.multilevel import _ELL_VOLUME_CAP as ELL_VOLUME_CAP
+from repro.core.multilevel import _ELL_WIDTH_CAP as ELL_WIDTH_CAP
+from repro.graphs.csr import CSRGraph, bucket_size
+
+# dense (n_pad · L_pad) count-matrix entry ceiling; above it the sort mode
+# takes over.  On TPU the dense compare-accumulate formulation is the fast
+# one (32 MiB of f32 at the cap); on CPU the row-argmax over the padded
+# label domain is pure wasted bandwidth, so the sort mode takes over much
+# earlier (the refine rounds, with l_pad = k, stay dense everywhere).
+# ELL tile ceilings are shared with the host engine (multilevel.py) so the
+# two engines' dispatch thresholds can never drift apart.
+DENSE_VOLUME_CAP = (1 << 22) if jax.default_backend() == "tpu" else (1 << 18)
+
+# tests force a mode ("dense" | "ell" | "sort") to pin cross-mode parity
+MODE_OVERRIDE: str | None = None
+
+# buffer donation frees the device copies of loop-carried state; the CPU
+# backend does not implement donation and warns, so gate on backend
+_DONATE = jax.default_backend() != "cpu"
+
+# tracing side-effect counters: each jit recompilation re-executes the
+# Python body exactly once, so these count compilations per entry point
+# (the shape-bucketing test asserts they stay flat across a stream)
+_TRACE_COUNTS: dict[str, int] = {}
+
+
+def _count_trace(name: str) -> None:
+    _TRACE_COUNTS[name] = _TRACE_COUNTS.get(name, 0) + 1
+
+
+def trace_counts() -> dict[str, int]:
+    """Compilations per jitted engine entry point since the last reset."""
+    return dict(_TRACE_COUNTS)
+
+
+def reset_trace_counts() -> None:
+    _TRACE_COUNTS.clear()
+
+
+def _jit(fn, *, static=(), donate=()):
+    return jax.jit(fn, static_argnames=static,
+                   donate_argnums=donate if _DONATE else ())
+
+
+# --------------------------------------------------------------------------
+# aggregation: per-node (cur_conn, best_w, best_lab) from neighbor labels
+# --------------------------------------------------------------------------
+
+def _edge_labels(edst: jnp.ndarray, labels: jnp.ndarray, n_pad: int) -> jnp.ndarray:
+    """Label of each directed edge's head; sentinel edges -> -1."""
+    pad = edst >= n_pad
+    return jnp.where(pad, -1, labels[jnp.minimum(edst, n_pad - 1)])
+
+
+def _best_from_counts(
+    counts: jnp.ndarray,
+    own: jnp.ndarray,
+    forbidden_cols: jnp.ndarray | None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Row-wise epilogue over a dense (rows, L) count matrix.
+
+    Mirrors the numpy ELL path bit for bit: read own-label connectivity,
+    mask forbidden and own columns to -inf, argmax (first max — columns are
+    raw ascending labels, so ties break toward the lower label).
+    """
+    rows_n, l_pad = counts.shape
+    rows = jnp.arange(rows_n)
+    own_c = jnp.clip(own, 0, l_pad - 1)
+    cur_conn = jnp.where(own >= 0, counts[rows, own_c], 0.0)
+    if forbidden_cols is not None:
+        counts = jnp.where(forbidden_cols[None, :], -jnp.inf, counts)
+    col_ids = jnp.arange(l_pad)
+    counts = jnp.where(col_ids[None, :] == own[:, None], -jnp.inf, counts)
+    best_col = jnp.argmax(counts, axis=1)
+    best_w = counts[rows, best_col]
+    return cur_conn, best_w, best_col
+
+
+def _agg_dense(
+    esrc: jnp.ndarray,
+    edst: jnp.ndarray,
+    ew: jnp.ndarray,
+    labels: jnp.ndarray,
+    own: jnp.ndarray,
+    forbidden_cols: jnp.ndarray | None,
+    n_pad: int,
+    l_pad: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Scatter-add dense counts — the device twin of the bincount engine."""
+    lab = _edge_labels(edst, labels, n_pad)
+    valid = (esrc < n_pad) & (lab >= 0)
+    flat = jnp.where(valid, esrc * l_pad + jnp.clip(lab, 0, l_pad - 1),
+                     n_pad * l_pad)
+    counts = jnp.zeros(n_pad * l_pad + 1, dtype=ew.dtype)
+    counts = counts.at[flat].add(jnp.where(valid, ew, 0.0))
+    counts = counts[: n_pad * l_pad].reshape(n_pad, l_pad)
+    return _best_from_counts(counts, own, forbidden_cols)
+
+
+def _agg_ell(
+    nbr: jnp.ndarray,
+    wts: jnp.ndarray,
+    labels: jnp.ndarray,
+    own: jnp.ndarray,
+    forbidden_cols: jnp.ndarray | None,
+    n_pad: int,
+    l_pad: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """ELL tiles through the histogram op (Pallas kernel on TPU)."""
+    from repro.kernels import ops as _ops
+
+    mask = nbr >= 0
+    lab = jnp.where(mask, labels[jnp.clip(nbr, 0, n_pad - 1)], -1)
+    counts = _ops.block_histogram(
+        lab.astype(jnp.int32), wts.astype(jnp.float32), l_pad,
+        use_kernel=_ops.USE_KERNELS_DEFAULT,
+    )
+    # f32 kernel accumulator -> f64 epilogue, same cast the host ELL engine
+    # performs (exact for the integer-weight graphs the parity suite pins)
+    return _best_from_counts(counts.astype(jnp.float64), own, forbidden_cols)
+
+
+def _agg_sort(
+    esrc: jnp.ndarray,
+    edst: jnp.ndarray,
+    ew: jnp.ndarray,
+    labels: jnp.ndarray,
+    own: jnp.ndarray,
+    forbidden: jnp.ndarray | None,
+    n_pad: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Segmented-sort aggregation: no dense scratch, any label domain."""
+    lab = _edge_labels(edst, labels, n_pad)
+    valid = (esrc < n_pad) & (lab >= 0)
+    base = jnp.int64(n_pad + 1)
+    key = jnp.where(valid, esrc * base + lab, base * base - 1)
+    order = jnp.argsort(key, stable=True)
+    key_s, w_s = key[order], ew[order]
+    src_s = jnp.minimum(key_s // base, n_pad)
+    lab_s = key_s % base
+    # per-(src, label) group totals via a restarted cumsum, read at group
+    # end positions — everything below is scans and gathers, no scatters
+    gstart = jnp.concatenate([jnp.ones(1, bool), key_s[1:] != key_s[:-1]])
+    gend = jnp.concatenate([key_s[1:] != key_s[:-1], jnp.ones(1, bool)])
+    csum = jnp.cumsum(w_s)
+    gbase = jax.lax.cummax(jnp.where(gstart, csum - w_s, -jnp.inf))
+    total = csum - gbase
+    # zero-sum groups dropped to match aggregate_by_key's dense path
+    live = gend & (src_s < n_pad) & (total != 0)
+    own_s = own[jnp.minimum(src_s, n_pad - 1)]
+    is_own = live & (lab_s == own_s)
+    elig = live & ~is_own
+    if forbidden is not None:
+        elig &= ~forbidden[jnp.clip(lab_s, 0, n_pad - 1)]
+    nstart = jnp.concatenate([jnp.ones(1, bool), src_s[1:] != src_s[:-1]])
+    own_run = _seg_scan(jnp.where(is_own, total, -jnp.inf), nstart,
+                        jnp.maximum)  # <=1 own group per node: max picks it
+    cur_conn = _ends_gather(src_s, own_run, n_pad, -jnp.inf)
+    cur_conn = jnp.where(jnp.isfinite(cur_conn), cur_conn, 0.0)
+    best_run = _seg_scan(jnp.where(elig, total, -jnp.inf), nstart,
+                         jnp.maximum)
+    best_w = _ends_gather(src_s, best_run, n_pad, -jnp.inf)
+    is_best = elig & (total == best_w[jnp.minimum(src_s, n_pad - 1)])
+    lab_run = _seg_scan(jnp.where(is_best, lab_s, base), nstart, jnp.minimum)
+    best_lab = _ends_gather(src_s, lab_run, n_pad, base)
+    return cur_conn, best_w, best_lab
+
+
+def _seg_scan(val: jnp.ndarray, start: jnp.ndarray, op) -> jnp.ndarray:
+    """Segmented inclusive scan (op = jnp.maximum / jnp.minimum): the scan
+    restarts wherever `start` is True.  Scatter-free — on CPU this is the
+    fast replacement for jax.ops.segment_* over presorted segments."""
+    def comb(a, b):
+        fa, va = a
+        fb, vb = b
+        return fa | fb, jnp.where(fb, vb, op(va, vb))
+
+    _, out = jax.lax.associative_scan(comb, (start, val))
+    return out
+
+
+def _ends_gather(src_s: jnp.ndarray, run: jnp.ndarray, n_pad: int,
+                 fill) -> jnp.ndarray:
+    """Per-node value from a segmented running reduction: node v's result
+    sits at the last position of its (contiguous) run in the sorted src
+    column; nodes without entries get `fill`."""
+    pos = jnp.searchsorted(src_s, jnp.arange(n_pad), side="right") - 1
+    pos_c = jnp.maximum(pos, 0)
+    hit = (pos >= 0) & (src_s[pos_c] == jnp.arange(n_pad))
+    return jnp.where(hit, run[pos_c], fill)
+
+
+def _agg_round0(
+    esrc: jnp.ndarray,
+    edst: jnp.ndarray,
+    ew: jnp.ndarray,
+    forbidden: jnp.ndarray,
+    n_pad: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Clustering round 0: labels are all-distinct (cluster = arange), so
+    the CSR *is* the histogram — per-node max edge weight, tie toward the
+    lower neighbor id, no sort and no dense scratch.  The device twin of
+    neighbor_label_weights' L == n fast path (zero-weight edges dropped
+    the same way).  Edges are src-sorted, so the per-node reductions are
+    segmented scans read off at segment ends."""
+    valid = (esrc < n_pad) & (ew != 0)
+    elig = valid & ~forbidden[jnp.minimum(edst, n_pad - 1)]
+    nstart = jnp.concatenate([jnp.ones(1, bool), esrc[1:] != esrc[:-1]])
+    w_elig = jnp.where(elig, ew, -jnp.inf)
+    best_run = _seg_scan(w_elig, nstart, jnp.maximum)
+    best_w = _ends_gather(esrc, best_run, n_pad, -jnp.inf)
+    is_best = elig & (ew == best_w[jnp.minimum(esrc, n_pad - 1)])
+    lab_cand = jnp.where(is_best, edst, n_pad)
+    lab_run = _seg_scan(lab_cand, nstart, jnp.minimum)
+    best_lab = _ends_gather(esrc, lab_run, n_pad, n_pad)
+    # no self loops -> own-label connectivity is identically zero
+    return jnp.zeros(n_pad, dtype=ew.dtype), best_w, best_lab
+
+
+def _aggregate(
+    mode: str,
+    esrc, edst, ew, nbr, wts, labels, own, forbidden, n_pad: int, l_pad: int,
+):
+    """Dispatch one of the three modes; `forbidden` is a label-domain mask
+    (length l_pad for dense/ell, node-domain length n_pad for sort)."""
+    if mode == "dense":
+        cur, bw, bl = _agg_dense(esrc, edst, ew, labels, own, forbidden,
+                                 n_pad, l_pad)
+    elif mode == "ell":
+        cur, bw, bl = _agg_ell(nbr, wts, labels, own, forbidden, n_pad, l_pad)
+    elif mode == "sort":
+        return _agg_sort(esrc, edst, ew, labels, own, forbidden, n_pad)
+    else:  # pragma: no cover - host picks from a closed set
+        raise ValueError(f"unknown aggregation mode {mode!r}")
+    return cur, bw, bl
+
+
+# --------------------------------------------------------------------------
+# fused greedy capacity acceptance (numpy: lexsort + grouped cumsum)
+# --------------------------------------------------------------------------
+
+def _accept_with_capacity(
+    movers: jnp.ndarray,
+    targets: jnp.ndarray,
+    gains: jnp.ndarray,
+    node_w: jnp.ndarray,
+    capacity: jnp.ndarray,
+    n_pad: int,
+) -> jnp.ndarray:
+    """Per-target gain-descending prefix acceptance, on device.
+
+    Non-movers sort behind every real target (sentinel target = n_pad) and
+    carry zero weight, so the per-group cumulative sums are float-identical
+    to the numpy compacted formulation (adding 0.0 is exact).
+    """
+    tgt = jnp.where(movers, targets, n_pad)
+    gn = jnp.where(movers, gains, 0.0)
+    order = jnp.lexsort((-gn, tgt))  # target, then gain desc; stable -> id asc
+    t_s = tgt[order]
+    m_s = movers[order]
+    w_s = jnp.where(m_s, node_w[order], 0.0)
+    csum = jnp.cumsum(w_s)
+    seg_start = jnp.concatenate([jnp.ones(1, bool), t_s[1:] != t_s[:-1]])
+    base = jnp.where(seg_start, csum - w_s, -jnp.inf)
+    within = csum - jax.lax.cummax(base)  # cumsum restarted per target group
+    cap_t = jnp.where(t_s >= n_pad, 0.0, capacity[jnp.clip(t_s, 0, n_pad - 1)])
+    ok = m_s & (within <= cap_t + 1e-9)
+    return jnp.zeros(n_pad, dtype=bool).at[order].set(ok)
+
+
+# --------------------------------------------------------------------------
+# jitted V-cycle stages
+# --------------------------------------------------------------------------
+
+def _lp_cluster(esrc, edst, ew, nbr, wts, node_w, pinned, n, max_cluster_w,
+                *, iters: int, mode: str):
+    """Size-constrained LP clustering; returns the cluster label vector."""
+    _count_trace("lp_cluster")
+    n_pad = node_w.shape[0]
+    valid = jnp.arange(n_pad) < n
+    free = (pinned == -1) & valid
+    # pinned-owned clusters are never targets; cluster labels are node ids,
+    # so the node-domain mask doubles as the label-column mask (l_pad = n_pad)
+    forbidden = pinned >= 0
+    cluster = jnp.arange(n_pad)
+    cw = jnp.where(valid, node_w, 0.0)
+
+    # rounds unroll in Python (iters is static): round 0 always hits the
+    # sort-free all-distinct fast path, later rounds use `mode`
+    for round_idx in range(iters):
+        if round_idx == 0:
+            _, best_w, best_lab = _agg_round0(esrc, edst, ew, forbidden,
+                                              n_pad)
+        else:
+            _, best_w, best_lab = _aggregate(
+                mode, esrc, edst, ew, nbr, wts, cluster, cluster, forbidden,
+                n_pad, n_pad)
+        movers = free & (best_w > 0.0)
+        tgt_c = jnp.clip(best_lab, 0, n_pad - 1)
+        movers &= cw[tgt_c] + node_w <= max_cluster_w
+        capacity = jnp.maximum(max_cluster_w - cw, 0.0)
+        accept = _accept_with_capacity(movers, best_lab, best_w, node_w,
+                                       capacity, n_pad)
+        wmv = jnp.where(accept, node_w, 0.0)
+        out = jnp.where(accept, best_lab, n_pad)
+        src_c = jnp.where(accept, cluster, n_pad)
+        cw = (cw
+              - jax.ops.segment_sum(wmv, src_c, num_segments=n_pad + 1)[:n_pad]
+              + jax.ops.segment_sum(wmv, out, num_segments=n_pad + 1)[:n_pad])
+        cluster = jnp.where(accept, best_lab, cluster)
+    return cluster
+
+
+def _contract(esrc, edst, ew, cluster, node_w, pinned, n):
+    """Cluster contraction into the same padded buffers.
+
+    Coarse ids are the ascending ranks of the surviving cluster ids (the
+    device twin of np.unique(..., return_inverse=True)); coarse edges are
+    one segment-sum over composite keys.  Returns the coarse graph arrays,
+    the fine->coarse node map and the coarse node count.
+    """
+    _count_trace("contract")
+    n_pad = node_w.shape[0]
+    e_pad = esrc.shape[0]
+    valid = jnp.arange(n_pad) < n
+    cl = jnp.where(valid, cluster, n_pad)
+    sorted_cl = jnp.sort(cl)
+    is_first = jnp.concatenate(
+        [jnp.ones(1, bool), sorted_cl[1:] != sorted_cl[:-1]])
+    is_first &= sorted_cl < n_pad
+    rank = jnp.cumsum(is_first) - 1
+    nc = jnp.sum(is_first)
+    value_rank = jnp.zeros(n_pad + 1, dtype=cl.dtype).at[sorted_cl].set(rank)
+    node_map = jnp.where(valid, value_rank[jnp.minimum(cl, n_pad)], n_pad)
+
+    cvalid = jnp.arange(n_pad) < nc
+    cw = jax.ops.segment_sum(
+        jnp.where(valid, node_w, 0.0),
+        jnp.where(valid, node_map, n_pad), num_segments=n_pad + 1)[:n_pad]
+    pin_idx = jnp.where(valid & (pinned >= 0), node_map, n_pad)
+    cpin = jnp.full(n_pad + 1, jnp.int64(-1)).at[pin_idx].max(
+        jnp.where(valid, pinned, -1))[:n_pad]
+    cpin = jnp.where(cvalid, cpin, -2)
+
+    epad = esrc >= n_pad
+    s2 = jnp.where(epad, n_pad, node_map[jnp.minimum(esrc, n_pad - 1)])
+    d2 = jnp.where(epad, n_pad, node_map[jnp.minimum(edst, n_pad - 1)])
+    base = jnp.int64(n_pad + 1)
+    drop = epad | (s2 == d2)
+    key = jnp.where(drop, base * base - 1, s2 * base + d2)
+    order = jnp.argsort(key, stable=True)
+    key_s, w_s = key[order], ew[order]
+    seg_start = jnp.concatenate([jnp.ones(1, bool), key_s[1:] != key_s[:-1]])
+    gid = jnp.cumsum(seg_start) - 1
+    sums = jax.ops.segment_sum(w_s, gid, num_segments=e_pad,
+                               indices_are_sorted=True)
+    gkey = jax.ops.segment_max(key_s, gid, num_segments=e_pad,
+                               indices_are_sorted=True)
+    n_groups = gid[-1] + 1
+    gsrc = gkey // base
+    # zero-sum groups are kept as zero-weight edges (every consumer ignores
+    # them) so the coarse arrays stay src-sorted — _initial_fennel slices
+    # per-node segments out of them by searchsorted
+    valid_g = (jnp.arange(e_pad) < n_groups) & (gsrc < n_pad)
+    esrc2 = jnp.where(valid_g, gsrc, n_pad)
+    edst2 = jnp.where(valid_g, gkey % base, n_pad)
+    ew2 = jnp.where(valid_g, sums, 0.0)
+    ne = jnp.sum(valid_g)
+    return esrc2, edst2, ew2, cw, cpin, node_map, nc, ne
+
+
+def _initial_fennel(esrc, edst, ew, node_w, pinned, n, loads0,
+                    alpha, gamma, cap, *, w_c: int):
+    """Weighted Fennel on the coarsest level, heaviest free nodes first.
+
+    Sequential by construction (each step must see earlier placements), so
+    per-step cost is everything: the edge arrays are src-sorted (CSR order
+    at level 0, composite-key order after _contract), so each step slices
+    the node's own edge segment at a static width `w_c` (host-bucketed max
+    degree) and reduces it with a (w_c, k) one-hot contraction — no
+    full-e_pad scan, no scatter, ~µs per step on CPU.
+    """
+    _count_trace("initial_fennel")
+    n_pad = node_w.shape[0]
+    k = loads0.shape[0]
+    valid = jnp.arange(n_pad) < n
+    free = (pinned == -1) & valid
+    wkey = jnp.where(free, node_w, -jnp.inf)
+    order = jnp.argsort(-wkey, stable=True)  # weight desc, ties id asc
+    n_free = jnp.sum(free)
+    labels0 = jnp.where(valid & (pinned >= 0), pinned, -1)
+    # per-node segment starts in the sorted edge arrays
+    indptr = jnp.searchsorted(esrc, jnp.arange(n_pad))
+    blk_ids = jnp.arange(k)
+
+    def step(i, carry):
+        labels, loads = carry
+        v = order[i]
+        start = indptr[v]
+        seg_src = jax.lax.dynamic_slice(esrc, (start,), (w_c,))
+        seg_dst = jax.lax.dynamic_slice(edst, (start,), (w_c,))
+        seg_w = jax.lax.dynamic_slice(ew, (start,), (w_c,))
+        own = seg_src == v  # masks the tail of short segments (and clamping)
+        lab = jnp.where(own & (seg_dst < n_pad),
+                        labels[jnp.minimum(seg_dst, n_pad - 1)], -1)
+        contrib = jnp.where(lab >= 0, seg_w, 0.0)
+        conn = jnp.sum(contrib[:, None] * (lab[:, None] == blk_ids), axis=0)
+        penalty = alpha * gamma * jnp.power(jnp.maximum(loads, 0.0),
+                                            gamma - 1.0)
+        score = conn - penalty
+        nw = node_w[v]
+        feasible = loads + nw <= cap
+        blk = jnp.where(feasible.any(),
+                        jnp.argmax(jnp.where(feasible, score, -jnp.inf)),
+                        jnp.argmin(loads))
+        labels = labels.at[v].set(blk)
+        loads = loads + nw * (blk_ids == blk)
+        return labels, loads
+
+    return jax.lax.fori_loop(0, n_free, step, (labels0, loads0))
+
+
+def _lp_refine(esrc, edst, ew, nbr, wts, node_w, pinned, n, labels, loads,
+               cap, *, rounds: int, mode: str):
+    """Balanced synchronous LP refinement rounds at one level."""
+    _count_trace("lp_refine")
+    n_pad = node_w.shape[0]
+    k = loads.shape[0]
+    valid = jnp.arange(n_pad) < n
+    free = (pinned == -1) & valid
+
+    def round_(_, state):
+        labels, loads = state
+        cur, best_w, best_lab = _aggregate(
+            mode, esrc, edst, ew, nbr, wts, labels, labels, None, n_pad, k)
+        gains = best_w - cur
+        movers = free & (gains > 1e-12)
+        capacity = jnp.zeros(n_pad, dtype=loads.dtype).at[:k].set(
+            jnp.maximum(cap - loads, 0.0))
+        accept = _accept_with_capacity(movers, best_lab, gains, node_w,
+                                       capacity, n_pad)
+        wmv = jnp.where(accept, node_w, 0.0)
+        old = jnp.where(accept, labels, k)
+        new = jnp.where(accept, best_lab, k)
+        loads = (loads
+                 - jax.ops.segment_sum(wmv, old, num_segments=k + 1)[:k]
+                 + jax.ops.segment_sum(wmv, new, num_segments=k + 1)[:k])
+        labels = jnp.where(accept, best_lab, labels)
+        return labels, loads
+
+    return jax.lax.fori_loop(0, rounds, round_, (labels, loads))
+
+
+def _project(labels, node_map, pinned):
+    """Uncoarsen one level: inherit the coarse label, pinned override."""
+    _count_trace("project")
+    n_pad = labels.shape[0]
+    fine = labels[jnp.clip(node_map, 0, n_pad - 1)]
+    return jnp.where(pinned >= 0, pinned, jnp.where(node_map < n_pad, fine, -1))
+
+
+_lp_cluster_j = _jit(_lp_cluster, static=("iters", "mode"))
+_contract_j = _jit(_contract)
+_initial_fennel_j = _jit(_initial_fennel, static=("w_c",), donate=(6,))
+_lp_refine_j = _jit(_lp_refine, static=("rounds", "mode"), donate=(8, 9))
+_project_j = _jit(_project, donate=(0,))
+
+
+# --------------------------------------------------------------------------
+# host driver: level loop + packing
+# --------------------------------------------------------------------------
+
+def _pick_mode(n_pad: int, l_pad: int, w_pad: int | None) -> str:
+    """Aggregation mode for one level (host-side, shape-only).
+
+    `w_pad` is the level-0 ELL tile width, or None on coarse levels where
+    the tiles no longer describe the graph (coarse degrees outgrow them).
+    """
+    if MODE_OVERRIDE is not None:
+        if MODE_OVERRIDE != "ell":
+            return MODE_OVERRIDE
+        if w_pad is not None:
+            return "ell"  # coarse levels fall through to the shape rules
+    elif w_pad is not None:
+        # level 0 with usable ELL tiles: the Pallas kernel path on TPU
+        from repro.kernels import ops as _ops
+
+        if (_ops.USE_KERNELS_DEFAULT and w_pad <= ELL_WIDTH_CAP
+                and n_pad * max(w_pad, l_pad) <= ELL_VOLUME_CAP):
+            return "ell"
+    if n_pad * l_pad <= DENSE_VOLUME_CAP:
+        return "dense"
+    return "sort"
+
+
+def multilevel_partition_jax(
+    g: CSRGraph,
+    pinned: np.ndarray,
+    p: FennelParams,
+    loads_base: np.ndarray,
+    cfg,
+) -> np.ndarray:
+    """Drop-in `multilevel_partition` with the V-cycle resident on device.
+
+    Semantics (and, at fixed seed on integer-weight graphs, exact labels)
+    match the numpy `sparse` engine; see module docstring for what stays
+    host-side.  `cfg` is a MultilevelConfig (imported lazily to avoid a
+    module cycle with multilevel.py).
+    """
+    with enable_x64():
+        n = g.n
+        # floored at the block count: refine's capacity vector and accept's
+        # target domain live in node-padded arrays, so n_pad must cover k
+        # even when the graph is smaller than the partition (k > n)
+        n_pad = bucket_size(max(n, p.k))
+        # edge bucket floored at 8·n_pad for stream-scale graphs: batch
+        # models in one stream have near-constant node counts but noisy
+        # edge counts, and the floor absorbs that noise into a single
+        # compilation.  The cap keeps the floor from inflating large or
+        # coarse graphs whose true edge count is what matters.
+        e_pad = bucket_size(int(g.indices.size),
+                            minimum=min(8 * n_pad, 2048))
+        src_h, dst_h, w_h = g.to_coo_padded(n_pad, e_pad)
+        esrc = jnp.asarray(src_h)
+        edst = jnp.asarray(dst_h)
+        ew = jnp.asarray(w_h)
+        node_w = jnp.zeros(n_pad, dtype=jnp.float64).at[:n].set(
+            jnp.asarray(g.node_w.astype(np.float64)))
+        pin = jnp.full(n_pad, jnp.int64(-2)).at[:n].set(
+            jnp.asarray(pinned.astype(np.int64)))
+
+        free_total = pinned < 0
+        n_free = int(free_total.sum())
+        total_free_w = float(g.node_w[free_total].sum())
+        max_cluster_w = max(total_free_w / max(2 * p.k, 16),
+                            float(g.node_w.max(initial=1.0)))
+
+        # level 0 may use the ELL tiles packed once per batch; free-node
+        # degrees bound the width (pinned aux rows are never movers, so
+        # their truncation is harmless)
+        free_deg = int(np.max(np.diff(g.indptr)[free_total], initial=1))
+        w_pad = bucket_size(free_deg, minimum=8)
+
+        def cluster_mode(level: int, np_l: int) -> str:
+            return _pick_mode(np_l, np_l, w_pad if level == 0 else None)
+
+        def refine_mode(level: int, np_l: int) -> str:
+            return _pick_mode(np_l, p.k, w_pad if level == 0 else None)
+
+        dummy_nbr = jnp.zeros((1, 8), dtype=jnp.int64)
+        dummy_wts = jnp.zeros((1, 8), dtype=jnp.float64)
+        if "ell" in (cluster_mode(0, n_pad), refine_mode(0, n_pad)):
+            nbr_h, wts_h, _ = g.to_ell_padded(
+                np.arange(n, dtype=np.int64),
+                row_bucket=n_pad, width_bucket=w_pad)
+            nbr = jnp.asarray(nbr_h.astype(np.int64))
+            wts = jnp.asarray(wts_h)
+        else:
+            nbr, wts = dummy_nbr, dummy_wts
+
+        # ---- coarsen (level loop on host; arrays stay on device)
+        levels: list[tuple] = []
+        cur = (esrc, edst, ew, node_w, pin)
+        cur_n = n
+        cur_free = n_free
+        cur_np, cur_ep = n_pad, e_pad
+        level = 0
+        for _ in range(cfg.max_levels):
+            if cur_free <= cfg.coarsen_target:
+                break
+            lvl_nbr = nbr if level == 0 else dummy_nbr
+            lvl_wts = wts if level == 0 else dummy_wts
+            cluster = _lp_cluster_j(
+                cur[0], cur[1], cur[2], lvl_nbr, lvl_wts, cur[3], cur[4],
+                cur_n, max_cluster_w, iters=cfg.lp_iters,
+                mode=cluster_mode(level, cur_np))
+            es2, ed2, ew2, cw2, cpin2, node_map, nc_dev, ne_dev = _contract_j(
+                cur[0], cur[1], cur[2], cluster, cur[3], cur[4], cur_n)
+            nc = int(nc_dev)
+            if nc >= cfg.min_shrink * cur_n:
+                break
+            levels.append((cur, cur_n, node_map, level))
+            # re-bucket: coarse levels shrink geometrically, and slicing the
+            # (front-compacted) buffers down keeps per-level cost shrinking
+            # with them instead of paying the level-0 padding everywhere.
+            # Old sentinels (= old n_pad) stay recognizable: >= the new pad.
+            new_np = max(bucket_size(max(nc, p.k)), 64)
+            new_ep = bucket_size(int(ne_dev), minimum=min(8 * new_np, 2048))
+            new_ep = min(new_ep, cur_ep)
+            if new_np < cur_np or new_ep < cur_ep:
+                es2, ed2, ew2 = es2[:new_ep], ed2[:new_ep], ew2[:new_ep]
+                cw2, cpin2 = cw2[:new_np], cpin2[:new_np]
+            cur = (es2, ed2, ew2, cw2, cpin2)
+            cur_n = nc
+            cur_np, cur_ep = new_np, new_ep
+            cur_free = int(jnp.sum((cpin2 == -1)
+                                   & (jnp.arange(cur_np) < nc)))
+            level += 1
+
+        # ---- initial partition on the coarsest level
+        alpha = jnp.float64(p.alpha)
+        gamma = jnp.float64(p.gamma)
+        cap = jnp.float64(p.cap)
+        # w_c need only cover FREE nodes (fennel never slices a pinned
+        # row), which keeps it off the aux-node degrees that grow over a
+        # stream and would churn the jit cache
+        if level == 0:
+            max_deg = free_deg
+        else:  # one scalar pull: the coarsest free max degree sizes slices
+            cnt = jnp.bincount(jnp.minimum(cur[0], cur_np), length=cur_np + 1)
+            free_c = (cur[4] == -1) & (jnp.arange(cur_np) < cur_n)
+            max_deg = max(int(jnp.max(jnp.where(free_c, cnt[:cur_np], 0))), 1)
+        # floored at 64: per-step slices stay trivially cheap and batch-to-
+        # batch degree noise maps onto one compilation instead of four
+        w_c = min(bucket_size(max_deg, minimum=64), cur_ep)
+        labels, loads = _initial_fennel_j(
+            cur[0], cur[1], cur[2], cur[3], cur[4], cur_n,
+            jnp.asarray(np.asarray(loads_base, dtype=np.float64)),
+            alpha, gamma, cap, w_c=w_c)
+        labels, loads = _lp_refine_j(
+            cur[0], cur[1], cur[2],
+            nbr if level == 0 else dummy_nbr,
+            wts if level == 0 else dummy_wts,
+            cur[3], cur[4], cur_n, labels, loads, cap,
+            rounds=cfg.refine_rounds, mode=refine_mode(level, cur_np))
+
+        # ---- uncoarsen + refine
+        for fine, fine_n, node_map, lvl in reversed(levels):
+            labels = _project_j(labels, node_map, fine[4])
+            labels, loads = _lp_refine_j(
+                fine[0], fine[1], fine[2],
+                nbr if lvl == 0 else dummy_nbr,
+                wts if lvl == 0 else dummy_wts,
+                fine[3], fine[4], fine_n, labels, loads, cap,
+                rounds=cfg.refine_rounds,
+                mode=refine_mode(lvl, fine[3].shape[0]))
+
+        # the single device->host transfer of the batch assignment
+        return np.asarray(labels[:n])

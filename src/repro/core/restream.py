@@ -31,14 +31,12 @@ def restream_pass(
         bnodes = np.arange(start, min(start + cfg.batch_size, g.n), dtype=np.int64)
         # detach the batch: release loads, hide current labels from the model
         np.add.at(loads, block[bnodes], -g.node_w[bnodes].astype(np.float64))
-        saved = block[bnodes].copy()
         block[bnodes] = -1
         model = build_batch_model(g, bnodes, block, cfg.k)
         labels = multilevel_partition(model.graph, model.pinned_block, p, loads, cfg.ml)
         new = labels[: bnodes.shape[0]]
         block[bnodes] = new
         np.add.at(loads, new, g.node_w[bnodes].astype(np.float64))
-        del saved
     return block
 
 

@@ -14,7 +14,6 @@ the host driver calls its numpy twin for CPU streaming.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from functools import partial
 
@@ -98,7 +97,9 @@ def buffcut_partition_vectorized(
             return
         bnodes = np.concatenate(batch)[:batch_count]
         model = build_batch_model(g, bnodes, block, cfg.k)
+        t_ml = time.perf_counter()
         labels = multilevel_partition(model.graph, model.pinned_block, p, loads, cfg.ml)
+        stats.ml_time_s += time.perf_counter() - t_ml
         block[bnodes] = labels[: bnodes.shape[0]]
         np.add.at(loads, labels[: bnodes.shape[0]], g.node_w[bnodes].astype(np.float64))
         stats.n_batches += 1

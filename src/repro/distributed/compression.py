@@ -14,7 +14,6 @@ Two schemes, composable with the train loop's gradient hook:
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ import dataclasses
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
-from repro.core.buffcut import BuffCutConfig, buffcut_partition
+from repro.core.buffcut import buffcut_partition
 from repro.core.fennel import fennel_partition
 from repro.core.metrics import edge_cut, block_loads
 from repro.configs.buffcut_paper import scaled_config

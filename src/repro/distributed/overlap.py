@@ -12,11 +12,8 @@ per output tile).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
 
 
 def collective_matmul_allgather(x_local, w, axis_name: str):

@@ -12,6 +12,16 @@ import dataclasses
 import numpy as np
 
 
+def bucket_size(x: int, minimum: int = 64) -> int:
+    """Next power of two >= max(x, minimum) — the static-shape bucket.
+
+    Padding device arrays to pow2 buckets means a stream of slightly
+    different batch/graph sizes hits a handful of jit compilations instead
+    of one per distinct size (DESIGN.md §3.5).
+    """
+    return 1 << max(int(x) - 1, max(minimum, 1) - 1).bit_length()
+
+
 @dataclasses.dataclass
 class CSRGraph:
     """Undirected graph in CSR form.
@@ -135,6 +145,63 @@ class CSRGraph:
         return np.stack([src[mask], dst[mask]], axis=1)
 
     # ---------------------------------------------------------- ELL tiles
+    def to_coo_padded(
+        self, n_pad: int, e_pad: int
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Directed edge list padded to a fixed (bucketed) shape.
+
+        Returns (src, dst, w) of length `e_pad`; padding entries carry the
+        sentinel src = dst = `n_pad` and w = 0 so device segment reductions
+        with num_segments = n_pad + 1 drop them for free. The fixed shape is
+        what lets the jitted multilevel engine reuse one compilation across
+        batches (DESIGN.md §3.5).
+        """
+        e = int(self.indices.size)
+        if e > e_pad:
+            raise ValueError(f"e_pad {e_pad} < directed edge count {e}")
+        if self.n > n_pad:
+            raise ValueError(f"n_pad {n_pad} < node count {self.n}")
+        src = np.full(e_pad, n_pad, dtype=np.int64)
+        dst = np.full(e_pad, n_pad, dtype=np.int64)
+        w = np.zeros(e_pad, dtype=np.float64)
+        src[:e] = np.repeat(np.arange(self.n, dtype=np.int64), np.diff(self.indptr))
+        dst[:e] = self.indices.astype(np.int64)
+        w[:e] = self.edge_w.astype(np.float64)
+        return src, dst, w
+
+    def to_ell_padded(
+        self,
+        nodes: np.ndarray | None = None,
+        *,
+        row_bucket: int | None = None,
+        width_bucket: int | None = None,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Bucketed padded ELL tiles: `ell_block` with pow2-rounded shapes.
+
+        Rows pad to `row_bucket` (default: bucket_size(len(nodes))) with
+        all-invalid rows, width to `width_bucket` (default: bucket_size of
+        the max degree, min 8). Bucketing keeps the set of distinct tile
+        shapes tiny across a stream of batches, so the jitted histogram /
+        multilevel ops compile a handful of times instead of per batch.
+        """
+        if nodes is None:
+            nodes = np.arange(self.n, dtype=np.int64)
+        nodes = np.asarray(nodes, dtype=np.int64)
+        degs = self.indptr[nodes + 1] - self.indptr[nodes]
+        if width_bucket is None:
+            width_bucket = bucket_size(int(degs.max(initial=1)), minimum=8)
+        if row_bucket is None:
+            row_bucket = bucket_size(nodes.shape[0], minimum=8)
+        if row_bucket < nodes.shape[0]:
+            raise ValueError(f"row_bucket {row_bucket} < rows {nodes.shape[0]}")
+        nbr, wts, mask = self.ell_block(nodes, pad_width=width_bucket)
+        pad = row_bucket - nodes.shape[0]
+        if pad:
+            nbr = np.concatenate([nbr, np.full((pad, nbr.shape[1]), -1, dtype=nbr.dtype)])
+            wts = np.concatenate([wts, np.zeros((pad, wts.shape[1]), dtype=wts.dtype)])
+            mask = nbr >= 0
+        return nbr, wts, mask
+
     def ell_block(
         self, nodes: np.ndarray, pad_width: int | None = None
     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:

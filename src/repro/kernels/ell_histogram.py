@@ -5,13 +5,17 @@ counts[b, i] = Σ_w nbr_w[b, w] · [nbr_blk[b, w] == i]
 This is the inner op of every assignment decision in the system (Fennel
 gains, ANR updates, LP refinement) — the compute hot spot the paper's batch
 assignment spends its time in. The CPU implementation is a scatter; on TPU
-we reformulate as compare-and-accumulate over a (TB, WC, K) tile so the VPU
-processes 8×128 lanes per cycle and the accumulator lives in VMEM across
-the whole W loop (single HBM write per output tile).
+we reformulate as compare-and-accumulate over a (TB, WC, KC) tile so the
+VPU processes 8×128 lanes per cycle and the accumulator lives in VMEM
+across the whole W loop (single HBM write per output tile).
 
-Tiling: grid over node tiles of TB rows; the W (padded max-degree) axis is
-walked in chunks of WC inside the kernel via fori_loop; K is padded to a
-lane multiple (128) by the ops.py wrapper.
+Tiling: 2-D grid over (node tiles of TB rows) × (label tiles of KC
+columns); the W (padded max-degree) axis is walked in chunks of WC inside
+the kernel via fori_loop.  The K axis is tiled because the device-resident
+multilevel engine calls this with k = n_pad (cluster labels are node ids),
+and an untiled (TB, WC, K) one-hot intermediate would outgrow VMEM —
+8 MiB at k = 2048 against the ~16 MiB/core budget.  K is padded to a lane
+multiple (128) by the ops.py wrapper, so a 128-multiple KC always divides.
 """
 from __future__ import annotations
 
@@ -24,12 +28,25 @@ from jax.experimental import pallas as pl
 
 DEFAULT_TB = 128  # node rows per tile (8-sublane multiple)
 DEFAULT_WC = 8    # neighbor columns per inner step
+MAX_KC = 512      # label columns per grid tile (VMEM ceiling for the 3-D
+                  # one-hot: TB·WC·KC·4B = 2 MiB at the defaults)
 
 
-def _histogram_kernel(blk_ref, w_ref, out_ref, *, k: int, wc: int):
+def _pick_kc(k: int) -> int:
+    """Largest lane-multiple tile ≤ MAX_KC that divides k (k is a 128
+    multiple from ops.py, so 128 always divides)."""
+    for kc in (MAX_KC, 384, 256, 128):
+        if k % kc == 0:
+            return kc
+    return k
+
+
+def _histogram_kernel(blk_ref, w_ref, out_ref, *, kc: int, wc: int):
     tb, w_total = blk_ref.shape
-    acc = jnp.zeros((tb, k), dtype=jnp.float32)
-    ids = jax.lax.broadcasted_iota(jnp.int32, (tb, wc, k), 2)
+    acc = jnp.zeros((tb, kc), dtype=jnp.float32)
+    # absolute label ids covered by this K tile
+    k_off = pl.program_id(1) * kc
+    ids = k_off + jax.lax.broadcasted_iota(jnp.int32, (tb, wc, kc), 2)
 
     def body(step, acc):
         start = step * wc
@@ -50,21 +67,24 @@ def ell_histogram(
     *,
     tb: int = DEFAULT_TB,
     wc: int = DEFAULT_WC,
+    kc: int | None = None,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """counts (B, k) float32. Caller pads B to a tb multiple, W to a wc
     multiple and k to a 128 multiple (see ops.py)."""
     b, w = nbr_blk.shape
-    assert b % tb == 0 and w % wc == 0, (b, w, tb, wc)
-    kernel = functools.partial(_histogram_kernel, k=k, wc=wc)
+    if kc is None:
+        kc = _pick_kc(k)
+    assert b % tb == 0 and w % wc == 0 and k % kc == 0, (b, w, k, tb, wc, kc)
+    kernel = functools.partial(_histogram_kernel, kc=kc, wc=wc)
     return pl.pallas_call(
         kernel,
-        grid=(b // tb,),
+        grid=(b // tb, k // kc),
         in_specs=[
-            pl.BlockSpec((tb, w), lambda i: (i, 0)),
-            pl.BlockSpec((tb, w), lambda i: (i, 0)),
+            pl.BlockSpec((tb, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((tb, w), lambda i, j: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((tb, k), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((tb, kc), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
         interpret=interpret,
     )(nbr_blk, nbr_w)

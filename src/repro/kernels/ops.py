@@ -42,10 +42,15 @@ def block_histogram(
     nbr_w: jnp.ndarray,
     k: int,
     *,
-    use_kernel: bool = True,
+    use_kernel: bool | None = None,
     interpret: bool = not _ON_TPU,
 ) -> jnp.ndarray:
-    """counts (B, k): weighted per-block neighbor histogram (ELL layout)."""
+    """counts (B, k): weighted per-block neighbor histogram (ELL layout).
+
+    use_kernel=None auto-dispatches: Pallas on TPU, jnp reference under XLA
+    elsewhere (same policy as swa_attention_decode)."""
+    if use_kernel is None:
+        use_kernel = USE_KERNELS_DEFAULT
     if not use_kernel:
         return _ref.ell_histogram_ref(nbr_blk, nbr_w, k)
     b0, w0 = nbr_blk.shape
@@ -69,10 +74,14 @@ def fennel_choose_batch(
     alpha: float,
     gamma: float,
     cap: float,
-    use_kernel: bool = True,
+    use_kernel: bool | None = None,
     interpret: bool = not _ON_TPU,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Wavefront Fennel assignment for a tile of nodes (fused kernel)."""
+    """Wavefront Fennel assignment for a tile of nodes (fused kernel).
+
+    use_kernel=None auto-dispatches by backend (see block_histogram)."""
+    if use_kernel is None:
+        use_kernel = USE_KERNELS_DEFAULT
     if not use_kernel:
         return _ref.fennel_gain_ref(
             nbr_blk, nbr_w, loads, node_w, alpha=alpha, gamma=gamma, cap=cap

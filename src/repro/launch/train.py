@@ -17,9 +17,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch
-from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import transformer as tfm
-from repro.models import gnn as gnn_mod
 from repro.models import dlrm as dlrm_mod
 from repro.train.adamw import AdamW
 from repro.train.loop import make_train_step, TrainLoop, LoopConfig

@@ -62,7 +62,6 @@ def dlrm_init(rng, cfg: DLRMConfig) -> dict:
 
 def _interact(dense_v: jnp.ndarray, sparse_v: jnp.ndarray) -> jnp.ndarray:
     """Dot interaction: pairwise dots among [dense] + 26 sparse vectors."""
-    b = dense_v.shape[0]
     feats = jnp.concatenate([dense_v[:, None, :], sparse_v], axis=1)  # (B, F, D)
     f = feats.shape[1]
     dots = jnp.einsum("bfd,bgd->bfg", feats, feats)
@@ -76,7 +75,6 @@ def dlrm_forward(params: dict, batch: dict, cfg: DLRMConfig,
     sparse_mask (B, 26, M) float. Returns click logits (B,)."""
     dense_v = mlp_apply(params["bot"], batch["dense"], act=jax.nn.relu,
                         final_act=jax.nn.relu)  # (B, D)
-    b = batch["dense"].shape[0]
 
     def lookup(table, idx, mask):
         return embedding_bag(table, idx, mask, use_kernel=use_kernel)

@@ -313,9 +313,6 @@ def sage_fullgraph_halo_loss(params, batch, cfg: GraphSAGEConfig, mesh, dp_axes)
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    n_shards = 1
-    for a in dp_axes:
-        n_shards *= mesh.shape[a]
     dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
 
     def body(params_r, x, fown, esrc, edst, emask, labels, nmask):

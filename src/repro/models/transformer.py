@@ -446,7 +446,6 @@ def forward_decode(params: dict, tokens: jnp.ndarray, cache: dict,
                    cfg: TransformerConfig) -> tuple[jnp.ndarray, dict]:
     """One decode step. tokens (B, 1); cache from init_cache/prefill."""
     layers, glob = _split_layers(params)
-    b = tokens.shape[0]
     x = glob["embed"][tokens].astype(cfg.jdtype)
     positions = cache["pos"][:, None]
 

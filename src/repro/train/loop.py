@@ -20,12 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.train.adamw import AdamW, AdamWState
+from repro.train.adamw import AdamW
 from repro.train.checkpoint import CheckpointManager
-from repro.distributed.compression import (
-    compress_grads_with_feedback,
-    init_residuals,
-)
+from repro.distributed.compression import compress_grads_with_feedback
 
 
 def make_train_step(

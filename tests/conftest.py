@@ -7,12 +7,14 @@ except ModuleNotFoundError:
 
     _hypothesis_stub.install()
 
-import numpy as np
 import pytest
 
 from repro.graphs import (
-    rmat_graph, grid_mesh_graph, sbm_graph, ring_graph, star_graph,
-    random_order, apply_order,
+    rmat_graph,
+    grid_mesh_graph,
+    sbm_graph,
+    random_order,
+    apply_order,
 )
 
 

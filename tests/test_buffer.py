@@ -1,8 +1,6 @@
 """Bucket priority queue (paper Alg. 2) vs oracle; VectorBuffer parity."""
-import heapq
 
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.buffer import BucketPQ, VectorBuffer

@@ -3,15 +3,22 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.graphs import (
-    rmat_graph, grid_mesh_graph, sbm_graph, star_graph, random_order, apply_order,
-)
+from repro.graphs import grid_mesh_graph, star_graph
 from repro.core import (
-    BuffCutConfig, CuttanaConfig, MultilevelConfig,
-    buffcut_partition, heistream_partition, cuttana_partition,
-    fennel_partition, ldg_partition, restream,
-    buffcut_partition_vectorized, buffcut_partition_pipelined,
-    cut_ratio, is_balanced, balance, edge_cut, block_loads,
+    BuffCutConfig,
+    CuttanaConfig,
+    buffcut_partition,
+    heistream_partition,
+    cuttana_partition,
+    fennel_partition,
+    ldg_partition,
+    restream,
+    buffcut_partition_vectorized,
+    buffcut_partition_pipelined,
+    cut_ratio,
+    is_balanced,
+    balance,
+    edge_cut,
 )
 
 

@@ -2,13 +2,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.distributed.sharding import (
-    lm_sharding_rules, lm_decode_sharding_rules, gnn_sharding_rules,
-    dlrm_sharding_rules, param_shardings,
+    lm_sharding_rules,
+    lm_decode_sharding_rules,
+    param_shardings,
 )
 from repro.distributed.overlap import (
     collective_matmul_allgather, allgather_matmul_reference,

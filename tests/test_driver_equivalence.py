@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.graphs import rmat_graph, sbm_graph, apply_order, bfs_order, random_order
+from repro.graphs import rmat_graph, apply_order, bfs_order, random_order
 from repro.core import (
     BuffCutConfig, buffcut_partition, buffcut_partition_vectorized, edge_cut,
 )

@@ -1,6 +1,5 @@
 """Graph substrate: CSR invariants, generators, orderings, IO, locality."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.graphs import (

@@ -1,6 +1,5 @@
 """Launch layer: HLO analysis parser, cell building on host mesh, specs."""
 import jax
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import collective_bytes, _shape_bytes, RooflineTerms

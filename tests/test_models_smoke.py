@@ -1,6 +1,5 @@
 """Per-arch smoke tests: reduced config, one forward/train step on CPU,
 output shapes + no NaNs (assignment requirement f)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -3,14 +3,17 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.graphs import grid_mesh_graph, rmat_graph, sbm_graph
+from repro.graphs import rmat_graph
 from repro.core.fennel import FennelParams
 from repro.core.batch_model import build_batch_model
 from repro.core.multilevel import (
-    MultilevelConfig, multilevel_partition, lp_cluster, contract,
-    initial_fennel, lp_refine,
+    MultilevelConfig,
+    multilevel_partition,
+    lp_cluster,
+    contract,
+    lp_refine,
 )
-from repro.core.metrics import edge_cut, block_loads
+from repro.core.metrics import edge_cut
 
 
 def _params(g, k=4, eps=0.1):
@@ -165,10 +168,16 @@ def test_histogram_engines_agree(small_rmat):
         np.testing.assert_allclose(gains, wsum[keep][sel])
 
 
-@pytest.mark.parametrize("engine", ["sparse", "ell"])
-def test_multilevel_engine_parity(engine, small_grid):
-    """Both inner-op engines drive multilevel to the same partition."""
-    g = small_grid
+@pytest.mark.parametrize("ordering", ["natural", "bfs", "adversarial"])
+@pytest.mark.parametrize("engine", ["sparse", "ell", "jax"])
+def test_multilevel_engine_parity(engine, ordering, small_grid):
+    """Every inner-op engine drives multilevel to the same partition, on
+    high-locality (natural/BFS) and locality-destroyed (KONECT) orders."""
+    from repro.graphs import apply_order, bfs_order, konect_order, source_order
+
+    order = {"natural": source_order, "bfs": bfs_order,
+             "adversarial": konect_order}[ordering]
+    g = apply_order(small_grid, order(small_grid))
     k = 4
     p = _params(g, k)
     pinned = np.full(g.n, -1, dtype=np.int64)
@@ -179,6 +188,8 @@ def test_multilevel_engine_parity(engine, small_grid):
     assert edge_cut(g, got) == edge_cut(g, ref)
     loads = np.bincount(got, weights=g.node_w, minlength=k)
     assert loads.max() <= p.cap + 1e-6
+    if engine == "jax":  # device engine pins exact labels, not just the cut
+        assert np.array_equal(got, ref)
 
 
 @given(st.integers(2, 8), st.integers(0, 10**6))

@@ -13,8 +13,11 @@ from repro.train.loop import make_train_step, TrainLoop, LoopConfig
 from repro.train.data import token_batches
 from repro.train.elastic import reshard_state, per_shard_batch
 from repro.distributed.compression import (
-    topk_compress, topk_decompress, error_feedback_update, init_residuals,
-    quantize_int8, dequantize_int8,
+    topk_compress,
+    topk_decompress,
+    error_feedback_update,
+    quantize_int8,
+    dequantize_int8,
 )
 from repro.distributed.sharding import lm_sharding_rules
 from repro.configs import get_arch
