@@ -1,4 +1,4 @@
-"""Systems payoff (DESIGN.md §4): BuffCut as the GNN placement service.
+"""Systems payoff (DESIGN.md §8): BuffCut as the GNN placement service.
 
 For each GNN-relevant graph, partition onto 16 data shards with buffcut /
 fennel / random / hash placement and report the halo-gather volume per GNN

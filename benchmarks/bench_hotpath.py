@@ -19,6 +19,10 @@ Tracks the de-quadratized assignment-side inner loops from PR 1 onward
       target applies to the TPU dense/ELL dispatch path and is tracked
       through the uploaded artifact trajectory.
   e2e — the full vectorized BuffCut driver.
+  outofcore — disk-streamed partitioning of a generated graph ≥4x the
+      configured buffer (benchmarks/bench_outofcore.py): measured peak
+      resident bytes vs the buffer+batch+read-ahead bound, throughput, and
+      bit-exact label agreement with the in-memory path.
 
 Usage:  python benchmarks/bench_hotpath.py [--smoke] [--out PATH]
 Emits BENCH_hotpath.json (repo root by default).
@@ -206,6 +210,8 @@ def main() -> None:
         default=str(Path(__file__).resolve().parent.parent / "BENCH_hotpath.json"),
     )
     args = ap.parse_args()
+    from bench_outofcore import run as bench_outofcore_run
+
     report = {
         "bench": "hotpath",
         "smoke": args.smoke,
@@ -213,6 +219,7 @@ def main() -> None:
         "evict": bench_evict(args.smoke),
         "multilevel": bench_multilevel(args.smoke),
         "e2e": bench_e2e(args.smoke),
+        "outofcore": bench_outofcore_run(smoke=args.smoke),
     }
     Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
     h, e = report["histogram"], report["evict"]
@@ -231,6 +238,11 @@ def main() -> None:
           f"({ml['jax_over_sparse']:.2f}x, identical labels)")
     for engine, row in report["e2e"]["engines"].items():
         print(f"e2e {engine:>11}: {row['runtime_s']:.2f} s  cut_ratio {row['cut_ratio']:.4f}")
+    oc = report["outofcore"]
+    print(f"outofcore (n={oc['n']}, {oc['graph_over_buffer']:.0f}x buffer): "
+          f"peak {oc['peak_resident_bytes']}b <= bound {oc['resident_bound_bytes']}b "
+          f"({oc['resident_over_full']:.1%} of full graph), "
+          f"{oc['nodes_per_s']:.0f} nodes/s, labels_match={oc['labels_match_memory']}")
     print(f"wrote {args.out}")
 
 

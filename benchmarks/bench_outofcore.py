@@ -1,0 +1,118 @@
+"""Out-of-core streaming: memory ceiling + throughput (ISSUE 3 tentpole).
+
+Synthesizes a grid mesh straight to disk (graphs/generators.py
+generate-to-disk — never materialized), partitions it from a
+`DiskNodeStream` with a buffer several times smaller than the graph, and
+reports:
+
+  peak_resident_bytes — measured retained adjacency + read-ahead (the §4
+      accounting, buffer + batch + read-ahead window),
+  resident_bound_bytes — the modeled ceiling the measurement must respect,
+  full_graph_bytes — what holding the CSR at cache dtypes would cost
+      (the memory the substrate saves),
+  nodes_per_s / edges_per_s — end-to-end disk-streaming throughput,
+  cut agreement with the in-memory path (bit-exact labels).
+
+Run standalone (`python benchmarks/bench_outofcore.py [--smoke] [--gate]`)
+or via bench_hotpath.py, which embeds this section in BENCH_hotpath.json.
+`--gate` exits nonzero if the measured peak exceeds the bound — the CI
+memory-ceiling smoke gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.graphs import DiskNodeStream, grid_mesh_graph, grid_mesh_to_disk  # noqa: E402
+from repro.core import BuffCutConfig, buffcut_partition_vectorized  # noqa: E402
+
+
+def resident_bound_bytes(cfg: BuffCutConfig, max_deg: int, io_chunk_bytes: int) -> int:
+    """buffer + batch + read-ahead ceiling: each retained node's adjacency
+    costs int64 ids + float64 weights + dict bookkeeping; the model graph
+    transiently doubles the batch term; the reader holds <= 2 IO chunks."""
+    per_node = max_deg * 16 + 96
+    return (cfg.buffer_size + 2 * cfg.batch_size + 2) * per_node + 2 * io_chunk_bytes + per_node
+
+
+def run(smoke: bool = False, verify_labels: bool | None = None) -> dict:
+    side = 64 if smoke else 160            # n = 4096 / 25600
+    io_chunk = 1 << 12
+    cfg = BuffCutConfig(k=4, buffer_size=256, batch_size=128, d_max=64)
+    if verify_labels is None:
+        verify_labels = True               # cheap at these sizes
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "grid.bcsr")
+        t0 = time.perf_counter()
+        n = grid_mesh_to_disk(side, path)
+        gen_s = time.perf_counter() - t0
+        file_bytes = os.path.getsize(path)
+
+        stream = DiskNodeStream(path, io_chunk_bytes=io_chunk)
+        t0 = time.perf_counter()
+        block, stats = buffcut_partition_vectorized(stream, cfg, wave=1, chunk=1)
+        part_s = time.perf_counter() - t0
+
+        bound = resident_bound_bytes(cfg, max_deg=8, io_chunk_bytes=io_chunk)
+        # full CSR adjacency at the cache's dtypes (i8 ids + f8 weights)
+        full_graph_bytes = int(stream.m * 2 * 16 + stream.n * 16)
+        out = {
+            "n": int(stream.n),
+            "m": int(stream.m),
+            "graph_over_buffer": float(stream.n / cfg.buffer_size),
+            "file_bytes": int(file_bytes),
+            "gen_s": gen_s,
+            "partition_s": part_s,
+            "nodes_per_s": float(stream.n / part_s),
+            "edges_per_s": float(stream.m / part_s),
+            "peak_resident_bytes": int(stats.peak_resident_bytes),
+            "resident_bound_bytes": int(bound),
+            "full_graph_bytes": full_graph_bytes,
+            "resident_over_full": float(stats.peak_resident_bytes / full_graph_bytes),
+            "within_bound": bool(stats.peak_resident_bytes <= bound),
+            "cut_weight": float(stats.cut_weight),
+            "stream_bytes_read": int(stats.stream_bytes_read),
+        }
+        if verify_labels:
+            g = grid_mesh_graph(side)
+            block_mem, stats_mem = buffcut_partition_vectorized(g, cfg, wave=1, chunk=1)
+            out["labels_match_memory"] = bool(np.array_equal(block, block_mem))
+            out["cut_matches_memory"] = bool(stats.cut_weight == stats_mem.cut_weight)
+        return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit nonzero unless peak resident <= bound (CI)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    r = run(smoke=args.smoke)
+    print(json.dumps(r, indent=2))
+    if args.out:
+        Path(args.out).write_text(json.dumps(r, indent=2))
+    if args.gate:
+        ok = r["within_bound"] and r.get("labels_match_memory", True)
+        if not ok:
+            print("MEMORY GATE FAILED", file=sys.stderr)
+            return 1
+        print(
+            f"memory gate OK: peak {r['peak_resident_bytes']}b <= bound "
+            f"{r['resident_bound_bytes']}b on a {r['graph_over_buffer']:.0f}x-buffer graph "
+            f"({r['resident_over_full']:.1%} of full-graph bytes)"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,10 +7,12 @@ from repro.core.metrics import (
     block_loads,
     l_max,
     internal_edge_ratio,
+    internal_edge_ratio_adj,
+    streaming_cut_increment,
 )
 from repro.core.scores import ScoreSpec, get_score, ANR, CBS, HAA, NSS, CMS
 from repro.core.buffer import BucketPQ, VectorBuffer
-from repro.core.rescore import RescoreState, weighted_degrees
+from repro.core.rescore import AdjacencyCache, RescoreState, weighted_degrees
 from repro.core.histogram import (
     neighbor_label_weights,
     sorted_neighbor_label_weights,
@@ -23,7 +25,7 @@ from repro.core.fennel import (
     ldg_partition,
     fennel_choose,
 )
-from repro.core.batch_model import BatchModel, build_batch_model
+from repro.core.batch_model import BatchModel, build_batch_model, build_batch_model_from_adj
 from repro.core.multilevel import MultilevelConfig, multilevel_partition
 from repro.core.buffcut import BuffCutConfig, StreamStats, buffcut_partition
 from repro.core.heistream import heistream_partition
@@ -34,14 +36,14 @@ from repro.core.pipeline import buffcut_partition_pipelined
 
 __all__ = [
     "edge_cut", "cut_ratio", "balance", "is_balanced", "block_loads", "l_max",
-    "internal_edge_ratio",
+    "internal_edge_ratio", "internal_edge_ratio_adj", "streaming_cut_increment",
     "ScoreSpec", "get_score", "ANR", "CBS", "HAA", "NSS", "CMS",
     "BucketPQ", "VectorBuffer",
-    "RescoreState", "weighted_degrees",
+    "AdjacencyCache", "RescoreState", "weighted_degrees",
     "neighbor_label_weights", "sorted_neighbor_label_weights",
     "label_histogram_ell", "best_label_per_src",
     "FennelParams", "fennel_partition", "ldg_partition", "fennel_choose",
-    "BatchModel", "build_batch_model",
+    "BatchModel", "build_batch_model", "build_batch_model_from_adj",
     "MultilevelConfig", "multilevel_partition",
     "BuffCutConfig", "StreamStats", "buffcut_partition",
     "heistream_partition",

@@ -36,17 +36,41 @@ class BatchModel:
 def build_batch_model(
     g: CSRGraph, batch: np.ndarray, block: np.ndarray, k: int
 ) -> BatchModel:
+    """Graph-backed wrapper: gather the batch adjacency from the CSR, then
+    defer to the adjacency-based builder the streaming drivers use."""
+    batch = np.asarray(batch, dtype=np.int64)
+    degs = (g.indptr[batch + 1] - g.indptr[batch]).astype(np.int64)
+    gather = g.slice_indices(batch)
+    return build_batch_model_from_adj(
+        g.n,
+        batch,
+        degs,
+        g.indices[gather].astype(np.int64),
+        g.edge_w[gather].astype(np.float64),
+        g.node_w[batch],
+        block,
+        k,
+    )
+
+
+def build_batch_model_from_adj(
+    n: int,
+    batch: np.ndarray,
+    degs: np.ndarray,
+    dst_g: np.ndarray,
+    w: np.ndarray,
+    node_w_batch: np.ndarray,
+    block: np.ndarray,
+    k: int,
+) -> BatchModel:
+    """Build the model graph from the batch's *retained* adjacency — the
+    concatenated neighbor ids / weights the stream delivered — so no CSR of
+    the full graph is required (out-of-core path; DESIGN.md §4)."""
     batch = np.asarray(batch, dtype=np.int64)
     b = batch.shape[0]
-    local_of = np.full(g.n, -1, dtype=np.int64)
+    local_of = np.full(n, -1, dtype=np.int64)
     local_of[batch] = np.arange(b)
-
-    # gather all incident edges of batch nodes (one vectorized CSR slice)
-    degs = (g.indptr[batch + 1] - g.indptr[batch]).astype(np.int64)
     src_l = np.repeat(np.arange(b, dtype=np.int64), degs)
-    gather = g.slice_indices(batch)
-    dst_g = g.indices[gather].astype(np.int64)
-    w = g.edge_w[gather]
 
     dst_l = local_of[dst_g]
     internal = dst_l >= 0
@@ -69,7 +93,7 @@ def build_batch_model(
 
     edges = np.concatenate([int_edges, aux_edges], axis=0) if b else np.empty((0, 2), dtype=np.int64)
     wts = np.concatenate([int_w, aux_wts], axis=0)
-    node_w = np.concatenate([g.node_w[batch], np.zeros(k, dtype=np.float32)])
+    node_w = np.concatenate([np.asarray(node_w_batch, dtype=np.float32), np.zeros(k, dtype=np.float32)])
     model = CSRGraph.from_edges(b + k, edges, edge_weights=wts, node_weights=node_w)
 
     pinned = np.full(b + k, -1, dtype=np.int64)

@@ -7,6 +7,14 @@ scores of buffered neighbors (IncreaseKey), which is what recovers locality
 from adversarial orders. Full batches are partitioned jointly on the batch
 model graph by the multilevel scheme; assignments commit and the process
 repeats until the stream ends and the buffer is flushed.
+
+The driver consumes only the `NodeStream` protocol (graphs/stream.py): a
+CSRGraph argument is wrapped in the in-memory stream, a `DiskNodeStream`
+partitions straight from disk.  Adjacency is retained solely for nodes that
+are buffered, batched, or mid-hub-assignment (RescoreState's
+AdjacencyCache) and released at commit, so peak resident memory is
+buffer + batch + the stream's read-ahead window — measured, not modeled, in
+`StreamStats.peak_resident_bytes` (paper §4 accounting).
 """
 from __future__ import annotations
 
@@ -16,14 +24,14 @@ import time
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
-from repro.graphs.stream import NodeStream
+from repro.graphs.stream import NodeStreamBase, as_node_stream
 from repro.core.buffer import BucketPQ
 from repro.core.rescore import RescoreState
 from repro.core.scores import ScoreSpec, get_score
 from repro.core.fennel import FennelParams, fennel_choose
-from repro.core.batch_model import build_batch_model
+from repro.core.batch_model import build_batch_model_from_adj
 from repro.core.multilevel import MultilevelConfig, multilevel_partition
-from repro.core.metrics import internal_edge_ratio
+from repro.core.metrics import internal_edge_ratio_adj, streaming_cut_increment
 
 
 @dataclasses.dataclass
@@ -54,6 +62,11 @@ class StreamStats:
     ier_per_batch: list = dataclasses.field(default_factory=list)
     peak_mem_items: int = 0           # buffer + batch + model working set
     evictions: list = dataclasses.field(default_factory=list)
+    # streaming-measured fields (always filled; see DESIGN.md §4):
+    cut_weight: float = 0.0           # exact edge cut, accumulated at commits
+    balance: float = 0.0              # max load / (c(V)/k) at stream end
+    peak_resident_bytes: int = 0      # retained adjacency + read-ahead, peak
+    stream_bytes_read: int = 0        # bytes pulled from the stream backend
 
     @property
     def mean_ier(self) -> float:
@@ -63,12 +76,12 @@ class StreamStats:
 class _State(RescoreState):
     """Per-stream counters (core/rescore.py) with BucketPQ-mirrored
     membership: the drivers flip `member` at insert/extract so every bump
-    is one batched CSR-slice pass instead of a per-edge Python loop."""
+    is one batched adjacency-slice pass instead of a per-edge Python loop."""
 
 
 def _apply(pq: BucketPQ, touched: np.ndarray, scores: np.ndarray) -> None:
-    """Forward batched rescores to the PQ in CSR (first-occurrence) order —
-    the same IncreaseKey sequence the per-edge loop produced."""
+    """Forward batched rescores to the PQ in adjacency (first-occurrence)
+    order — the same IncreaseKey sequence the per-edge loop produced."""
     for w_, s in zip(touched.tolist(), scores.tolist()):
         pq.increase_key(w_, s)
 
@@ -89,44 +102,59 @@ def _bump_buffered(st: _State, pq: BucketPQ, v: int) -> None:
 
 
 def buffcut_partition(
-    g: CSRGraph, cfg: BuffCutConfig
+    g: CSRGraph | NodeStreamBase, cfg: BuffCutConfig
 ) -> tuple[np.ndarray, StreamStats]:
+    stream = as_node_stream(g)
+    n = stream.n
     spec = cfg.score_spec()
     p = FennelParams(
         k=cfg.k,
-        n_total=float(g.node_w.sum()),
-        m_total=g.total_edge_weight(),
+        n_total=stream.n_total,
+        m_total=stream.m_total,
         eps=cfg.eps,
         gamma=cfg.gamma,
     )
-    st = _State(g, spec, cfg.k)
+    st = _State(n, spec, cfg.k)
     pq = BucketPQ(spec.s_max, cfg.disc_factor)
-    block = np.full(g.n, -1, dtype=np.int64)
+    block = np.full(n, -1, dtype=np.int64)
     loads = np.zeros(cfg.k, dtype=np.float64)
     batch: list[int] = []
     stats = StreamStats()
     t0 = time.perf_counter()
 
+    def note_peak(extra: int = 0) -> None:
+        resident = st.adj.resident_bytes + stream.resident_bytes + extra
+        if resident > stats.peak_resident_bytes:
+            stats.peak_resident_bytes = resident
+
     def commit_batch() -> None:
         if not batch:
             return
         bnodes = np.asarray(batch, dtype=np.int64)
-        model = build_batch_model(g, bnodes, block, cfg.k)
+        nbr_c, w_c, degs = st.adj.slice(bnodes)
+        node_w_b = st.adj.node_weights(bnodes)
+        model = build_batch_model_from_adj(
+            n, bnodes, degs, nbr_c, w_c, node_w_b, block, cfg.k
+        )
         t_ml = time.perf_counter()
         labels = multilevel_partition(model.graph, model.pinned_block, p, loads, cfg.ml)
         stats.ml_time_s += time.perf_counter() - t_ml
-        block[bnodes] = labels[: bnodes.shape[0]]
-        np.add.at(loads, labels[: bnodes.shape[0]], g.node_w[bnodes].astype(np.float64))
+        lab_b = labels[: bnodes.shape[0]]
+        block[bnodes] = lab_b
+        np.add.at(loads, lab_b, node_w_b.astype(np.float64))
+        stats.cut_weight += streaming_cut_increment(bnodes, lab_b, degs, nbr_c, w_c, block)
+        note_peak(model.graph.indices.nbytes + model.graph.edge_w.nbytes)
         if cfg.collect_stats:
-            stats.ier_per_batch.append(internal_edge_ratio(g, bnodes))
+            stats.ier_per_batch.append(internal_edge_ratio_adj(bnodes, nbr_c, w_c, n))
             stats.peak_mem_items = max(
                 stats.peak_mem_items, len(pq) + len(batch) + model.graph.indices.shape[0]
             )
         stats.n_batches += 1
         # CMS: buffered neighbors now see concrete blocks
         if st.blk_w is not None:
-            for u, b_ in zip(bnodes, labels[: bnodes.shape[0]]):
+            for u, b_ in zip(bnodes, lab_b):
                 _bump_block_counts(st, pq, int(u), int(b_))
+        st.release(bnodes)
         batch.clear()
 
     def evict_one() -> None:
@@ -140,15 +168,23 @@ def buffcut_partition(
         if len(batch) == cfg.batch_size:
             commit_batch()
 
-    stream = NodeStream(g)
+    one = np.empty(1, dtype=np.int64)
     for v, nbrs, nbr_w, node_w in stream:
+        st.observe(v, nbrs, nbr_w, node_w)
+        note_peak()
         if nbrs.size > cfg.d_max:  # hub bypass: assign immediately via Fennel
             i = fennel_choose(nbrs, nbr_w, node_w, block, loads, p)
             block[v] = i
             loads[i] += node_w
             stats.n_hubs += 1
+            one[0] = v
+            hnbr, hw, hdeg = st.adj.slice(one)
+            stats.cut_weight += streaming_cut_increment(
+                one, np.array([i], dtype=np.int64), hdeg, hnbr, hw, block
+            )
             _bump_assigned(st, pq, v, was_buffered=False)
             _bump_block_counts(st, pq, v, i)
+            st.release(one)
         else:
             _bump_buffered(st, pq, v)
             pq.insert(v, st.score(v))
@@ -162,5 +198,7 @@ def buffcut_partition(
     while len(pq) > 0:
         evict_one()
     commit_batch()
+    stats.balance = float(loads.max() / (p.n_total / cfg.k)) if p.n_total > 0 else 1.0
+    stats.stream_bytes_read = stream.bytes_read
     stats.runtime_s = time.perf_counter() - t0
     return block, stats

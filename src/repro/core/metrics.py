@@ -44,6 +44,57 @@ def is_balanced(g: CSRGraph, block: np.ndarray, k: int, eps: float) -> bool:
     return bool(loads.max() <= l_max(g.node_w.sum(), k, eps) + 1e-6)
 
 
+def streaming_cut_increment(
+    bnodes: np.ndarray,
+    labels: np.ndarray,
+    degs: np.ndarray,
+    nbr: np.ndarray,
+    w: np.ndarray,
+    block: np.ndarray,
+) -> float:
+    """Exact edge-cut contribution of committing `bnodes` with `labels`,
+    computed from the batch's retained adjacency only (call *after*
+    ``block[bnodes] = labels``).
+
+    Each undirected edge is charged exactly once, at the commit of its
+    later-assigned endpoint: edges to previously assigned nodes count in
+    full, edges between batch mates appear twice in the concatenated
+    adjacency and are halved, and edges to still-unassigned nodes are
+    charged at that neighbor's own commit.  Summed over hubs and batches
+    this reproduces `edge_cut` on the final labels — without ever holding
+    the graph (the out-of-core driver's cut accounting).
+    """
+    if bnodes.shape[0] == 0:
+        return 0.0
+    w = np.asarray(w, dtype=np.float64)
+    nbr_lab = block[nbr]
+    if bnodes.shape[0] == 1:
+        # hub fast path: no self loops, so no batch-mate edges — O(deg),
+        # not O(n) (hubs fire this once per high-degree stream node)
+        cross = (nbr_lab >= 0) & (nbr_lab != labels[0])
+        return float(np.sum(w[cross]))
+    in_batch = np.zeros(block.shape[0], dtype=bool)
+    in_batch[bnodes] = True
+    src_lab = np.repeat(labels, degs)
+    cross = (nbr_lab >= 0) & (nbr_lab != src_lab)
+    mates = in_batch[nbr]
+    return float(np.sum(w[cross & ~mates]) + 0.5 * np.sum(w[cross & mates]))
+
+
+def internal_edge_ratio_adj(
+    bnodes: np.ndarray, nbr: np.ndarray, w: np.ndarray, n: int
+) -> float:
+    """IER(B) (paper Eq. 7) from the batch's retained adjacency: the
+    concatenated neighbor slice already contains both directions of every
+    internal edge (= 2*w(E(B))) and its total weight is sum_B d_w(v)."""
+    in_b = np.zeros(n, dtype=bool)
+    in_b[bnodes] = True
+    w = np.asarray(w, dtype=np.float64)
+    den = float(np.sum(w))
+    num = float(np.sum(w[in_b[nbr]]))
+    return num / den if den > 0 else 0.0
+
+
 def internal_edge_ratio(g: CSRGraph, batch: np.ndarray) -> float:
     """IER(B) = 2*w(E(B)) / sum_{v in B} d_w(v) (paper Eq. 7)."""
     in_b = np.zeros(g.n, dtype=bool)

@@ -2,11 +2,12 @@
 
 The paper overlaps three stages with threads + lock-free queues:
   T1 I/O reader -> T2 priority-queue handler -> T3 partition worker.
-The JAX-native equivalent keeps the same stage split but realizes the
-overlap with (a) a background reader thread feeding parsed chunks through a
-bounded queue and (b) asynchronous device dispatch for batch partitioning
-(jit calls return before compute finishes, so buffer maintenance for stream
-position t+1 overlaps the partition of batch t). To keep scoring consistent
+T1 is now a real IO stage: a background thread pulls records from the
+`NodeStream` protocol (disk-backed or in-memory) through a bounded queue —
+the stream's read-ahead window — so parsing overlaps buffer maintenance.
+T3 receives self-contained payloads (the batch's retained adjacency), never
+touching a graph object, and overlaps batch partitioning with stream
+position t+1 via asynchronous device dispatch.  To keep scoring consistent
 with the sequential semantics, nodes are treated as assigned the moment
 their batch task is enqueued (paper: "as soon as their task is enqueued").
 
@@ -22,35 +23,80 @@ import time
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
+from repro.graphs.stream import NodeStreamBase, as_node_stream
 from repro.core.buffcut import BuffCutConfig, StreamStats, _State, _bump_assigned, _bump_buffered
 from repro.core.buffer import BucketPQ
 from repro.core.fennel import FennelParams, fennel_choose
-from repro.core.batch_model import build_batch_model
+from repro.core.batch_model import build_batch_model_from_adj
 from repro.core.multilevel import multilevel_partition
-from repro.core.metrics import internal_edge_ratio
+from repro.core.metrics import internal_edge_ratio_adj, streaming_cut_increment
 
 
 def buffcut_partition_pipelined(
-    g: CSRGraph, cfg: BuffCutConfig, queue_depth: int = 4
+    g: CSRGraph | NodeStreamBase,
+    cfg: BuffCutConfig,
+    queue_depth: int = 4,
+    read_ahead: int = 64,
 ) -> tuple[np.ndarray, StreamStats]:
+    stream = as_node_stream(g)
+    n = stream.n
     spec = cfg.score_spec()
     p = FennelParams(
-        k=cfg.k, n_total=float(g.node_w.sum()), m_total=g.total_edge_weight(),
+        k=cfg.k, n_total=stream.n_total, m_total=stream.m_total,
         eps=cfg.eps, gamma=cfg.gamma,
     )
-    st = _State(g, spec, cfg.k)
+    st = _State(n, spec, cfg.k)
     pq = BucketPQ(spec.s_max, cfg.disc_factor)
-    block = np.full(g.n, -1, dtype=np.int64)
+    block = np.full(n, -1, dtype=np.int64)
     loads = np.zeros(cfg.k, dtype=np.float64)
     # committed-loads view is owned by the partition worker; the PQ handler
     # reads a snapshot for hub assignment (slight staleness == paper's note
     # that the parallel schedule can differ from the sequential one).
     lock = threading.Lock()
     task_q: queue.Queue = queue.Queue(maxsize=queue_depth)
+    rec_q: queue.Queue = queue.Queue(maxsize=max(1, read_ahead))
     stats = StreamStats()
     t0 = time.perf_counter()
 
-    def partition_worker() -> None:
+    # bytes currently parsed-but-unconsumed in the read-ahead queue (T1->T2)
+    # and in batch/hub payloads queued or being processed by T3 (T2->T3):
+    # released cache entries live on in payloads, so they stay in the
+    # measured resident set until the worker finishes with them
+    inflight = {"bytes": 0, "task_bytes": 0, "peak_stream": 0}
+
+    def _payload_bytes(arrays) -> int:
+        return int(sum(a.nbytes for a in arrays if isinstance(a, np.ndarray)) + 64)
+
+    def reader() -> None:  # T1
+        try:
+            for rec in stream:
+                nbytes = rec[1].nbytes + rec[2].nbytes + 32
+                with lock:
+                    inflight["bytes"] += nbytes
+                    inflight["peak_stream"] = max(
+                        inflight["peak_stream"], stream.resident_bytes
+                    )
+                rec_q.put(rec)
+            rec_q.put(None)
+        except BaseException as e:  # surface parse errors in the main thread
+            rec_q.put(e)
+
+    def note_peak(extra: int = 0, locked: bool = False) -> None:
+        def compute() -> int:
+            return (
+                st.adj.resident_bytes + inflight["bytes"] + inflight["task_bytes"]
+                + max(stream.resident_bytes, inflight["peak_stream"]) + extra
+            )
+
+        if locked:
+            resident = compute()
+        else:
+            with lock:
+                resident = compute()
+        if resident > stats.peak_resident_bytes:
+            stats.peak_resident_bytes = resident
+
+    def partition_worker() -> None:  # T3
         while True:
             item = task_q.get()
             if item is None:
@@ -58,45 +104,83 @@ def buffcut_partition_pipelined(
             kind, payload = item
             with lock:
                 if kind == "batch":
-                    bnodes = payload
-                    model = build_batch_model(g, bnodes, block, cfg.k)
+                    bnodes, degs, nbr_c, w_c, node_w_b = payload
+                    model = build_batch_model_from_adj(
+                        n, bnodes, degs, nbr_c, w_c, node_w_b, block, cfg.k
+                    )
+                    note_peak(
+                        model.graph.indices.nbytes + model.graph.edge_w.nbytes,
+                        locked=True,
+                    )
                     labels = multilevel_partition(
                         model.graph, model.pinned_block, p, loads, cfg.ml
                     )
-                    block[bnodes] = labels[: bnodes.shape[0]]
-                    np.add.at(
-                        loads, labels[: bnodes.shape[0]],
-                        g.node_w[bnodes].astype(np.float64),
+                    lab_b = labels[: bnodes.shape[0]]
+                    block[bnodes] = lab_b
+                    np.add.at(loads, lab_b, node_w_b.astype(np.float64))
+                    stats.cut_weight += streaming_cut_increment(
+                        bnodes, lab_b, degs, nbr_c, w_c, block
                     )
                     stats.n_batches += 1
                     if cfg.collect_stats:
-                        stats.ier_per_batch.append(internal_edge_ratio(g, bnodes))
-                else:  # single hub task
-                    v = payload
-                    i = fennel_choose(
-                        g.neighbors(v), g.neighbor_weights(v),
-                        float(g.node_w[v]), block, loads, p,
-                    )
+                        stats.ier_per_batch.append(
+                            internal_edge_ratio_adj(bnodes, nbr_c, w_c, n)
+                        )
+                else:  # single hub task: payload carries the stream record
+                    v, nbrs, nbr_w, node_w = payload
+                    i = fennel_choose(nbrs, nbr_w, float(node_w), block, loads, p)
                     block[v] = i
-                    loads[i] += g.node_w[v]
+                    loads[i] += np.float32(node_w)
+                    hv = np.array([v], dtype=np.int64)
+                    stats.cut_weight += streaming_cut_increment(
+                        hv,
+                        np.array([i], dtype=np.int64),
+                        np.array([nbrs.size], dtype=np.int64),
+                        nbrs.astype(np.int64),
+                        nbr_w.astype(np.float64),
+                        block,
+                    )
                     stats.n_hubs += 1
+                inflight["task_bytes"] -= _payload_bytes(payload)
 
     worker = threading.Thread(target=partition_worker, daemon=True)
     worker.start()
+    t1 = threading.Thread(target=reader, daemon=True)
+    t1.start()
 
     batch: list[int] = []
 
     def flush_batch() -> None:
         if batch:
-            task_q.put(("batch", np.asarray(batch, dtype=np.int64)))
+            bnodes = np.asarray(batch, dtype=np.int64)
+            nbr_c, w_c, degs = st.adj.slice(bnodes)
+            node_w_b = st.adj.node_weights(bnodes)
+            st.release(bnodes)  # payload is self-contained; cache shrinks now
+            payload = (bnodes, degs, nbr_c, w_c, node_w_b)
+            with lock:
+                inflight["task_bytes"] += _payload_bytes(payload)
+            task_q.put(("batch", payload))
             batch.clear()
 
-    # T1 (reader) is the NodeStream iterator; T2 (PQ handler) is this loop.
-    for v in range(g.n):
-        nbrs = g.neighbors(v)
+    # T2 (PQ handler): consume the reader's records in stream order.
+    while True:
+        item = rec_q.get()
+        if item is None:
+            break
+        if isinstance(item, BaseException):
+            raise item
+        v, nbrs, nbr_w, node_w = item
+        with lock:
+            inflight["bytes"] -= nbrs.nbytes + nbr_w.nbytes + 32
+        st.observe(v, nbrs, nbr_w, node_w)
+        note_peak()
         if nbrs.size > cfg.d_max:
-            task_q.put(("hub", v))
+            payload = (v, nbrs, nbr_w, node_w)
+            with lock:
+                inflight["task_bytes"] += _payload_bytes(payload)
+            task_q.put(("hub", payload))
             _bump_assigned(st, pq, v, was_buffered=False)  # enqueued == assigned
+            st.release(np.array([v], dtype=np.int64))
         else:
             _bump_buffered(st, pq, v)
             pq.insert(v, st.score(v))
@@ -118,5 +202,9 @@ def buffcut_partition_pipelined(
     flush_batch()
     task_q.put(None)
     worker.join()
+    t1.join()
+    with lock:
+        stats.balance = float(loads.max() / (p.n_total / cfg.k)) if p.n_total > 0 else 1.0
+    stats.stream_bytes_read = stream.bytes_read
     stats.runtime_s = time.perf_counter() - t0
     return block, stats

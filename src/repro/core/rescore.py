@@ -1,17 +1,25 @@
-"""Batched CSR-slice rescoring — the streaming-side inner op.
+"""Batched rescoring over retained adjacency — the streaming-side inner op.
 
 Every driver event (hub assignment, batch admission, buffer arrival) must
 rescore the buffered neighbors of the affected nodes.  The seed drivers did
-this with per-edge Python loops (`_bump_*` in buffcut.py / pipeline.py and
-the per-node NSS chunk loop in vector_stream.py); this module is the one
-shared O(slice) implementation: a vectorized CSR gather, masked scatter-adds
-into the counter vectors, and a batched score recompute (DESIGN.md §3.4).
+this with per-edge Python loops; this module is the one shared O(slice)
+implementation: a vectorized adjacency gather, masked scatter-adds into the
+counter vectors, and a batched score recompute (DESIGN.md §3.4).
+
+Since PR 3 the state is *stream-native*: drivers feed each arriving node's
+adjacency into `observe`, and it is retained only while the node can still
+be touched (buffered, batched, or mid-hub-assignment) in an
+`AdjacencyCache`, then released.  Nothing here reads a `CSRGraph`, so the
+same code path serves in-memory and disk-backed streams — which is what
+makes the two bit-identical (tests/test_stream_conformance.py).  The
+cache's live byte count is the "buffer + batch" term of the paper's §4
+memory accounting, measured rather than modeled.
 
 `RescoreState` owns the per-stream counters the scores are closed-form
 functions of (scores.py):
 
   assigned_w  — weight to assigned-or-batched neighbors (all scores),
-  deg_w       — weighted degree (static; computed in one segment-sum),
+  deg_w       — weighted degree (filled at arrival from the record),
   buffered_w  — weight to currently-buffered neighbors (NSS),
   blk_w/cmax  — per-block weight to assigned neighbors + running max (CMS).
 
@@ -19,24 +27,31 @@ Membership of the buffer is a dense bool mask; the vectorized driver shares
 `VectorBuffer.in_buf` directly (zero-copy), the sequential/pipelined drivers
 mirror their BucketPQ membership into it at insert/extract.
 
-All bumps return touched node ids in first-occurrence CSR order together
-with their fresh scores: exactly the order the sequential driver issues
-`IncreaseKey` in, so both buffer implementations see identical update (and
-therefore LIFO tie-break) sequences — the property the wave=1 equivalence
-tests pin down.
+All bumps return touched node ids in first-occurrence adjacency order
+together with their fresh scores: exactly the order the sequential driver
+issues `IncreaseKey` in, so both buffer implementations see identical
+update (and therefore LIFO tie-break) sequences — the property the wave=1
+equivalence tests pin down.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
+from repro.graphs.stream import seq_sum64
 from repro.core.scores import ScoreSpec
 
 _EMPTY = np.empty(0, dtype=np.int64)
+_EMPTY_W = np.empty(0, dtype=np.float64)
 
 
 def weighted_degrees(g: CSRGraph) -> np.ndarray:
-    """Per-node total incident edge weight, float64, in one segment-sum."""
+    """Per-node total incident edge weight, float64, in one segment-sum.
+
+    bincount accumulates per row in CSR order — the same sequential sum
+    `RescoreState.observe` computes per record (graphs/stream.py seq_sum64),
+    so graph-mode and stream-mode degrees are bit-identical.
+    """
     return np.bincount(
         np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr)),
         weights=g.edge_w.astype(np.float64),
@@ -45,26 +60,95 @@ def weighted_degrees(g: CSRGraph) -> np.ndarray:
 
 
 def _first_occurrence(ids: np.ndarray) -> np.ndarray:
-    """Deduplicate preserving first-occurrence order (CSR order)."""
+    """Deduplicate preserving first-occurrence order (adjacency order)."""
     uniq, first = np.unique(ids, return_index=True)
     return uniq[np.argsort(first, kind="stable")]
 
 
+class AdjacencyCache:
+    """Adjacency retained for live nodes only (buffered + current batch).
+
+    Stores each node's neighbor ids as int64 and weights as float64 — the
+    dtypes the rescore math always used after its gather-and-cast — plus
+    the node weight.  `resident_bytes` is maintained incrementally and is
+    the measured working set for StreamStats.peak_resident_bytes.
+    """
+
+    def __init__(self) -> None:
+        self._nbr: dict[int, np.ndarray] = {}
+        self._w: dict[int, np.ndarray] = {}
+        self._node_w: dict[int, float] = {}
+        self.resident_bytes = 0
+
+    def __len__(self) -> int:
+        return len(self._nbr)
+
+    def __contains__(self, v: int) -> bool:
+        return v in self._nbr
+
+    def put(self, v: int, nbrs: np.ndarray, weights: np.ndarray, node_w: float) -> None:
+        nb = np.ascontiguousarray(nbrs, dtype=np.int64)
+        w = np.ascontiguousarray(weights, dtype=np.float64)
+        self._nbr[v] = nb
+        self._w[v] = w
+        self._node_w[v] = float(node_w)
+        self.resident_bytes += nb.nbytes + w.nbytes + 32
+
+    def drop(self, vs: np.ndarray) -> None:
+        for v in np.asarray(vs, dtype=np.int64).tolist():
+            nb = self._nbr.pop(v, None)
+            if nb is None:
+                continue
+            w = self._w.pop(v)
+            self._node_w.pop(v)
+            self.resident_bytes -= nb.nbytes + w.nbytes + 32
+
+    def slice(self, us: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Concatenated (neighbors int64, weights float64, degs int64) of
+        `us` in order — the batched equivalent of a CSR slice."""
+        us = np.asarray(us, dtype=np.int64)
+        if us.size == 0:
+            return _EMPTY, _EMPTY_W, _EMPTY
+        nbs = [self._nbr[int(u)] for u in us]
+        ws = [self._w[int(u)] for u in us]
+        degs = np.array([b.shape[0] for b in nbs], dtype=np.int64)
+        return np.concatenate(nbs), np.concatenate(ws), degs
+
+    def node_weights(self, us: np.ndarray) -> np.ndarray:
+        return np.array([self._node_w[int(u)] for u in np.asarray(us)], dtype=np.float32)
+
+
 class RescoreState:
-    """Stream counters + buffer membership, with batched bump updates."""
+    """Stream counters + buffer membership, with batched bump updates.
+
+    Two construction modes:
+      * stream mode — ``RescoreState(n, spec, k)``: adjacency arrives via
+        `observe` and lives in the bounded AdjacencyCache (the three BuffCut
+        drivers; works for disk-backed streams).
+      * graph mode — ``RescoreState(g, spec, k)``: slices come from the full
+        CSR as before (baselines that genuinely hold the graph, e.g.
+        cuttana).
+    """
 
     def __init__(
         self,
-        g: CSRGraph,
+        g: "CSRGraph | int",
         spec: ScoreSpec,
         k: int,
         member: np.ndarray | None = None,
     ):
-        n = g.n
-        self.g = g
+        if isinstance(g, CSRGraph):
+            n = g.n
+            self.g: CSRGraph | None = g
+            self.deg_w = weighted_degrees(g)
+        else:
+            n = int(g)
+            self.g = None
+            self.deg_w = np.zeros(n, dtype=np.float64)
+        self.n = n
         self.spec = spec
         self.k = k
-        self.deg_w = weighted_degrees(g)
+        self.adj = AdjacencyCache()
         self.assigned_w = np.zeros(n, dtype=np.float64)
         self.buffered_w = np.zeros(n, dtype=np.float64) if spec.needs_buffered_count else None
         # CMS: per-buffered-node block-weight rows (dict keeps the working
@@ -73,6 +157,18 @@ class RescoreState:
         self.cmax = np.zeros(n, dtype=np.float64) if spec.needs_block_counts else None
         # buffer membership; pass VectorBuffer.in_buf to share it zero-copy
         self.member = np.zeros(n, dtype=bool) if member is None else member
+
+    # ----------------------------------------------------------- streaming
+    def observe(self, v: int, nbrs: np.ndarray, weights: np.ndarray, node_w: float) -> None:
+        """Node `v` arrived from the stream: record its weighted degree and
+        retain its adjacency until `release`."""
+        self.deg_w[v] = seq_sum64(weights)
+        self.adj.put(v, nbrs, weights, node_w)
+
+    def release(self, vs: np.ndarray) -> None:
+        """Nodes can no longer be touched (committed / hub-assigned done):
+        free their retained adjacency."""
+        self.adj.drop(vs)
 
     # ------------------------------------------------------------- scoring
     def scores_of(self, vs: np.ndarray) -> np.ndarray:
@@ -86,12 +182,24 @@ class RescoreState:
         return float(self.scores_of(np.array([v], dtype=np.int64))[0])
 
     # ------------------------------------------------------------- gathers
-    def _buffered_slice(self, us: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """(neighbor ids, weights) of buffered neighbors of `us`, CSR order."""
+    def _slice(self, us: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(neighbors, weights, degs) of `us` — cache in stream mode, CSR in
+        graph mode; identical values either way."""
+        if self.g is None:
+            return self.adj.slice(us)
         pos = self.g.slice_indices(us)
-        nbr = self.g.indices[pos].astype(np.int64)
+        degs = (self.g.indptr[us + 1] - self.g.indptr[us]).astype(np.int64)
+        return (
+            self.g.indices[pos].astype(np.int64),
+            self.g.edge_w[pos].astype(np.float64),
+            degs,
+        )
+
+    def _buffered_slice(self, us: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(neighbor ids, weights) of buffered neighbors of `us`."""
+        nbr, w, _ = self._slice(us)
         keep = self.member[nbr]
-        return nbr[keep], self.g.edge_w[pos][keep].astype(np.float64)
+        return nbr[keep], w[keep]
 
     # --------------------------------------------------------------- bumps
     def bump_assigned(
@@ -120,11 +228,8 @@ class RescoreState:
         vs = np.asarray(vs, dtype=np.int64)
         if self.buffered_w is None or vs.size == 0:
             return _EMPTY, np.empty(0)
-        pos = self.g.slice_indices(vs)
-        nbr = self.g.indices[pos].astype(np.int64)
+        nbr, w, degs = self._slice(vs)
         keep = self.member[nbr]
-        w = self.g.edge_w[pos].astype(np.float64)
-        degs = self.g.indptr[vs + 1] - self.g.indptr[vs]
         seg = np.repeat(np.arange(vs.size, dtype=np.int64), degs)
         self.buffered_w[vs] = np.bincount(
             seg[keep], weights=w[keep], minlength=vs.size

@@ -9,6 +9,12 @@ this op). `chunk=1, wave=1` reproduces the sequential driver's semantics;
 larger values trade fidelity-to-the-paper for VPU-lane utilization, a
 beyond-paper knob measured in EXPERIMENTS.md §Perf.
 
+Like the sequential driver, this consumes only the `NodeStream` protocol —
+records arrive in stream order, are grouped into `chunk`-sized arrival
+waves, and adjacency is retained only while a node is buffered or batched
+(released at commit), so disk-backed streams partition graphs larger than
+RAM with peak resident = buffer + batch + read-ahead.
+
 `score_kernel` below is the jittable JAX scoring function used on device;
 the host driver calls its numpy twin for CPU streaming.
 """
@@ -22,12 +28,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
+from repro.graphs.stream import NodeStreamBase, as_node_stream
 from repro.core.buffer import VectorBuffer
 from repro.core.buffcut import BuffCutConfig, StreamStats
 from repro.core.fennel import FennelParams, fennel_choose
-from repro.core.batch_model import build_batch_model
+from repro.core.batch_model import build_batch_model_from_adj
 from repro.core.multilevel import multilevel_partition
-from repro.core.metrics import internal_edge_ratio
+from repro.core.metrics import internal_edge_ratio_adj, streaming_cut_increment
 from repro.core.rescore import RescoreState
 
 
@@ -60,7 +67,7 @@ def score_kernel(
 
 
 def buffcut_partition_vectorized(
-    g: CSRGraph,
+    g: CSRGraph | NodeStreamBase,
     cfg: BuffCutConfig,
     *,
     wave: int = 1,
@@ -70,14 +77,15 @@ def buffcut_partition_vectorized(
     spec = cfg.score_spec()
     if spec.needs_block_counts:
         raise ValueError("CMS needs per-block counts; use the sequential driver")
+    stream = as_node_stream(g)
+    n = stream.n
     p = FennelParams(
-        k=cfg.k, n_total=float(g.node_w.sum()), m_total=g.total_edge_weight(),
+        k=cfg.k, n_total=stream.n_total, m_total=stream.m_total,
         eps=cfg.eps, gamma=cfg.gamma,
     )
-    n = g.n
     buf = VectorBuffer(n, spec.s_max, cfg.disc_factor, engine=engine)
     # the rescore state shares the buffer's membership mask zero-copy
-    st = RescoreState(g, spec, cfg.k, member=buf.in_buf)
+    st = RescoreState(n, spec, cfg.k, member=buf.in_buf)
     block = np.full(n, -1, dtype=np.int64)
     loads = np.zeros(cfg.k, dtype=np.float64)
     batch: list[np.ndarray] = []
@@ -85,8 +93,13 @@ def buffcut_partition_vectorized(
     stats = StreamStats()
     t0 = time.perf_counter()
 
+    def note_peak(extra: int = 0) -> None:
+        resident = st.adj.resident_bytes + stream.resident_bytes + extra
+        if resident > stats.peak_resident_bytes:
+            stats.peak_resident_bytes = resident
+
     def rescore_neighbors_of(us: np.ndarray, was_buffered: bool) -> None:
-        """Admitted/assigned wave `us`: one batched CSR-slice rescore."""
+        """Admitted/assigned wave `us`: one batched adjacency-slice rescore."""
         touched, scores = st.bump_assigned(us, was_buffered)
         if touched.size:
             buf.update_scores(touched, scores)
@@ -96,15 +109,23 @@ def buffcut_partition_vectorized(
         if batch_count == 0:
             return
         bnodes = np.concatenate(batch)[:batch_count]
-        model = build_batch_model(g, bnodes, block, cfg.k)
+        nbr_c, w_c, degs = st.adj.slice(bnodes)
+        node_w_b = st.adj.node_weights(bnodes)
+        model = build_batch_model_from_adj(
+            n, bnodes, degs, nbr_c, w_c, node_w_b, block, cfg.k
+        )
         t_ml = time.perf_counter()
         labels = multilevel_partition(model.graph, model.pinned_block, p, loads, cfg.ml)
         stats.ml_time_s += time.perf_counter() - t_ml
-        block[bnodes] = labels[: bnodes.shape[0]]
-        np.add.at(loads, labels[: bnodes.shape[0]], g.node_w[bnodes].astype(np.float64))
+        lab_b = labels[: bnodes.shape[0]]
+        block[bnodes] = lab_b
+        np.add.at(loads, lab_b, node_w_b.astype(np.float64))
+        stats.cut_weight += streaming_cut_increment(bnodes, lab_b, degs, nbr_c, w_c, block)
+        note_peak(model.graph.indices.nbytes + model.graph.edge_w.nbytes)
         stats.n_batches += 1
         if cfg.collect_stats:
-            stats.ier_per_batch.append(internal_edge_ratio(g, bnodes))
+            stats.ier_per_batch.append(internal_edge_ratio_adj(bnodes, nbr_c, w_c, n))
+        st.release(bnodes)
         batch.clear()
         batch_count = 0
 
@@ -121,24 +142,32 @@ def buffcut_partition_vectorized(
             if batch_count == cfg.batch_size:
                 commit_batch()
 
-    degs = np.diff(g.indptr)
-    for start in range(0, n, chunk):
-        vs = np.arange(start, min(start + chunk, n), dtype=np.int64)
-        hubs = vs[degs[vs] > cfg.d_max]
-        for h in hubs:  # hubs are rare; sequential Fennel is exact & cheap
-            i = fennel_choose(
-                g.neighbors(int(h)), g.neighbor_weights(int(h)),
-                float(g.node_w[h]), block, loads, p,
-            )
+    def process_chunk(records: list[tuple[int, np.ndarray, np.ndarray, float]]) -> None:
+        for v, nbrs, wts, node_w in records:
+            st.observe(v, nbrs, wts, node_w)
+        note_peak()
+        degs = np.array([r[1].size for r in records], dtype=np.int64)
+        vs = np.array([r[0] for r in records], dtype=np.int64)
+        hub_mask = degs > cfg.d_max
+        for idx in np.nonzero(hub_mask)[0]:
+            # hubs are rare; sequential Fennel is exact & cheap
+            h, nbrs, wts, node_w = records[idx]
+            i = fennel_choose(nbrs, wts, float(node_w), block, loads, p)
             block[h] = i
-            loads[i] += g.node_w[h]
+            loads[i] += np.float32(node_w)
             stats.n_hubs += 1
-            rescore_neighbors_of(np.array([h]), was_buffered=False)
-        rest = vs[degs[vs] <= cfg.d_max]
+            hv = np.array([h], dtype=np.int64)
+            hnbr, hw, hdeg = st.adj.slice(hv)
+            stats.cut_weight += streaming_cut_increment(
+                hv, np.array([i], dtype=np.int64), hdeg, hnbr, hw, block
+            )
+            rescore_neighbors_of(hv, was_buffered=False)
+            st.release(hv)
+        rest = vs[~hub_mask]
         if rest.size:
             if spec.needs_buffered_count:
                 # mutual buffered counts for the arriving chunk (one batched
-                # CSR-slice pass). Edges between chunk-mates are never
+                # adjacency-slice pass). Edges between chunk-mates are never
                 # credited (membership is checked before the chunk inserts),
                 # so chunk>1 under-counts NSS — exact for chunk=1, the
                 # paper's semantics.
@@ -148,8 +177,19 @@ def buffcut_partition_vectorized(
             buf.insert_many(rest, st.scores_of(rest))
         while len(buf) >= cfg.buffer_size:
             admit(buf.evict(min(wave, len(buf) - cfg.buffer_size + 1)))
+
+    pending: list[tuple[int, np.ndarray, np.ndarray, float]] = []
+    for rec in stream:
+        pending.append(rec)
+        if len(pending) == chunk:
+            process_chunk(pending)
+            pending = []
+    if pending:
+        process_chunk(pending)
     while len(buf) > 0:
         admit(buf.evict(min(wave, len(buf))))
     commit_batch()
+    stats.balance = float(loads.max() / (p.n_total / cfg.k)) if p.n_total > 0 else 1.0
+    stats.stream_bytes_read = stream.bytes_read
     stats.runtime_s = time.perf_counter() - t0
     return block, stats

@@ -1,5 +1,5 @@
 """BuffCut-driven GNN placement — the paper's technique as the framework's
-placement service (DESIGN.md §4).
+placement service (DESIGN.md §8).
 
 Partition the training graph into k = n_data_shards blocks with the
 streaming partitioner; node rows of block i live on data-shard i. Every

@@ -8,6 +8,9 @@ from repro.graphs.generators import (
     sbm_graph,
     star_graph,
     ring_graph,
+    grid_mesh_to_disk,
+    ring_to_disk,
+    generate_to_disk,
 )
 from repro.graphs.orderings import (
     source_order,
@@ -18,7 +21,15 @@ from repro.graphs.orderings import (
 )
 from repro.graphs.locality import aid_per_node, mean_aid
 from repro.graphs.io import write_metis, read_metis
-from repro.graphs.stream import NodeStream
+from repro.graphs.stream import NodeStream, NodeStreamBase, as_node_stream
+from repro.graphs.stream_io import (
+    DiskNodeStream,
+    StreamFormatError,
+    open_stream,
+    permute_to_disk,
+    read_packed,
+    write_packed,
+)
 from repro.graphs.sampler import sample_multihop, cross_block_fraction
 
 __all__ = [
@@ -37,9 +48,20 @@ __all__ = [
     "apply_order",
     "aid_per_node",
     "mean_aid",
+    "grid_mesh_to_disk",
+    "ring_to_disk",
+    "generate_to_disk",
     "write_metis",
     "read_metis",
     "NodeStream",
+    "NodeStreamBase",
+    "as_node_stream",
+    "DiskNodeStream",
+    "StreamFormatError",
+    "open_stream",
+    "permute_to_disk",
+    "read_packed",
+    "write_packed",
     "sample_multihop",
     "cross_block_fraction",
 ]

@@ -141,6 +141,94 @@ def sbm_graph(
     return CSRGraph.from_edges(n, np.concatenate(edges, axis=0))
 
 
+# ------------------------------------------------------- generate-to-disk
+#
+# Out-of-core benchmarks need graphs several times larger than the
+# partitioner's configured buffer without ever materializing them.  The
+# structured families (grid, ring) emit their canonical CSR rows directly —
+# node v's neighbors in exactly the order `CSRGraph.from_edges` would store
+# them (ids > v ascending, then < v ascending) — so one record is resident
+# at a time and the disk stream is bit-identical to the in-memory graph.
+# Random families require global dedup/symmetrization, so `generate_to_disk`
+# materializes those at container scale and converts (documented fallback).
+
+
+def grid_mesh_to_disk(side: int, path: str, *, diag: bool = True) -> int:
+    """Stream a 2D grid mesh (n = side*side) straight to a packed file.
+
+    Rows match `grid_mesh_graph(side, diag=diag)` exactly; peak memory is
+    O(n) bookkeeping in the writer (totals), never O(m).
+    """
+    from repro.graphs.stream_io import PackedWriter
+
+    n = side * side
+    m = 2 * side * (side - 1) + (diag * (side - 1) * (side - 1))
+    with PackedWriter(path, n, m, has_edge_w=False, has_node_w=False) as w:
+        for r in range(side):
+            for c in range(side):
+                v = r * side + c
+                row: list[int] = []
+                if c < side - 1:
+                    row.append(v + 1)
+                if r < side - 1:
+                    row.append(v + side)
+                if diag and r < side - 1 and c < side - 1:
+                    row.append(v + side + 1)
+                if diag and r > 0 and c > 0:
+                    row.append(v - side - 1)
+                if r > 0:
+                    row.append(v - side)
+                if c > 0:
+                    row.append(v - 1)
+                w.write_node(np.asarray(row, dtype=np.int64))
+    return n
+
+
+def ring_to_disk(n: int, path: str) -> int:
+    """Stream a ring graph to a packed file (rows match `ring_graph(n)`)."""
+    from repro.graphs.stream_io import PackedWriter
+
+    if n < 3:
+        raise ValueError("ring_to_disk needs n >= 3")
+    with PackedWriter(path, n, n, has_edge_w=False, has_node_w=False) as w:
+        for v in range(n):
+            if v == 0:
+                row = [1, n - 1]
+            elif v == n - 1:
+                row = [0, n - 2]
+            else:
+                row = [v + 1, v - 1]
+            w.write_node(np.asarray(row, dtype=np.int64))
+    return n
+
+
+_DISK_FAMILIES = {
+    "grid": lambda path, **kw: grid_mesh_to_disk(kw.pop("side"), path, **kw),
+    "ring": lambda path, **kw: ring_to_disk(kw.pop("n"), path, **kw),
+}
+
+
+def generate_to_disk(family: str, path: str, **params) -> int:
+    """Synthesize a graph family straight to a packed file; returns n.
+
+    'grid' and 'ring' stream incrementally (graphs larger than RAM are
+    fine); other families build in memory first and convert.
+    """
+    if family in _DISK_FAMILIES:
+        return _DISK_FAMILIES[family](path, **params)
+    from repro.graphs.stream_io import write_packed
+
+    builders = {
+        "rmat": rmat_graph, "rgg": rgg_graph, "rhg": rhg_like_graph,
+        "sbm": sbm_graph, "star": star_graph,
+    }
+    if family not in builders:
+        raise ValueError(f"unknown family {family!r} (have {sorted(builders) + sorted(_DISK_FAMILIES)})")
+    g = builders[family](**params)
+    write_packed(g, path)
+    return g.n
+
+
 def star_graph(n: int) -> CSRGraph:
     """Hub + leaves: exercises the D_max hub bypass path."""
     edges = np.stack([np.zeros(n - 1, dtype=np.int64), np.arange(1, n)], axis=1)

@@ -1,14 +1,33 @@
 """METIS-format graph IO (the paper's input format).
 
 METIS format: first line `n m [fmt]`; line i+1 lists the (1-indexed)
-neighbors of node i; fmt=1 adds edge weights, fmt=10 node weights, fmt=11
-both. The paper converts all instances to METIS format with unit weights.
+neighbors of node i; fmt=1 (01) adds edge weights, fmt=10 node weights,
+fmt=11 both.  The paper converts all instances to METIS format with unit
+weights.
+
+Parsing is delegated to the chunked streaming parser in
+graphs/stream_io.py — `read_metis` is the materializing convenience on top
+of the same code path the out-of-core `DiskNodeStream` uses, so whole-file
+and chunked parses cannot diverge.  Malformed files (bad header, truncated
+data, out-of-range neighbors, m mismatch) raise `StreamFormatError`.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
+from repro.graphs.stream_io import (  # noqa: F401 (StreamFormatError re-export)
+    MetisChunkReader,
+    StreamFormatError,
+    materialize_records,
+)
+
+
+def _fmt_weight(w: float) -> str:
+    """Weights round-trip exactly: integers as ints, else shortest repr of
+    the float32 value (the seed writer truncated 2.5 -> 2)."""
+    w = float(w)
+    return str(int(w)) if w.is_integer() else repr(w)
 
 
 def write_metis(g: CSRGraph, path: str) -> None:
@@ -23,47 +42,18 @@ def write_metis(g: CSRGraph, path: str) -> None:
         for v in range(g.n):
             parts: list[str] = []
             if has_nw:
-                parts.append(str(int(g.node_w[v])))
+                parts.append(_fmt_weight(g.node_w[v]))
             nbrs = g.neighbors(v)
             wts = g.neighbor_weights(v)
             for u, w in zip(nbrs, wts):
                 parts.append(str(int(u) + 1))
                 if has_ew:
-                    parts.append(str(int(w)))
+                    parts.append(_fmt_weight(w))
             f.write(" ".join(parts) + "\n")
 
 
 def read_metis(path: str) -> CSRGraph:
-    with open(path) as f:
-        header = f.readline().split()
-        n, m = int(header[0]), int(header[1])
-        fmt = header[2] if len(header) > 2 else "00"
-        fmt = fmt.zfill(2)
-        has_nw, has_ew = fmt[0] == "1", fmt[1] == "1"
-        indptr = np.zeros(n + 1, dtype=np.int64)
-        indices: list[int] = []
-        weights: list[float] = []
-        node_w = np.ones(n, dtype=np.float32)
-        for v in range(n):
-            toks = f.readline().split()
-            i = 0
-            if has_nw:
-                node_w[v] = float(toks[0])
-                i = 1
-            while i < len(toks):
-                indices.append(int(toks[i]) - 1)
-                i += 1
-                if has_ew:
-                    weights.append(float(toks[i]))
-                    i += 1
-                else:
-                    weights.append(1.0)
-            indptr[v + 1] = len(indices)
-    g = CSRGraph(
-        indptr=indptr,
-        indices=np.asarray(indices, dtype=np.int32),
-        edge_w=np.asarray(weights, dtype=np.float32),
-        node_w=node_w,
-    )
-    assert g.m == m, f"header m={m} != parsed m={g.m}"
-    return g
+    """Materialize a METIS file as a CSRGraph via the chunked parser."""
+    reader = MetisChunkReader(path)
+    n, _, _, _ = reader.header()
+    return materialize_records(n, reader.records())

@@ -1,10 +1,29 @@
-"""Node-streaming iterator — the partitioner's only view of the graph.
+"""Node-streaming protocol — the partitioner's only view of the graph.
 
-Streaming partitioners must not hold the full graph; `NodeStream` enforces
-this contract at the API level: it yields (node_id, neighbor_ids,
-neighbor_weights, node_weight) tuples one at a time (or in chunks for the
-pipelined driver), and tracks the bytes a *real* streaming pass would have
-resident — used for the paper's memory accounting (§4 methodology).
+Streaming partitioners must not hold the full graph.  `NodeStreamBase`
+defines the contract every stream implementation honors and every driver
+consumes: nodes arrive strictly in id order as (node_id, neighbor_ids,
+neighbor_weights, node_weight) tuples (int32 ids, float32 weights — the
+on-disk record dtypes), global aggregates (`n`, `m`, `n_total`, `m_total`)
+are available before the first record, and `resident_bytes` reports the
+bytes the stream itself holds at any instant (read-ahead window) for the
+paper's memory accounting (§4 methodology).
+
+Two implementations:
+
+* `NodeStream` (this module) wraps an in-memory `CSRGraph` — the test
+  oracle and the zero-IO path.  Its resident_bytes is 0 by definition: the
+  wrapped graph is the *input*, not partitioner state.
+* `DiskNodeStream` (graphs/stream_io.py) parses METIS text or the packed
+  binary format incrementally with a bounded read-ahead buffer and never
+  materializes a CSR.
+
+Aggregate totals are canonical across implementations (see
+`canonical_totals`): n_total / m_total are float64 sums computed the same
+way from the same per-row values on every path, so `FennelParams` — and
+therefore every downstream assignment decision — is bit-identical whether
+the stream comes from memory or disk.  The conformance suite
+(tests/test_stream_conformance.py) pins this end to end.
 """
 from __future__ import annotations
 
@@ -15,8 +34,100 @@ import numpy as np
 from repro.graphs.csr import CSRGraph
 
 
-class NodeStream:
-    """Streams nodes 0..n-1 of `g` in id order.
+def seq_sum64(a: np.ndarray) -> float:
+    """Sequential (left-to-right) float64 sum of a 1-D array.
+
+    np.bincount accumulates strictly in input order, unlike np.sum's
+    pairwise reduction — this is the one summation order shared by the
+    in-memory per-graph path (`weighted_degrees`' bincount) and the
+    per-record disk path, which is what keeps weighted degrees (and hence
+    scores, and hence labels) bit-identical across stream backends.
+    """
+    if a.size == 0:
+        return 0.0
+    return float(
+        np.bincount(np.zeros(a.shape[0], dtype=np.int64), weights=a.astype(np.float64), minlength=1)[0]
+    )
+
+
+def canonical_totals(deg_w: np.ndarray, node_w: np.ndarray) -> tuple[float, float]:
+    """(n_total, m_total) from per-node weighted degrees and node weights.
+
+    Both arrays are full length-n float64/float32 vectors (O(n) state is in
+    the streaming budget — the labels already are); the pairwise np.sum over
+    identically-ordered arrays is deterministic, so any two streams of the
+    same graph agree bit-exactly.
+    """
+    n_total = float(np.sum(node_w.astype(np.float64)))
+    m_total = float(np.sum(deg_w.astype(np.float64)) / 2.0)
+    return n_total, m_total
+
+
+class NodeStreamBase:
+    """Protocol + shared helpers for node streams.
+
+    Subclasses set `n` and `m` and implement `__iter__` and the aggregate
+    properties; `chunks` has a generic record-based implementation.
+    """
+
+    n: int
+    m: int
+    # whether the stream carries non-unit edge / node weights (writers use
+    # these to pick the packed-format flags); conservative default
+    has_edge_w: bool = True
+    has_node_w: bool = True
+
+    @property
+    def n_total(self) -> float:
+        raise NotImplementedError
+
+    @property
+    def m_total(self) -> float:
+        raise NotImplementedError
+
+    @property
+    def resident_bytes(self) -> int:
+        return 0
+
+    @property
+    def bytes_read(self) -> int:
+        return 0
+
+    def __iter__(self) -> Iterator[tuple[int, np.ndarray, np.ndarray, float]]:
+        raise NotImplementedError
+
+    def chunks(self, chunk: int) -> Iterator[dict]:
+        """Yield contiguous chunks as padded-ELL dicts (generic path)."""
+        pend: list[tuple[int, np.ndarray, np.ndarray, float]] = []
+        for rec in self:
+            pend.append(rec)
+            if len(pend) == chunk:
+                yield _ell_chunk(pend)
+                pend = []
+        if pend:
+            yield _ell_chunk(pend)
+
+
+def _ell_chunk(records: list[tuple[int, np.ndarray, np.ndarray, float]]) -> dict:
+    """Pad a list of stream records into the ELL dict `CSRGraph.ell_block`
+    produces (same -1 / 0 padding, same width rounding)."""
+    rows = len(records)
+    w = max(8, ((max((r[1].size for r in records), default=1) + 7) // 8) * 8)
+    nbr = np.full((rows, w), -1, dtype=np.int32)
+    wts = np.zeros((rows, w), dtype=np.float32)
+    node_w = np.empty(rows, dtype=np.float32)
+    nodes = np.empty(rows, dtype=np.int64)
+    for i, (v, nb, nw_, vw) in enumerate(records):
+        d = nb.size
+        nbr[i, :d] = nb
+        wts[i, :d] = nw_
+        node_w[i] = vw
+        nodes[i] = v
+    return {"nodes": nodes, "nbr": nbr, "nbr_w": wts, "mask": nbr >= 0, "node_w": node_w}
+
+
+class NodeStream(NodeStreamBase):
+    """In-memory stream over nodes 0..n-1 of `g` in id order.
 
     Use `apply_order(g, perm)` first to realize a specific stream order —
     matching the paper's protocol of permuting node ids.
@@ -26,6 +137,29 @@ class NodeStream:
         self._g = g
         self.n = g.n
         self.m = g.m
+        self.has_edge_w = not np.all(g.edge_w == 1.0)
+        self.has_node_w = not np.all(g.node_w == 1.0)
+        self._totals: tuple[float, float] | None = None
+
+    def _compute_totals(self) -> tuple[float, float]:
+        if self._totals is None:
+            g = self._g
+            # bincount == per-row sequential sums == the disk path's seq_sum64
+            deg_w = np.bincount(
+                np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr)),
+                weights=g.edge_w.astype(np.float64),
+                minlength=g.n,
+            )
+            self._totals = canonical_totals(deg_w, g.node_w)
+        return self._totals
+
+    @property
+    def n_total(self) -> float:
+        return self._compute_totals()[0]
+
+    @property
+    def m_total(self) -> float:
+        return self._compute_totals()[1]
 
     def __iter__(self) -> Iterator[tuple[int, np.ndarray, np.ndarray, float]]:
         g = self._g
@@ -33,7 +167,7 @@ class NodeStream:
             yield v, g.neighbors(v), g.neighbor_weights(v), float(g.node_w[v])
 
     def chunks(self, chunk: int) -> Iterator[dict]:
-        """Yield contiguous chunks as padded-ELL dicts (pipelined driver)."""
+        """Yield contiguous chunks as padded-ELL dicts (vectorized path)."""
         g = self._g
         for start in range(0, g.n, chunk):
             nodes = np.arange(start, min(start + chunk, g.n), dtype=np.int64)
@@ -48,3 +182,12 @@ class NodeStream:
 
     def degree(self, v: int) -> int:
         return int(self._g.indptr[v + 1] - self._g.indptr[v])
+
+
+def as_node_stream(g: "CSRGraph | NodeStreamBase") -> NodeStreamBase:
+    """Drivers accept either a CSRGraph (wrapped in-memory) or any stream."""
+    if isinstance(g, NodeStreamBase):
+        return g
+    if isinstance(g, CSRGraph):
+        return NodeStream(g)
+    raise TypeError(f"expected CSRGraph or NodeStreamBase, got {type(g).__name__}")

@@ -1,0 +1,589 @@
+"""Out-of-core stream substrate: chunked disk readers + packed format.
+
+This module is what makes the §4 memory accounting real instead of modeled:
+graphs are parsed incrementally from disk — METIS text or the packed binary
+format below — behind the `NodeStreamBase` protocol, holding only a bounded
+read-ahead window (one IO chunk + the record spanning its edge).  The full
+CSR is never materialized, so the partitioner's peak resident set is
+buffer + batch + read-ahead, and graphs larger than RAM stream fine.
+
+Packed binary format (``.bcsr``), little-endian:
+
+    magic  b"BCSR" | version u32 | flags u32 (1 = edge weights,
+    2 = node weights) | n u64 | m u64 (undirected edges) |
+    n_total f64 | m_total f64 | 20 pad bytes          (64-byte header)
+    then n records:  deg u32 [node_w f32] nbr u32[deg] [w f32[deg]]
+
+The header carries the canonical totals (graphs/stream.py) so weighted
+graphs need no pre-pass; METIS text streams derive them from the header for
+fmt 00 and pay one counting pre-pass for weighted formats (HeiStream's
+reference reader does the same).
+
+`permute_to_disk` realizes stream orderings (BFS / KONECT / adversarial)
+without an in-memory graph: records are relabeled, re-sorted *within* each
+row into the canonical order `CSRGraph.from_edges` produces (neighbors > v
+ascending, then < v ascending), bucketed into on-disk shards by destination
+id range, and each shard — bounded by `shard_nodes` — is ordered and
+appended to the output.  The result is byte-for-byte the stream
+`apply_order` would produce from memory, which the conformance suite pins.
+"""
+from __future__ import annotations
+
+import os
+import struct
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+from repro.graphs.stream import NodeStreamBase, canonical_totals, seq_sum64
+
+MAGIC = b"BCSR"
+_HEADER = struct.Struct("<4sIIQQdd20x")  # 64 bytes
+_FLAG_EDGE_W = 1
+_FLAG_NODE_W = 2
+DEFAULT_IO_CHUNK = 1 << 20
+
+
+class StreamFormatError(ValueError):
+    """Malformed graph file (bad header, truncated data, invalid record)."""
+
+
+# --------------------------------------------------------------- METIS text
+
+
+def _parse_metis_header(line: bytes, path: str) -> tuple[int, int, bool, bool]:
+    toks = line.split()
+    if len(toks) < 2 or len(toks) > 3:
+        raise StreamFormatError(
+            f"{path}: METIS header must be 'n m [fmt]', got {line.decode(errors='replace')!r}"
+        )
+    try:
+        n, m = int(toks[0]), int(toks[1])
+    except ValueError:
+        raise StreamFormatError(f"{path}: non-integer METIS header fields {toks[:2]}") from None
+    if n < 0 or m < 0:
+        raise StreamFormatError(f"{path}: negative n or m in METIS header (n={n}, m={m})")
+    fmt = toks[2].decode() if len(toks) > 2 else "00"
+    fmt = fmt.zfill(2)
+    if fmt not in ("00", "01", "10", "11"):
+        raise StreamFormatError(
+            f"{path}: unsupported METIS fmt {fmt!r} (supported: 00, 01/1, 10, 11)"
+        )
+    return n, m, fmt[0] == "1", fmt[1] == "1"
+
+
+class MetisChunkReader:
+    """Incremental METIS text parser: fixed-size byte chunks in, one node
+    record out at a time, independent of where chunk boundaries fall.
+
+    Tolerates trailing whitespace, CR line endings, '%' comment lines and
+    blank lines (isolated nodes, unless node weights make them malformed).
+    Raises StreamFormatError with the offending node on any malformed data.
+    """
+
+    def __init__(self, path: str, io_chunk_bytes: int = DEFAULT_IO_CHUNK):
+        self.path = path
+        self.io_chunk_bytes = max(1, int(io_chunk_bytes))
+        self.bytes_read = 0
+        self.resident_bytes = 0
+        self._header: tuple[int, int, bool, bool] | None = None
+
+    def header(self) -> tuple[int, int, bool, bool]:
+        """(n, m, has_node_w, has_edge_w) — reads just enough of the file."""
+        if self._header is None:
+            for _ in self._lines(count_into_self=False):
+                break
+            if self._header is None:
+                raise StreamFormatError(f"{self.path}: empty file, missing METIS header")
+        return self._header
+
+    def _lines(self, count_into_self: bool = True):
+        """Yield data lines (header consumed internally, comments skipped).
+
+        A trailing newline terminates the last line rather than opening a
+        phantom blank one; interior blank lines are real (isolated nodes).
+        """
+        buf = b""
+        saw_header = False
+
+        def handle(line: bytes):
+            nonlocal saw_header
+            line = line.strip()
+            if line.startswith(b"%"):
+                return None
+            if not saw_header:
+                if not line:
+                    return None  # leading blank lines before the header
+                self._header = _parse_metis_header(line, self.path)
+                saw_header = True
+                return True  # header sentinel (consumed by header())
+            return line
+
+        with open(self.path, "rb") as f:
+            while True:
+                chunk = f.read(self.io_chunk_bytes)
+                if not chunk:
+                    if buf:  # final line without trailing newline
+                        out = handle(buf)
+                        if out is True:
+                            yield None
+                        elif out is not None:
+                            yield out
+                    if count_into_self:
+                        self.resident_bytes = 0
+                    return
+                if count_into_self:
+                    self.bytes_read += len(chunk)
+                buf += chunk
+                if count_into_self:
+                    self.resident_bytes = len(buf)
+                parts = buf.split(b"\n")
+                buf = parts.pop()
+                for line in parts:
+                    out = handle(line)
+                    if out is True:
+                        yield None
+                    elif out is not None:
+                        yield out
+
+    def records(self):
+        """Yield (nbrs int32, weights float32, node_w float) per node, in
+        file order; exactly n records or StreamFormatError."""
+        lines = self._lines()
+        try:
+            next(lines)  # header sentinel
+        except StopIteration:
+            raise StreamFormatError(f"{self.path}: empty file, missing METIS header") from None
+        n, m, has_nw, has_ew = self._header
+        v = 0
+        directed = 0
+        for line in lines:
+            if v >= n:
+                if line:
+                    raise StreamFormatError(
+                        f"{self.path}: trailing data after {n} node lines"
+                    )
+                continue  # trailing blank lines are fine
+            toks = line.split()
+            i = 0
+            node_w = 1.0
+            if has_nw:
+                if not toks:
+                    raise StreamFormatError(
+                        f"{self.path}: node {v + 1}: missing node weight (fmt requires one)"
+                    )
+                try:
+                    node_w = float(toks[0])
+                except ValueError:
+                    raise StreamFormatError(
+                        f"{self.path}: node {v + 1}: bad node weight {toks[0]!r}"
+                    ) from None
+                i = 1
+            rest = toks[i:]
+            if has_ew and len(rest) % 2:
+                raise StreamFormatError(
+                    f"{self.path}: node {v + 1}: odd token count with edge weights (fmt x1)"
+                )
+            try:
+                if has_ew:
+                    nbrs = np.array([int(t) for t in rest[0::2]], dtype=np.int64)
+                    wts = np.array([float(t) for t in rest[1::2]], dtype=np.float32)
+                else:
+                    nbrs = np.array([int(t) for t in rest], dtype=np.int64)
+                    wts = np.ones(nbrs.shape[0], dtype=np.float32)
+            except ValueError:
+                raise StreamFormatError(
+                    f"{self.path}: node {v + 1}: non-numeric adjacency token"
+                ) from None
+            if nbrs.size and (nbrs.min() < 1 or nbrs.max() > n):
+                raise StreamFormatError(
+                    f"{self.path}: node {v + 1}: neighbor id out of range [1, {n}]"
+                )
+            directed += int(nbrs.size)
+            yield (nbrs - 1).astype(np.int32), wts, node_w
+            v += 1
+        if v != n:
+            raise StreamFormatError(
+                f"{self.path}: expected {n} node lines, file ended after {v}"
+            )
+        if directed != 2 * m:
+            raise StreamFormatError(
+                f"{self.path}: header m={m} but parsed {directed} directed entries "
+                f"(expected {2 * m})"
+            )
+
+
+# ------------------------------------------------------------ packed binary
+
+
+class PackedWriter:
+    """Incremental writer for the packed format — one record at a time, no
+    CSR required.  Keeps O(n) totals state (deg_w, node_w) to stamp the
+    canonical aggregates into the header on close."""
+
+    def __init__(self, path: str, n: int, m: int, *, has_edge_w: bool, has_node_w: bool):
+        self.path = path
+        self.n = int(n)
+        self.m = int(m)
+        self.has_edge_w = has_edge_w
+        self.has_node_w = has_node_w
+        self._f = open(path, "wb")
+        self._f.write(_HEADER.pack(MAGIC, 1, 0, 0, 0, 0.0, 0.0))  # placeholder
+        self._deg_w = np.zeros(self.n, dtype=np.float64)
+        self._node_w = np.ones(self.n, dtype=np.float32)
+        self._written = 0
+        self._directed = 0
+
+    def write_node(self, nbrs: np.ndarray, weights: np.ndarray | None = None,
+                   node_w: float = 1.0) -> None:
+        v = self._written
+        if v >= self.n:
+            raise StreamFormatError(f"{self.path}: more than n={self.n} records written")
+        nbrs = np.asarray(nbrs)
+        if weights is None:
+            weights = np.ones(nbrs.shape[0], dtype=np.float32)
+        weights = np.asarray(weights, dtype=np.float32)
+        self._f.write(struct.pack("<I", nbrs.shape[0]))
+        if self.has_node_w:
+            self._f.write(struct.pack("<f", node_w))
+        self._f.write(nbrs.astype("<u4").tobytes())
+        if self.has_edge_w:
+            self._f.write(weights.astype("<f4").tobytes())
+        self._deg_w[v] = seq_sum64(weights)
+        self._node_w[v] = node_w
+        self._directed += int(nbrs.shape[0])
+        self._written += 1
+
+    def close(self) -> None:
+        if self._written != self.n:
+            self._f.close()
+            raise StreamFormatError(
+                f"{self.path}: wrote {self._written} of {self.n} records"
+            )
+        if self._directed != 2 * self.m:
+            self._f.close()
+            raise StreamFormatError(
+                f"{self.path}: m={self.m} but {self._directed} directed entries written"
+            )
+        n_total, m_total = canonical_totals(self._deg_w, self._node_w)
+        flags = (_FLAG_EDGE_W if self.has_edge_w else 0) | (_FLAG_NODE_W if self.has_node_w else 0)
+        self._f.seek(0)
+        self._f.write(_HEADER.pack(MAGIC, 1, flags, self.n, self.m, n_total, m_total))
+        self._f.close()
+
+    def __enter__(self) -> "PackedWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.close()
+        else:
+            self._f.close()
+
+
+def read_packed_header(path: str) -> dict:
+    with open(path, "rb") as f:
+        raw = f.read(_HEADER.size)
+    if len(raw) < _HEADER.size:
+        raise StreamFormatError(f"{path}: truncated packed header")
+    magic, version, flags, n, m, n_total, m_total = _HEADER.unpack(raw)
+    if magic != MAGIC:
+        raise StreamFormatError(f"{path}: bad magic {magic!r} (not a packed graph)")
+    if version != 1:
+        raise StreamFormatError(f"{path}: unsupported packed version {version}")
+    return {
+        "n": int(n), "m": int(m),
+        "has_edge_w": bool(flags & _FLAG_EDGE_W),
+        "has_node_w": bool(flags & _FLAG_NODE_W),
+        "n_total": float(n_total), "m_total": float(m_total),
+    }
+
+
+class PackedChunkReader:
+    """Incremental reader for the packed format with a bounded byte buffer."""
+
+    def __init__(self, path: str, io_chunk_bytes: int = DEFAULT_IO_CHUNK):
+        self.path = path
+        self.io_chunk_bytes = max(64, int(io_chunk_bytes))
+        self.meta = read_packed_header(path)
+        self.bytes_read = 0
+        self.resident_bytes = 0
+
+    def records(self):
+        meta = self.meta
+        has_ew, has_nw = meta["has_edge_w"], meta["has_node_w"]
+        n = meta["n"]
+        with open(self.path, "rb") as f:
+            f.seek(_HEADER.size)
+            buf = bytearray()
+            pos = 0
+
+            def ensure(k: int) -> bool:
+                nonlocal buf, pos
+                while len(buf) - pos < k:
+                    chunk = f.read(self.io_chunk_bytes)
+                    if not chunk:
+                        return False
+                    self.bytes_read += len(chunk)
+                    if pos:  # drop consumed bytes before growing
+                        del buf[:pos]
+                        pos = 0
+                    buf += chunk
+                return True
+
+            directed = 0
+            for v in range(n):
+                if not ensure(4):
+                    raise StreamFormatError(
+                        f"{self.path}: truncated at record {v} (of {n})"
+                    )
+                (deg,) = struct.unpack_from("<I", buf, pos)
+                pos += 4
+                need = (4 if has_nw else 0) + 4 * deg + (4 * deg if has_ew else 0)
+                if not ensure(need):
+                    raise StreamFormatError(
+                        f"{self.path}: truncated inside record {v} (deg={deg})"
+                    )
+                node_w = 1.0
+                if has_nw:
+                    (node_w,) = struct.unpack_from("<f", buf, pos)
+                    pos += 4
+                nbrs = np.frombuffer(buf, dtype="<u4", count=deg, offset=pos).astype(np.int32)
+                pos += 4 * deg
+                if has_ew:
+                    wts = np.frombuffer(buf, dtype="<f4", count=deg, offset=pos).copy()
+                    pos += 4 * deg
+                else:
+                    wts = np.ones(deg, dtype=np.float32)
+                if deg and (nbrs.min() < 0 or nbrs.max() >= n):
+                    raise StreamFormatError(
+                        f"{self.path}: record {v}: neighbor id out of range [0, {n})"
+                    )
+                directed += int(deg)
+                self.resident_bytes = len(buf) - pos
+                yield nbrs, wts, float(node_w)
+            if directed != 2 * meta["m"]:
+                raise StreamFormatError(
+                    f"{self.path}: header m={meta['m']} but {directed} directed entries"
+                )
+            self.resident_bytes = 0
+
+
+# ------------------------------------------------------------- disk stream
+
+
+class DiskNodeStream(NodeStreamBase):
+    """Disk-backed NodeStream: bounded read-ahead, no materialized CSR.
+
+    Detects the format by magic (packed) vs text (METIS).  Aggregate totals
+    come from the packed header, or — for METIS text — from the header
+    directly (fmt 00) or a one-shot counting pre-pass (weighted formats).
+    Iterating opens a fresh reader, so multiple passes (restreaming) work.
+    """
+
+    def __init__(self, path: str, io_chunk_bytes: int = DEFAULT_IO_CHUNK):
+        self.path = path
+        self.io_chunk_bytes = int(io_chunk_bytes)
+        self._reader: MetisChunkReader | PackedChunkReader | None = None
+        self._bytes_read_done = 0
+        with open(path, "rb") as f:
+            self._packed = f.read(4) == MAGIC
+        if self._packed:
+            meta = read_packed_header(path)
+            self.n, self.m = meta["n"], meta["m"]
+            self._totals: tuple[float, float] | None = (meta["n_total"], meta["m_total"])
+            self.has_edge_w = meta["has_edge_w"]
+            self.has_node_w = meta["has_node_w"]
+        else:
+            r = MetisChunkReader(path, io_chunk_bytes)
+            self.n, self.m, self.has_node_w, self.has_edge_w = r.header()
+            # fmt 00: unit weights make the canonical f64 sums exact integers
+            weighted = self.has_node_w or self.has_edge_w
+            self._totals = None if weighted else (float(self.n), float(self.m))
+
+    # ----------------------------------------------------------- aggregates
+    def _compute_totals(self) -> tuple[float, float]:
+        if self._totals is None:
+            # weighted METIS text: one counting pre-pass (O(n) state only)
+            deg_w = np.zeros(self.n, dtype=np.float64)
+            node_w = np.ones(self.n, dtype=np.float32)
+            r = MetisChunkReader(self.path, self.io_chunk_bytes)
+            for v, (_, wts, nw) in enumerate(r.records()):
+                deg_w[v] = seq_sum64(wts)
+                node_w[v] = nw
+            self._bytes_read_done += r.bytes_read
+            self._totals = canonical_totals(deg_w, node_w)
+        return self._totals
+
+    @property
+    def n_total(self) -> float:
+        return self._compute_totals()[0]
+
+    @property
+    def m_total(self) -> float:
+        return self._compute_totals()[1]
+
+    @property
+    def resident_bytes(self) -> int:
+        r = self._reader  # snapshot: the reader thread may clear it
+        return r.resident_bytes if r is not None else 0
+
+    @property
+    def bytes_read(self) -> int:
+        r = self._reader
+        return self._bytes_read_done + (r.bytes_read if r is not None else 0)
+
+    # ------------------------------------------------------------ iteration
+    def __iter__(self):
+        if self._packed:
+            reader: MetisChunkReader | PackedChunkReader = PackedChunkReader(
+                self.path, self.io_chunk_bytes
+            )
+        else:
+            reader = MetisChunkReader(self.path, self.io_chunk_bytes)
+        self._reader = reader
+        try:
+            for v, (nbrs, wts, node_w) in enumerate(reader.records()):
+                yield v, nbrs, wts, node_w
+        finally:
+            self._bytes_read_done += reader.bytes_read
+            self._reader = None
+
+
+def open_stream(path: str, io_chunk_bytes: int = DEFAULT_IO_CHUNK) -> DiskNodeStream:
+    """Open a graph file (METIS text or packed binary) as a disk stream."""
+    return DiskNodeStream(path, io_chunk_bytes)
+
+
+# ---------------------------------------------------------------- writers
+
+
+def write_packed(g, path: str) -> None:
+    """Write a CSRGraph or any NodeStream to the packed format.
+
+    Given a stream, this is a pure disk-to-disk conversion: only one record
+    is resident at a time.
+    """
+    from repro.graphs.stream import as_node_stream
+
+    stream = as_node_stream(g)
+    with PackedWriter(
+        path, stream.n, stream.m,
+        has_edge_w=getattr(stream, "has_edge_w", True),
+        has_node_w=getattr(stream, "has_node_w", True),
+    ) as w:
+        for _, nbrs, wts, node_w in stream:
+            w.write_node(nbrs, wts, node_w)
+
+
+def materialize_records(n: int, records) -> CSRGraph:
+    """Assemble a CSRGraph from an iterable of (nbrs, weights, node_w)
+    stream records — the shared tail of read_metis / read_packed."""
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    indices: list[np.ndarray] = []
+    weights: list[np.ndarray] = []
+    node_w = np.ones(n, dtype=np.float32)
+    for v, (nbrs, wts, nw) in enumerate(records):
+        indices.append(nbrs)
+        weights.append(wts)
+        node_w[v] = nw
+        indptr[v + 1] = indptr[v] + nbrs.size
+    return CSRGraph(
+        indptr=indptr,
+        indices=np.concatenate(indices) if indices else np.empty(0, dtype=np.int32),
+        edge_w=np.concatenate(weights) if weights else np.empty(0, dtype=np.float32),
+        node_w=node_w,
+    )
+
+
+def read_packed(path: str, io_chunk_bytes: int = DEFAULT_IO_CHUNK) -> CSRGraph:
+    """Materialize a packed file as a CSRGraph (tests / small graphs only)."""
+    read_packed_header(path)  # validate magic/version up front
+    stream = DiskNodeStream(path, io_chunk_bytes)
+    return materialize_records(stream.n, (rec[1:] for rec in stream))
+
+
+# ------------------------------------------------------- on-disk permute
+
+
+def _canonical_row_order(nbrs: np.ndarray, v: int, n: int) -> np.ndarray:
+    """Sort positions so neighbors > v come first ascending, then < v
+    ascending — exactly the row order `CSRGraph.from_edges` emits."""
+    nb = nbrs.astype(np.int64)
+    key = nb + (nb < v) * np.int64(n)
+    return np.argsort(key, kind="stable")
+
+
+def permute_to_disk(
+    in_path: str,
+    perm: np.ndarray,
+    out_path: str,
+    *,
+    shard_nodes: int = 1 << 14,
+    io_chunk_bytes: int = DEFAULT_IO_CHUNK,
+) -> None:
+    """Realize a stream ordering on disk: relabel so new node t == old node
+    perm[t], without materializing the graph.
+
+    Pass 1 streams the input, relabels each record, canonicalizes its row
+    order, and appends it to the shard file owning its new id range.  Pass 2
+    loads one shard at a time (≤ shard_nodes rows resident), orders it, and
+    appends to the output.  Output rows are bit-identical to streaming
+    `apply_order(g, perm)` from memory.
+    """
+    perm = np.asarray(perm, dtype=np.int64)
+    stream = DiskNodeStream(in_path, io_chunk_bytes)
+    n, m = stream.n, stream.m
+    if perm.shape[0] != n:
+        raise ValueError(f"perm has {perm.shape[0]} entries, graph has {n} nodes")
+    inv = np.empty(n, dtype=np.int64)
+    inv[perm] = np.arange(n, dtype=np.int64)
+
+    span = max(1, int(shard_nodes))
+    n_shards = max(1, (n + span - 1) // span)
+    shard_paths = [f"{out_path}.shard{s}" for s in range(n_shards)]
+    shard_files = [open(p, "wb") for p in shard_paths]
+    try:
+        for v, nbrs, wts, node_w in stream:
+            nv = int(inv[v])
+            rn = inv[nbrs.astype(np.int64)]
+            order = _canonical_row_order(rn, nv, n)
+            rn, rw = rn[order], wts[order]
+            f = shard_files[nv // span]
+            f.write(struct.pack("<QIf", nv, rn.shape[0], node_w))
+            f.write(rn.astype("<u4").tobytes())
+            f.write(rw.astype("<f4").tobytes())
+        for f in shard_files:
+            f.close()
+        with PackedWriter(
+            out_path, n, m,
+            has_edge_w=stream.has_edge_w, has_node_w=stream.has_node_w,
+        ) as w:
+            for s, sp in enumerate(shard_paths):
+                rows: dict[int, tuple[np.ndarray, np.ndarray, float]] = {}
+                with open(sp, "rb") as f:
+                    data = f.read()
+                pos = 0
+                while pos < len(data):
+                    nv, deg, node_w = struct.unpack_from("<QIf", data, pos)
+                    pos += 16
+                    rn = np.frombuffer(data, dtype="<u4", count=deg, offset=pos).astype(np.int32)
+                    pos += 4 * deg
+                    rw = np.frombuffer(data, dtype="<f4", count=deg, offset=pos).copy()
+                    pos += 4 * deg
+                    rows[nv] = (rn, rw, float(node_w))
+                lo, hi = s * span, min((s + 1) * span, n)
+                if len(rows) != hi - lo:
+                    raise StreamFormatError(
+                        f"permute shard {s}: {len(rows)} rows, expected {hi - lo}"
+                    )
+                for nv in range(lo, hi):
+                    rn, rw, nw = rows[nv]
+                    w.write_node(rn, rw, nw)
+    finally:
+        for f in shard_files:
+            if not f.closed:
+                f.close()
+        for sp in shard_paths:
+            if os.path.exists(sp):
+                os.remove(sp)

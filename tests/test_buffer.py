@@ -164,6 +164,82 @@ def test_vector_buffer_matches_bucket_pq_trace(ops):
     assert len(vb) == 0
 
 
+def _check_bucket_pq_invariants(pq: BucketPQ) -> None:
+    """Structural invariants of Algorithm 2 with tombstones: hole counters
+    exact per bucket, live count == size, location map consistent, rho an
+    upper bound on the top occupied bucket."""
+    live_total = 0
+    top = 0
+    for b, bucket in enumerate(pq.buckets):
+        holes = sum(1 for x in bucket if x == pq._HOLE)
+        assert holes == pq._holes[b], f"bucket {b}: hole count drifted"
+        # tombstones never outnumber live entries (the compaction trigger)
+        assert holes <= max(len(bucket) - holes, 0)
+        live_total += len(bucket) - holes
+        if len(bucket) - holes:
+            top = b
+        for p_, v in enumerate(bucket):
+            if v != pq._HOLE:
+                assert pq.loc[v] == (b, p_), f"stale location for {v}"
+    assert live_total == len(pq) == len(pq.loc)
+    assert pq.rho >= top
+
+
+def _check_vector_buffer_invariants(vb: VectorBuffer) -> None:
+    """Dense-buffer invariants: bucket occupancy counts match live keys,
+    compact arrays mirror the dense vectors, rho bounds the top bucket."""
+    live = np.nonzero(vb.in_buf)[0]
+    assert live.size == len(vb) == vb._size
+    occ = np.bincount(vb.key[live], minlength=vb.n_buckets)
+    assert np.array_equal(occ, vb._bucket_count[: vb.n_buckets]), "occupancy drift"
+    if live.size:
+        assert vb._rho >= int(vb.key[live].max())
+    # compact active arrays: a permutation of the live set, position-mapped
+    act = vb._active[: vb._size]
+    assert sorted(act.tolist()) == sorted(live.tolist())
+    assert np.array_equal(vb._pos[act], np.arange(vb._size))
+    assert np.array_equal(vb._akey[: vb._size], vb.key[act])
+    assert np.array_equal(vb._astamp[: vb._size], vb.stamp[act])
+    assert np.all(vb._pos[vb.in_buf] >= 0)
+
+
+@given(op_sequences())
+@settings(max_examples=40, deadline=None)
+def test_bucket_pq_structural_invariants(ops):
+    """Tombstone counts / occupancy / location map hold after every op."""
+    pq = BucketPQ(s_max=1.0, disc_factor=100)
+    alive = set()
+    for op, v, s in ops:
+        if op == "insert":
+            pq.insert(v, s)
+            alive.add(v)
+        elif op == "increase":
+            if v in alive:
+                pq.increase_key(v, s)
+        elif alive:
+            alive.discard(pq.extract_max())
+        _check_bucket_pq_invariants(pq)
+
+
+@given(op_sequences(), st.integers(1, 4))
+@settings(max_examples=30, deadline=None)
+def test_vector_buffer_structural_invariants(ops, wave):
+    """Occupancy counts and compact-array mirroring hold under random
+    insert / rescore / evict interleavings, both engines."""
+    for engine in ("incremental", "scan"):
+        vb = VectorBuffer(128, 1.0, 100, engine=engine)
+        live = set()
+        for op, v, s in ops:
+            if op == "insert" and v < 128:
+                vb.insert_many(np.array([v]), np.array([s]))
+                live.add(v)
+            elif op == "increase" and v in live:
+                vb.update_scores(np.array([v]), np.array([s]))
+            elif op == "extract" and live:
+                live -= set(int(x) for x in vb.evict(wave))
+            _check_vector_buffer_invariants(vb)
+
+
 @given(op_sequences(), st.integers(1, 5))
 @settings(max_examples=40, deadline=None)
 def test_incremental_matches_scan_engine(ops, wave):

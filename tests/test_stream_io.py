@@ -1,0 +1,233 @@
+"""Stream substrate: chunked parser properties, packed format, on-disk
+permute, and METIS io error handling / weighted round-trips."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs import (
+    CSRGraph,
+    DiskNodeStream,
+    NodeStream,
+    StreamFormatError,
+    apply_order,
+    open_stream,
+    permute_to_disk,
+    random_order,
+    read_metis,
+    read_packed,
+    write_metis,
+    write_packed,
+)
+from repro.graphs.stream_io import MetisChunkReader
+
+
+@st.composite
+def weighted_graphs(draw):
+    """Small simple graphs covering all four METIS fmt variants."""
+    n = draw(st.integers(4, 24))
+    n_e = draw(st.integers(0, 40))
+    edges = np.array(
+        draw(
+            st.lists(
+                st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+                min_size=n_e, max_size=n_e,
+            )
+        ),
+        dtype=np.int64,
+    ).reshape(-1, 2)
+    has_ew = draw(st.integers(0, 1))
+    has_nw = draw(st.integers(0, 1))
+    ew = None
+    if has_ew:
+        ew = np.array(
+            draw(st.lists(st.integers(2, 9), min_size=edges.shape[0], max_size=edges.shape[0])),
+            dtype=np.float32,
+        )
+    nw = None
+    if has_nw:
+        nw = np.array(
+            draw(st.lists(st.integers(2, 5), min_size=n, max_size=n)), dtype=np.float32
+        )
+    return CSRGraph.from_edges(n, edges, edge_weights=ew, node_weights=nw)
+
+
+def _records_equal(a, b):
+    assert len(a) == len(b)
+    for (n1, w1, nw1), (n2, w2, nw2) in zip(a, b):
+        assert np.array_equal(n1, n2)
+        assert np.array_equal(w1, w2)
+        assert nw1 == nw2
+
+
+@given(weighted_graphs(), st.integers(1, 80))
+@settings(max_examples=25, deadline=None)
+def test_chunk_boundary_invariance(tmp_path_factory, g, chunk_bytes):
+    """Any chunk-boundary placement yields the whole-file parse, for every
+    fmt in {00, 01, 10, 11}."""
+    path = str(tmp_path_factory.mktemp("cb") / "g.metis")
+    write_metis(g, path)
+    ref = list(MetisChunkReader(path, 1 << 20).records())
+    got = list(MetisChunkReader(path, chunk_bytes).records())
+    _records_equal(got, ref)
+
+
+def test_trailing_whitespace_and_comments(tmp_path):
+    path = str(tmp_path / "g.metis")
+    with open(path, "w") as f:
+        f.write("% a comment\n")
+        f.write("4 3  \t\n")          # trailing whitespace in header
+        f.write("2 3\t \n")           # tabs + trailing blanks
+        f.write("% mid comment\n")
+        f.write("1\r\n")              # CRLF
+        f.write("1 4\n")
+        f.write("3   \n")
+        f.write("\n\n")               # trailing blank lines
+    g = read_metis(path)
+    assert g.n == 4 and g.m == 3
+    assert list(g.neighbors(0)) == [1, 2]
+    for cb in (1, 5, 13):
+        _records_equal(
+            list(MetisChunkReader(path, cb).records()),
+            list(MetisChunkReader(path).records()),
+        )
+
+
+def test_isolated_nodes_and_empty_lines_roundtrip(tmp_path):
+    g = CSRGraph.from_edges(5, np.array([[0, 1]]))  # nodes 2..4 isolated
+    path = str(tmp_path / "iso.metis")
+    write_metis(g, path)
+    g2 = read_metis(path)
+    assert np.array_equal(g2.indptr, g.indptr)
+    assert np.array_equal(g2.indices, g.indices)
+
+
+def test_weighted_roundtrip_fractional(tmp_path):
+    """Seed bug: int() truncation corrupted non-integer weights."""
+    g = CSRGraph.from_edges(
+        4,
+        np.array([[0, 1], [1, 2], [0, 2]]),
+        edge_weights=np.array([2.5, 3.0, 0.1], dtype=np.float32),
+        node_weights=np.array([1.5, 2.0, 3.25, 1.0], dtype=np.float32),
+    )
+    path = str(tmp_path / "frac.metis")
+    write_metis(g, path)
+    g2 = read_metis(path)
+    assert np.array_equal(g2.edge_w, g.edge_w)  # bit-exact, not approx
+    assert np.array_equal(g2.node_w, g.node_w)
+
+
+@pytest.mark.parametrize(
+    "content, match",
+    [
+        ("", "missing METIS header"),
+        ("% only comments\n", "missing METIS header"),
+        ("5\n", "header must be"),
+        ("4 3 11 2 9\n", "header must be"),
+        ("a b\n", "non-integer"),
+        ("4 3 7\n", "unsupported METIS fmt"),
+        ("4 3 011\n", "unsupported METIS fmt"),
+        ("-4 3\n", "negative"),
+        ("2 1\n2\n1\n2\n", "trailing data"),
+        ("3 1\n2\n1\n", "expected 3 node lines"),
+        ("2 2\n2\n1\n", "header m=2"),
+        ("2 1\n3\n1\n", "out of range"),
+        ("2 1 10\n\n1 1\n", "missing node weight"),
+        ("2 1 10\nx 2\n1 1\n", "bad node weight"),
+        ("2 1 1\n2\n1 1\n", "odd token count"),
+        ("2 1\n2\nz\n", "non-numeric"),
+    ],
+)
+def test_malformed_metis_raises(tmp_path, content, match):
+    path = str(tmp_path / "bad.metis")
+    with open(path, "w") as f:
+        f.write(content)
+    with pytest.raises(StreamFormatError, match=match):
+        read_metis(path)
+
+
+# ------------------------------------------------------------ packed format
+
+
+@given(weighted_graphs(), st.integers(64, 512))
+@settings(max_examples=20, deadline=None)
+def test_packed_roundtrip_and_stream_identity(tmp_path_factory, g, io_chunk):
+    path = str(tmp_path_factory.mktemp("pk") / "g.bcsr")
+    write_packed(g, path)
+    g2 = read_packed(path, io_chunk_bytes=io_chunk)
+    assert np.array_equal(g2.indptr, g.indptr)
+    assert np.array_equal(g2.indices, g.indices)
+    assert np.array_equal(g2.edge_w, g.edge_w)
+    assert np.array_equal(g2.node_w, g.node_w)
+    ms, ds = NodeStream(g), DiskNodeStream(path, io_chunk_bytes=io_chunk)
+    assert (ms.n_total, ms.m_total) == (ds.n_total, ds.m_total)
+
+
+def test_packed_bad_magic(tmp_path):
+    path = str(tmp_path / "bad.bcsr")
+    with open(path, "wb") as f:
+        f.write(b"NOPE" + b"\x00" * 60)
+    with pytest.raises(StreamFormatError, match="bad magic"):
+        read_packed(path)
+
+
+def test_packed_truncated(tmp_path):
+    g = CSRGraph.from_edges(6, np.array([[0, 1], [1, 2], [2, 3], [3, 4], [4, 5]]))
+    path = str(tmp_path / "t.bcsr")
+    write_packed(g, path)
+    with open(path, "rb") as f:
+        data = f.read()
+    with open(path, "wb") as f:
+        f.write(data[:-6])
+    with pytest.raises(StreamFormatError, match="truncated"):
+        read_packed(path)
+
+
+def test_open_stream_detects_format(tmp_path):
+    g = CSRGraph.from_edges(5, np.array([[0, 1], [1, 2]]))
+    pm, pb = str(tmp_path / "g.metis"), str(tmp_path / "g.bcsr")
+    write_metis(g, pm)
+    write_packed(g, pb)
+    assert open_stream(pm).n == open_stream(pb).n == 5
+    for (v1, n1, w1, nw1), (v2, n2, w2, nw2) in zip(open_stream(pm), open_stream(pb)):
+        assert v1 == v2 and np.array_equal(n1, n2)
+
+
+def test_stream_resident_bytes_bounded(tmp_path):
+    """The reader's read-ahead window stays within ~2 IO chunks."""
+    from repro.graphs import grid_mesh_to_disk
+
+    path = str(tmp_path / "grid.bcsr")
+    grid_mesh_to_disk(32, path)
+    stream = DiskNodeStream(path, io_chunk_bytes=512)
+    peak = 0
+    for _ in stream:
+        peak = max(peak, stream.resident_bytes)
+    assert 0 < peak <= 2 * 512 + 256
+    assert stream.bytes_read >= 0.9 * __import__("os").path.getsize(path)
+
+
+# ------------------------------------------------------------ disk permute
+
+
+@given(weighted_graphs(), st.integers(0, 10**6), st.integers(1, 9))
+@settings(max_examples=15, deadline=None)
+def test_permute_to_disk_matches_apply_order(tmp_path_factory, g, seed, shard_nodes):
+    tmp = tmp_path_factory.mktemp("perm")
+    src, dst = str(tmp / "g.bcsr"), str(tmp / "p.bcsr")
+    write_packed(g, src)
+    perm = random_order(g, seed % 1000)
+    permute_to_disk(src, perm, dst, shard_nodes=shard_nodes)
+    gm = apply_order(g, perm)
+    gd = read_packed(dst)
+    assert np.array_equal(gm.indptr, gd.indptr)
+    assert np.array_equal(gm.indices, gd.indices)
+    assert np.array_equal(gm.edge_w, gd.edge_w)
+    assert np.array_equal(gm.node_w, gd.node_w)
+
+
+def test_permute_rejects_bad_perm(tmp_path):
+    g = CSRGraph.from_edges(4, np.array([[0, 1]]))
+    src = str(tmp_path / "g.bcsr")
+    write_packed(g, src)
+    with pytest.raises(ValueError, match="perm has"):
+        permute_to_disk(src, np.arange(3), str(tmp_path / "o.bcsr"))
