@@ -47,7 +47,7 @@ from repro.core.histogram import (  # noqa: E402
     neighbor_label_weights,
     sorted_neighbor_label_weights,
 )
-from repro.core.vector_stream import buffcut_partition_vectorized  # noqa: E402
+from repro.core.vector_stream import VectorizedConfig, _buffcut_partition_vectorized  # noqa: E402
 
 
 def _best_of(fn, reps: int) -> float:
@@ -191,8 +191,8 @@ def bench_e2e(smoke: bool) -> dict:
     out = {"n": g.n, "directed_edges": int(g.indices.size), "engines": {}}
     for engine in ("scan", "incremental"):
         t0 = time.perf_counter()
-        block, stats = buffcut_partition_vectorized(
-            g, cfg, wave=32, chunk=32, engine=engine
+        block, stats = _buffcut_partition_vectorized(
+            g, cfg, VectorizedConfig(wave=32, chunk=32, engine=engine)
         )
         dt = time.perf_counter() - t0
         out["engines"][engine] = {

@@ -33,7 +33,8 @@ import numpy as np
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.graphs import DiskNodeStream, grid_mesh_graph, grid_mesh_to_disk  # noqa: E402
-from repro.core import BuffCutConfig, buffcut_partition_vectorized  # noqa: E402
+from repro.core import BuffCutConfig, VectorizedConfig  # noqa: E402
+from repro.core.vector_stream import _buffcut_partition_vectorized  # noqa: E402
 
 
 def resident_bound_bytes(cfg: BuffCutConfig, max_deg: int, io_chunk_bytes: int) -> int:
@@ -59,7 +60,7 @@ def run(smoke: bool = False, verify_labels: bool | None = None) -> dict:
 
         stream = DiskNodeStream(path, io_chunk_bytes=io_chunk)
         t0 = time.perf_counter()
-        block, stats = buffcut_partition_vectorized(stream, cfg, wave=1, chunk=1)
+        block, stats = _buffcut_partition_vectorized(stream, cfg, VectorizedConfig(wave=1, chunk=1))
         part_s = time.perf_counter() - t0
 
         bound = resident_bound_bytes(cfg, max_deg=8, io_chunk_bytes=io_chunk)
@@ -84,7 +85,7 @@ def run(smoke: bool = False, verify_labels: bool | None = None) -> dict:
         }
         if verify_labels:
             g = grid_mesh_graph(side)
-            block_mem, stats_mem = buffcut_partition_vectorized(g, cfg, wave=1, chunk=1)
+            block_mem, stats_mem = _buffcut_partition_vectorized(g, cfg, VectorizedConfig(wave=1, chunk=1))
             out["labels_match_memory"] = bool(np.array_equal(block, block_mem))
             out["cut_matches_memory"] = bool(stats.cut_weight == stats_mem.cut_weight)
         return out

@@ -10,7 +10,8 @@ from __future__ import annotations
 import time
 
 from repro.graphs import apply_order, random_order
-from repro.core import buffcut_partition, buffcut_partition_pipelined, restream, cut_ratio
+from repro.api import partition
+from repro.core import restream, cut_ratio
 from benchmarks.common import tuning_set, default_cfg, csv_row, gmean_over_instances
 
 
@@ -22,13 +23,13 @@ def run(verbose: bool = True) -> list[str]:
     for gname, g in tuning_set().items():
         gr = apply_order(g, random_order(g, 100))
         cfg = default_cfg(g)
-        t0 = time.perf_counter(); b_seq, _ = buffcut_partition(gr, cfg)
+        t0 = time.perf_counter(); res_seq = partition(gr, cfg, driver="buffcut")
         seq_rt[gname] = time.perf_counter() - t0
-        seq_cut[gname] = cut_ratio(gr, b_seq) * 100
-        t0 = time.perf_counter(); b_par, _ = buffcut_partition_pipelined(gr, cfg)
+        seq_cut[gname] = res_seq.cut_ratio * 100
+        t0 = time.perf_counter(); res_par = partition(gr, cfg, driver="buffcut-pipe")
         par_rt[gname] = time.perf_counter() - t0
-        par_cut[gname] = cut_ratio(gr, b_par) * 100
-        block = b_seq
+        par_cut[gname] = res_par.cut_ratio * 100
+        block = res_seq.labels
         t_pass = seq_rt[gname]
         stream_cut[1][gname] = seq_cut[gname]
         stream_rt[1][gname] = t_pass

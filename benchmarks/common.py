@@ -5,9 +5,14 @@ generated power-law graphs at 10^6..10^9 edges on a 755 GiB machine; this
 1-core container runs the same *algorithms* on one representative instance
 per structural family at ~4k nodes (DESIGN.md §7.5) under the paper's
 random-ordering protocol (independent permutations, geometric means).
+
+Every method dispatches through `repro.api` — the ad-hoc per-method lambda
+table this module used to carry is now the partitioner registry, so a
+driver registered there is instantly benchmarkable by name.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
@@ -17,20 +22,8 @@ from repro.graphs import (
     random_order, apply_order,
 )
 from repro.graphs.locality import geometric_mean
-from repro.core import (
-    BuffCutConfig,
-    CuttanaConfig,
-    buffcut_partition,
-    heistream_partition,
-    cuttana_partition,
-    fennel_partition,
-    ldg_partition,
-    cut_ratio,
-    edge_cut,
-    balance,
-    buffcut_partition_pipelined,
-    buffcut_partition_vectorized,
-)
+from repro.core import BuffCutConfig
+from repro.api import DriverConfig, VectorizedConfig, partition
 
 N_ORDERS = 2  # random permutations per instance (paper: 3)
 
@@ -58,33 +51,27 @@ def default_cfg(g, k: int = 16, **kw) -> BuffCutConfig:
     return BuffCutConfig(**base)
 
 
-METHODS = {
-    "fennel": lambda g, cfg: (fennel_partition(g, cfg.k, cfg.eps), None),
-    "ldg": lambda g, cfg: (ldg_partition(g, cfg.k, cfg.eps), None),
-    "heistream": lambda g, cfg: heistream_partition(g, cfg),
-    "cuttana": lambda g, cfg: cuttana_partition(
-        g, CuttanaConfig(k=cfg.k, eps=cfg.eps, buffer_size=cfg.buffer_size,
-                         batch_size=cfg.batch_size, d_max=cfg.d_max)
-    ),
-    "buffcut": lambda g, cfg: buffcut_partition(g, cfg),
-    "buffcut-par": lambda g, cfg: buffcut_partition_pipelined(g, cfg),
-    "buffcut-vec": lambda g, cfg: buffcut_partition_vectorized(g, cfg, wave=32, chunk=32),
-}
+def driver_config(name: str, cfg: BuffCutConfig) -> DriverConfig:
+    """Registry-name -> DriverConfig; preserves the bench-time vectorized
+    wave/chunk setting the old lambda table hard-coded."""
+    dc = DriverConfig(driver=name, buffcut=cfg)
+    if name in ("buffcut-vec", "vectorized"):
+        dc = dataclasses.replace(dc, vectorized=VectorizedConfig(wave=32, chunk=32))
+    return dc
 
 
 def run_method(name: str, g, cfg) -> dict:
     t0 = time.perf_counter()
-    block, stats = METHODS[name](g, cfg)
+    res = partition(g, driver_config(name, cfg))
     dt = time.perf_counter() - t0
-    out = {
-        "cut_ratio": cut_ratio(g, block),
-        "cut": edge_cut(g, block),
-        "balance": balance(g, block, cfg.k),
+    return {
+        "cut_ratio": res.cut_ratio,
+        "cut": res.cut_weight,
+        "balance": res.balance,
         "runtime_s": dt,
-        "mem_items": getattr(stats, "peak_mem_items", 0) if stats else 0,
-        "ier": getattr(stats, "mean_ier", 0.0) if stats else 0.0,
+        "mem_items": res.stats.peak_mem_items if res.stats else 0,
+        "ier": res.ier,
     }
-    return out
 
 
 def sweep_orders(fn, g, seeds=range(N_ORDERS)) -> dict:

@@ -1,5 +1,6 @@
 """The paper's systems payoff end-to-end: BuffCut as the placement service
-for distributed GNN training.
+for distributed GNN training.  The placement service dispatches through
+`repro.api.partition`, so any driver registered there can back it.
 
  1. Stream-partition a graph into 8 'device' blocks with BuffCut,
  2. quantify the halo-exchange bytes a GNN layer would move vs

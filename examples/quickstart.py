@@ -1,47 +1,31 @@
-"""Quickstart: partition a graph with BuffCut and compare against baselines.
+"""Quickstart: every partitioner through the one front door, `repro.api`.
 
     PYTHONPATH=src python examples/quickstart.py
+
+One source spec + one ordering flag replaces the old generate / permute /
+configure dance: the mesh is built from ``gen:grid:side=64`` and streamed
+in random order (the adversarial setting the paper targets), and each
+method is selected by registry name.
 """
+from repro.api import partition
 
-from repro.graphs import grid_mesh_graph, random_order, apply_order, mean_aid
-from repro.core import (
-    BuffCutConfig, buffcut_partition, heistream_partition, fennel_partition,
-    cut_ratio, balance, restream,
-)
+SOURCE = "gen:grid:side=64"                     # 4096 nodes, mesh family
+OPTS = dict(k=16,
+            buffer_size=512,                    # Q_max — the central memory/quality knob
+            batch_size=128,                     # delta — multilevel batch size
+            d_max=256,                          # hub threshold (immediate Fennel)
+            ordering="random", order_seed=42,   # destroy stream locality
+            collect_stats=True)
 
-# 1. Build a graph and destroy its stream locality (the adversarial setting
-#    the paper targets — random node permutation).
-g_src = grid_mesh_graph(64)                       # 4096 nodes, mesh family
-g = apply_order(g_src, random_order(g_src, seed=42))
-print(f"graph: n={g.n} m={g.m}  AID source={mean_aid(g_src):.0f} "
-      f"random={mean_aid(g):.0f} (higher = worse locality)")
+results = {name: partition(SOURCE, driver=name, **OPTS)
+           for name in ("buffcut", "heistream", "fennel")}
+results["buffcut+restream"] = partition(SOURCE, driver="buffcut",
+                                        restream_passes=1, **OPTS)
 
-# 2. Configure BuffCut: k blocks, bounded priority buffer, batch size.
-k = 16
-cfg = BuffCutConfig(
-    k=k,
-    buffer_size=g.n // 8,      # Q_max — the paper's central memory/quality knob
-    batch_size=g.n // 32,      # delta — multilevel batch size
-    d_max=256,                 # hub threshold (immediate Fennel assignment)
-    score="haa",               # the paper's Hub-Aware Assigned-neighbors Ratio
-    collect_stats=True,
-)
+for name, res in results.items():
+    print(f"{name:16s} cut={100 * res.cut_ratio:5.2f}%  "
+          f"balance={res.balance:.3f}  ier={res.ier:.3f}")
 
-# 3. Run BuffCut and the baselines.
-block, stats = buffcut_partition(g, cfg)
-print(f"buffcut   cut={100*cut_ratio(g, block):5.2f}%  "
-      f"balance={balance(g, block, k):.3f}  IER={stats.mean_ier:.3f}  "
-      f"batches={stats.n_batches} hubs={stats.n_hubs}")
-
-hs, _ = heistream_partition(g, cfg)
-print(f"heistream cut={100*cut_ratio(g, hs):5.2f}%  (contiguous batches)")
-
-fn = fennel_partition(g, k)
-print(f"fennel    cut={100*cut_ratio(g, fn):5.2f}%  (one-pass)")
-
-# 4. Optional restreaming pass (paper §3.5) — extra quality for extra time.
-block2 = restream(g, block, cfg, passes=1)
-print(f"buffcut+restream cut={100*cut_ratio(g, block2):5.2f}%")
-
-assert cut_ratio(g, block) < cut_ratio(g, fn), "BuffCut should beat Fennel"
+assert results["buffcut"].cut_ratio < results["fennel"].cut_ratio, \
+    "BuffCut should beat Fennel"
 print("OK")

@@ -1,0 +1,5 @@
+"""Entry point for ``python -m repro`` (see repro/api/cli.py)."""
+from repro.api.cli import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

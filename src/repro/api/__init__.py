@@ -1,0 +1,184 @@
+"""`repro.api` — the one front door to every partitioner in this repo.
+
+    from repro.api import partition
+
+    res = partition("graph.bcsr", k=16, driver="buffcut")        # flat kwargs
+    res = partition(g, DriverConfig(driver="cuttana", ...))      # full config
+    res.cut_ratio, res.balance, res.ier                          # lazy metrics
+    res.to_json("out.json")                                      # round-trips
+
+Sources: `CSRGraph`, any `NodeStreamBase`, a path to METIS text or packed
+binary (streamed out-of-core), or a generator spec like
+``gen:grid:side=64``.  Drivers: everything in `list_partitioners()`
+(registry.py) — streaming drivers partition straight from disk, memory-only
+baselines raise the standard actionable `TypeError` on disk streams.
+Orderings are realized faithfully to the paper's protocol: in memory via
+`apply_order`, or on disk via the permute/shard pass so the partitioning
+path stays out-of-core; labels always come back in the *input* numbering.
+
+The legacy per-driver functions remain importable but are deprecation
+shims over this layer (bit-identity pinned in tests/test_api.py).
+CLI twin: ``python -m repro partition <source> -k 16 --driver pipelined``.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.graphs.orderings import apply_order, bfs_order, konect_order
+from repro.graphs.stream import NodeStream
+from repro.graphs.stream_io import DiskNodeStream, permute_to_disk
+from repro.core.buffcut import BuffCutConfig
+from repro.core.restream import restream as _restream
+from repro.api.config import (
+    ORDERINGS,
+    CuttanaConfig,
+    DriverConfig,
+    MultilevelConfig,
+    PipelineConfig,
+    VectorizedConfig,
+)
+from repro.api.registry import (
+    PartitionerSpec,
+    get_partitioner,
+    list_partitioners,
+    register_partitioner,
+)
+from repro.api.result import PartitionResult
+from repro.api.sources import ResolvedSource, resolve_source
+
+__all__ = [
+    "partition",
+    "PartitionResult",
+    "PartitionerSpec",
+    "register_partitioner",
+    "list_partitioners",
+    "get_partitioner",
+    "resolve_source",
+    "ResolvedSource",
+    "DriverConfig",
+    "BuffCutConfig",
+    "CuttanaConfig",
+    "MultilevelConfig",
+    "VectorizedConfig",
+    "PipelineConfig",
+    "ORDERINGS",
+]
+
+
+def _coerce_config(config, overrides: dict) -> DriverConfig:
+    if config is None:
+        return DriverConfig.create(**overrides)
+    if isinstance(config, DriverConfig):
+        return DriverConfig.create(config, **overrides) if overrides else config
+    if isinstance(config, BuffCutConfig):  # includes CuttanaConfig
+        return DriverConfig.create(DriverConfig(buffcut=config), **overrides)
+    raise TypeError(
+        f"config must be a DriverConfig or BuffCutConfig, got {type(config).__name__}"
+    )
+
+
+def _compute_perm(src: ResolvedSource, dc: DriverConfig) -> np.ndarray:
+    if dc.ordering == "random":
+        # identical to graphs.orderings.random_order, but needs only n —
+        # disk sources stay out-of-core
+        return np.random.default_rng(dc.order_seed).permutation(src.stream.n).astype(np.int64)
+    g = src.graph if src.graph is not None else src.materialize()
+    return bfs_order(g) if dc.ordering == "bfs" else konect_order(g, seed=dc.order_seed)
+
+
+def _realize_ordering(
+    src: ResolvedSource, dc: DriverConfig
+) -> "tuple[ResolvedSource, np.ndarray | None, tempfile.TemporaryDirectory | None]":
+    """Permute the source so streaming it reproduces `dc.ordering`.
+
+    In-memory sources relabel via `apply_order`; disk sources go through the
+    on-disk permute/shard pass (bit-identical, conformance-pinned) so the
+    partitioning path never materializes the graph.  BFS/KONECT orderings
+    need the structure to compute the permutation, so they materialize disk
+    sources first; `random` does not.
+    """
+    if dc.ordering == "natural":
+        return src, None, None
+    perm = _compute_perm(src, dc)
+    if src.graph is None and src.path is None:
+        # foreign stream with no file behind it: the only way to reorder it
+        src.materialize()
+    if src.graph is not None:
+        g2 = apply_order(src.graph, perm)
+        return (
+            ResolvedSource(NodeStream(g2), g2, src.kind, src.origin),
+            perm,
+            None,
+        )
+    tmp = tempfile.TemporaryDirectory(prefix="repro-ordering-")
+    out = os.path.join(tmp.name, "ordered.bcsr")
+    # preserve the source's tuned read-ahead window (memory-bound contract)
+    chunk = getattr(src.stream, "io_chunk_bytes", None)
+    kw = {} if chunk is None else {"io_chunk_bytes": chunk}
+    permute_to_disk(src.path, perm, out, **kw)
+    return (
+        ResolvedSource(DiskNodeStream(out, **kw), None, src.kind, src.origin, path=out),
+        perm,
+        tmp,
+    )
+
+
+def partition(source, config: "DriverConfig | BuffCutConfig | None" = None, **overrides) -> PartitionResult:
+    """Partition `source` and return a `PartitionResult`.
+
+    `config` is a `DriverConfig` (or a bare `BuffCutConfig`, wrapped);
+    flat keyword overrides (``k=16, driver="pipelined", engine="jax",
+    ordering="bfs", restream_passes=1, ...``) are routed by
+    `DriverConfig.create`.  Labels are indexed by the input's node ids even
+    when an ordering permutes the stream.
+    """
+    dc = _coerce_config(config, overrides)
+    spec = get_partitioner(dc.driver)
+    src = resolve_source(source)
+    run_src, perm, tmp = _realize_ordering(src, dc)
+    if dc.restream_passes > 0:
+        # fail before the (possibly hours-long) streaming run, not after it
+        run_src.require_graph("restream")
+    t0 = time.perf_counter()
+    try:
+        labels, stats = spec.run(run_src, dc)
+        if dc.restream_passes > 0:
+            labels = _restream(
+                run_src.require_graph("restream"), labels, dc.buffcut, dc.restream_passes
+            )
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
+    runtime_s = time.perf_counter() - t0
+    if perm is not None:  # map stream-position labels back to input node ids
+        orig = np.empty_like(labels)
+        orig[perm] = labels
+        labels = orig
+    provenance = {
+        "driver": spec.name,
+        "engine": dc.buffcut.ml.engine,
+        "ordering": dc.ordering,
+        "order_seed": dc.order_seed,
+        "restream_passes": dc.restream_passes,
+        "source": {
+            "kind": src.kind,
+            "origin": src.origin,
+            "n": int(src.stream.n),
+            "m": int(src.stream.m),
+        },
+        "n_total": float(run_src.stream.n_total),
+        "m_total": float(run_src.stream.m_total),
+        "runtime_s": runtime_s,
+        "config": dc.to_dict(),
+    }
+    return PartitionResult(
+        labels=labels,
+        k=dc.buffcut.k,
+        stats=stats,
+        provenance=provenance,
+        graph=src.graph,
+    )

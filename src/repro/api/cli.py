@@ -1,0 +1,180 @@
+"""``python -m repro`` — the command-line twin of `repro.api`.
+
+    python -m repro partition graph.bcsr -k 16 --driver pipelined \
+        --engine jax --ordering bfs --json out.json
+    python -m repro gen grid -o mesh.bcsr --param side=64
+    python -m repro list -v
+
+`partition` resolves any source the API accepts (METIS text, packed binary,
+``gen:`` spec), runs the chosen registry driver, prints a one-line quality
+summary and optionally writes the full `PartitionResult` JSON.  `gen`
+synthesizes an instance family to disk (packed by default, METIS text with
+``--format metis``).  `list` prints the registry.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _add_partition_parser(sub: "argparse._SubParsersAction") -> None:
+    p = sub.add_parser(
+        "partition",
+        help="partition a graph source through the unified API",
+        description="Partition SOURCE (CSR file path or gen:<family>:... spec) "
+                    "with any registered driver.",
+    )
+    p.add_argument("source", help="METIS text / packed binary path, or gen:<family>:k=v,... spec")
+    p.add_argument("-k", type=int, required=True, help="number of blocks")
+    p.add_argument("--driver", default="buffcut",
+                   help="registry name or alias (see `python -m repro list`)")
+    p.add_argument("--engine", default="auto",
+                   choices=["auto", "sparse", "ell", "jax"],
+                   help="multilevel engine")
+    p.add_argument("--ordering", default="natural",
+                   choices=["natural", "random", "bfs", "konect"],
+                   help="stream ordering (realized on disk for disk sources)")
+    p.add_argument("--order-seed", type=int, default=0)
+    p.add_argument("--score", default="haa", help="buffer score (anr/cbs/haa/nss/cms)")
+    p.add_argument("--eps", type=float, default=0.03, help="balance slack")
+    p.add_argument("--buffer-size", type=int, default=None, help="Q_max (default: n/8)")
+    p.add_argument("--batch-size", type=int, default=None, help="delta (default: n/32)")
+    p.add_argument("--d-max", type=float, default=None, help="hub threshold (default: n/16)")
+    p.add_argument("--gamma", type=float, default=1.5)
+    p.add_argument("--wave", type=int, default=1, help="vectorized: eviction wave size")
+    p.add_argument("--chunk", type=int, default=1, help="vectorized: arrival chunk size")
+    p.add_argument("--queue-depth", type=int, default=4, help="pipelined: task queue bound")
+    p.add_argument("--read-ahead", type=int, default=64, help="pipelined: read-ahead records")
+    p.add_argument("--restream", type=int, default=0, metavar="N",
+                   help="restreaming refinement passes (memory-only post-pass)")
+    p.add_argument("--materialize", action="store_true",
+                   help="load a disk source into memory (required for "
+                        "memory-only drivers on file sources)")
+    p.add_argument("--stats", action="store_true",
+                   help="collect per-batch stats (IER, evictions)")
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="write the full PartitionResult JSON here")
+    p.set_defaults(cmd=_cmd_partition)
+
+
+def _cmd_partition(args: argparse.Namespace) -> int:
+    from repro.api import DriverConfig, partition, resolve_source
+    from repro.configs.buffcut_paper import scaled_config
+
+    src = resolve_source(args.source)
+    if args.materialize:
+        src.materialize()
+    n = src.stream.n
+    base = scaled_config(n, k=args.k, eps=args.eps)
+    dc = DriverConfig.create(
+        DriverConfig(buffcut=base),
+        driver=args.driver,
+        k=args.k,
+        eps=args.eps,
+        score=args.score,
+        gamma=args.gamma,
+        engine=args.engine,
+        ordering=args.ordering,
+        order_seed=args.order_seed,
+        restream_passes=args.restream,
+        wave=args.wave,
+        chunk=args.chunk,
+        queue_depth=args.queue_depth,
+        read_ahead=args.read_ahead,
+        collect_stats=args.stats,
+        **{
+            key: val
+            for key, val in (
+                ("buffer_size", args.buffer_size),
+                ("batch_size", args.batch_size),
+                ("d_max", args.d_max),
+            )
+            if val is not None
+        },
+    )
+    res = partition(src, dc)
+    prov = res.provenance
+    print(
+        f"driver={prov['driver']} engine={prov['engine']} ordering={prov['ordering']} "
+        f"source={prov['source']['kind']} n={prov['source']['n']} m={prov['source']['m']} "
+        f"k={res.k} cut_ratio={res.cut_ratio:.4f} balance={res.balance:.3f} "
+        f"runtime_s={prov['runtime_s']:.3f}"
+    )
+    if args.json:
+        res.to_json(args.json)
+        print(f"wrote {args.json}")
+    return 0
+
+
+def _add_gen_parser(sub: "argparse._SubParsersAction") -> None:
+    p = sub.add_parser(
+        "gen",
+        help="synthesize an instance family to disk",
+        description="Generate FAMILY to -o PATH (packed binary by default; "
+                    "grid/ring stream incrementally and never materialize).",
+    )
+    p.add_argument("family", help="rmat | rgg | rhg | grid | sbm | star | ring")
+    p.add_argument("-o", "--out", required=True, help="output path")
+    p.add_argument("--format", default="packed", choices=["packed", "metis"],
+                   help="on-disk format")
+    p.add_argument("--param", action="append", default=[], metavar="K=V",
+                   help="generator parameter, repeatable (e.g. --param side=64)")
+    p.set_defaults(cmd=_cmd_gen)
+
+
+def _cmd_gen(args: argparse.Namespace) -> int:
+    from repro.graphs.generators import generate_to_disk
+    from repro.graphs.io import write_metis
+    from repro.api.sources import GEN_PREFIX, GENERATORS, parse_generator_spec
+
+    # one parser for generator params: the same spec syntax partition accepts
+    spec = GEN_PREFIX + args.family
+    if args.param:
+        spec += ":" + ",".join(args.param)
+    family, params = parse_generator_spec(spec)
+    if args.format == "packed":
+        n = generate_to_disk(family, args.out, **params)
+    else:
+        g = GENERATORS[family](**params)
+        write_metis(g, args.out)
+        n = g.n
+    print(f"wrote {args.out} ({family}, n={n}, format={args.format})")
+    return 0
+
+
+def _cmd_list(args: argparse.Namespace) -> int:
+    from repro.api import get_partitioner, list_partitioners
+
+    for name in list_partitioners():
+        spec = get_partitioner(name)
+        mode = "streaming" if spec.streaming else "memory-only"
+        line = f"{name:14s} [{mode}]"
+        if spec.aliases:
+            line += f"  aliases: {', '.join(spec.aliases)}"
+        print(line)
+        if args.verbose and spec.description:
+            print(f"    {spec.description}")
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="BuffCut reproduction — unified partitioner front door.",
+    )
+    sub = ap.add_subparsers(dest="command", required=True)
+    _add_partition_parser(sub)
+    _add_gen_parser(sub)
+    p_list = sub.add_parser("list", help="list registered partitioners")
+    p_list.add_argument("-v", "--verbose", action="store_true")
+    p_list.set_defaults(cmd=_cmd_list)
+    return ap
+
+
+def main(argv: "list[str] | None" = None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        return args.cmd(args)
+    except (ValueError, TypeError, KeyError, FileNotFoundError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1

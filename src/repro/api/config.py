@@ -1,0 +1,178 @@
+"""`DriverConfig` — the one config object `repro.api.partition` consumes.
+
+Composes the existing config dataclasses instead of re-inventing them:
+`BuffCutConfig` (algorithm parameters, including the nested
+`MultilevelConfig`), `VectorizedConfig` (the vectorized driver's former
+loose kwargs) and `PipelineConfig` (the pipelined driver's), plus the
+facade-level knobs: which driver, which stream ordering, and how many
+restreaming post-passes.
+
+`DriverConfig.create` is the flat-kwarg builder the CLI and the
+`partition(source, k=..., driver=...)` convenience path share: every key is
+routed to the dataclass that owns it, unknown keys fail loudly with the
+full routing table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.core.buffcut import BuffCutConfig
+from repro.core.cuttana import CuttanaConfig
+from repro.core.multilevel import MultilevelConfig
+from repro.core.pipeline import PipelineConfig
+from repro.core.vector_stream import VectorizedConfig
+
+ORDERINGS = ("natural", "random", "bfs", "konect")
+
+# flat-kwarg routing table for DriverConfig.create (CLI + partition(**kw))
+_TOP_KEYS = ("driver", "ordering", "order_seed", "restream_passes")
+_BUFFCUT_KEYS = (
+    "k", "eps", "buffer_size", "batch_size", "d_max", "score",
+    "disc_factor", "gamma", "collect_stats",
+)
+_ML_KEYS = (
+    "coarsen_target", "max_levels", "lp_iters", "refine_rounds",
+    "min_shrink", "seed",
+)  # plus "engine", routed to ml below
+_VEC_KEYS = ("wave", "chunk")  # plus "vec_engine" -> VectorizedConfig.engine
+_PIPE_KEYS = ("queue_depth", "read_ahead")
+_CUTTANA_KEYS = ("subpart_ratio", "refine_passes")
+
+
+def _default_buffcut() -> BuffCutConfig:
+    return BuffCutConfig(k=16)
+
+
+def as_cuttana(cfg: BuffCutConfig) -> CuttanaConfig:
+    """Upgrade a BuffCutConfig to a CuttanaConfig (default phase-2 knobs),
+    passing an existing CuttanaConfig through untouched."""
+    if isinstance(cfg, CuttanaConfig):
+        return cfg
+    return CuttanaConfig(
+        **{f.name: getattr(cfg, f.name) for f in dataclasses.fields(BuffCutConfig)}
+    )
+
+
+@dataclasses.dataclass
+class DriverConfig:
+    driver: str = "buffcut"
+    buffcut: BuffCutConfig = dataclasses.field(default_factory=_default_buffcut)
+    vectorized: VectorizedConfig = dataclasses.field(default_factory=VectorizedConfig)
+    pipeline: PipelineConfig = dataclasses.field(default_factory=PipelineConfig)
+    restream_passes: int = 0
+    ordering: str = "natural"
+    order_seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.ordering not in ORDERINGS:
+            raise ValueError(
+                f"unknown ordering {self.ordering!r}: pick one of {ORDERINGS}"
+            )
+        if self.restream_passes < 0:
+            raise ValueError(
+                f"restream_passes must be >= 0, got {self.restream_passes}"
+            )
+
+    # ------------------------------------------------------- flat builder
+    @classmethod
+    def create(cls, base: "DriverConfig | None" = None, **kw) -> "DriverConfig":
+        """Build (or override) a DriverConfig from flat kwargs.
+
+        ``engine`` routes to the multilevel engine (``ml.engine``);
+        ``vec_engine`` to the vectorized buffer engine.  Cuttana's
+        ``subpart_ratio``/``refine_passes`` upgrade the algorithm config to
+        a `CuttanaConfig`.
+        """
+        top: dict = {}
+        bc: dict = {}
+        ml: dict = {}
+        vec: dict = {}
+        pipe: dict = {}
+        cut: dict = {}
+        for key, val in kw.items():
+            if key in _TOP_KEYS:
+                top[key] = val
+            elif key in _BUFFCUT_KEYS:
+                bc[key] = val
+            elif key in _ML_KEYS:
+                ml[key] = val
+            elif key == "engine":
+                ml["engine"] = val
+            elif key in _VEC_KEYS:
+                vec[key] = val
+            elif key == "vec_engine":
+                vec["engine"] = val
+            elif key in _PIPE_KEYS:
+                pipe[key] = val
+            elif key in _CUTTANA_KEYS:
+                cut[key] = val
+            else:
+                raise TypeError(
+                    f"unknown partition option {key!r}; valid options: "
+                    f"{_TOP_KEYS + _BUFFCUT_KEYS + ('engine',) + _ML_KEYS} "
+                    f"(multilevel), {_VEC_KEYS + ('vec_engine',)} (vectorized), "
+                    f"{_PIPE_KEYS} (pipelined), {_CUTTANA_KEYS} (cuttana)"
+                )
+        base = base if base is not None else cls()
+        buffcut = base.buffcut
+        if ml:
+            bc["ml"] = dataclasses.replace(buffcut.ml, **ml)
+        if bool(cut) or top.get("driver", base.driver) == "cuttana":
+            buffcut = as_cuttana(buffcut)
+        if bc or cut:
+            buffcut = dataclasses.replace(buffcut, **bc, **cut)
+        return dataclasses.replace(
+            base,
+            buffcut=buffcut,
+            vectorized=dataclasses.replace(base.vectorized, **vec),
+            pipeline=dataclasses.replace(base.pipeline, **pipe),
+            **top,
+        )
+
+    # ------------------------------------------------------ serialization
+    def to_dict(self) -> dict:
+        bc = self.buffcut.to_dict()
+        bc["type"] = "cuttana" if isinstance(self.buffcut, CuttanaConfig) else "buffcut"
+        return {
+            "driver": self.driver,
+            "buffcut": bc,
+            "vectorized": self.vectorized.to_dict(),
+            "pipeline": self.pipeline.to_dict(),
+            "restream_passes": self.restream_passes,
+            "ordering": self.ordering,
+            "order_seed": self.order_seed,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DriverConfig":
+        bc = dict(d["buffcut"])
+        bc_cls = CuttanaConfig if bc.pop("type", "buffcut") == "cuttana" else BuffCutConfig
+        return cls(
+            driver=d.get("driver", "buffcut"),
+            buffcut=bc_cls.from_dict(bc),
+            vectorized=VectorizedConfig.from_dict(d.get("vectorized", {})),
+            pipeline=PipelineConfig.from_dict(d.get("pipeline", {})),
+            restream_passes=d.get("restream_passes", 0),
+            ordering=d.get("ordering", "natural"),
+            order_seed=d.get("order_seed", 0),
+        )
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "DriverConfig":
+        return cls.from_dict(json.loads(s))
+
+
+__all__ = [
+    "DriverConfig",
+    "as_cuttana",
+    "BuffCutConfig",
+    "CuttanaConfig",
+    "MultilevelConfig",
+    "VectorizedConfig",
+    "PipelineConfig",
+    "ORDERINGS",
+]

@@ -1,0 +1,156 @@
+"""The partitioner registry — one `PartitionerSpec` per algorithm.
+
+Every algorithm this repo implements registers here, and every future
+scenario PR plugs in the same way: `register_partitioner` a spec whose
+`run(source, config)` maps a `ResolvedSource` + `DriverConfig` to
+`(labels, StreamStats | None)`.  `repro.api.partition`, the CLI, the
+benchmarks and the placement service all dispatch through this table —
+there is no other driver lookup in the tree.
+
+Streaming specs (`streaming=True`) consume the `NodeStreamBase` protocol
+and therefore partition straight from disk; memory-only specs call
+`require_graph`, which raises the standard actionable `TypeError` when
+handed a disk stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.buffcut import StreamStats, _buffcut_partition
+from repro.core.cuttana import _cuttana_partition
+from repro.core.fennel import _fennel_partition, _ldg_partition
+from repro.core.heistream import _heistream_partition
+from repro.core.pipeline import _buffcut_partition_pipelined
+from repro.core.vector_stream import _buffcut_partition_vectorized
+from repro.api.config import DriverConfig, as_cuttana
+from repro.api.sources import ResolvedSource
+
+RunFn = Callable[[ResolvedSource, DriverConfig], "tuple[np.ndarray, StreamStats | None]"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionerSpec:
+    name: str                      # canonical registry key
+    run: RunFn
+    streaming: bool                # consumes NodeStreamBase (out-of-core OK)
+    description: str = ""
+    aliases: tuple = ()
+
+
+_REGISTRY: dict[str, PartitionerSpec] = {}
+_ALIASES: dict[str, str] = {}
+
+
+def register_partitioner(spec: PartitionerSpec, *, overwrite: bool = False) -> PartitionerSpec:
+    """Add a partitioner to the registry (future scenario PRs start here)."""
+    names = (spec.name, *spec.aliases)
+    for name in names:
+        taken = name in _REGISTRY or name in _ALIASES
+        if taken and not overwrite:
+            raise ValueError(
+                f"partitioner name {name!r} is already registered; pass "
+                "overwrite=True to replace it"
+            )
+    if overwrite:  # reclaim every name, whether it was canonical or an alias
+        for name in names:
+            _REGISTRY.pop(name, None)
+            _ALIASES.pop(name, None)
+    _REGISTRY[spec.name] = spec
+    for alias in spec.aliases:
+        _ALIASES[alias] = spec.name
+    return spec
+
+
+def get_partitioner(name: str) -> PartitionerSpec:
+    key = _ALIASES.get(name, name)
+    spec = _REGISTRY.get(key)
+    if spec is None:
+        raise KeyError(
+            f"unknown partitioner {name!r}: registered names are "
+            f"{list_partitioners()} (aliases: {sorted(_ALIASES)})"
+        )
+    return spec
+
+
+def list_partitioners() -> list[str]:
+    """Canonical registry names, registration order."""
+    return list(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# built-in registrations — the paper's drivers + the baselines it compares to
+# --------------------------------------------------------------------------
+
+
+register_partitioner(PartitionerSpec(
+    name="buffcut",
+    aliases=("sequential",),
+    streaming=True,
+    description="BuffCut sequential driver (paper Alg. 1): prioritized "
+                "buffer + batch-wise multilevel.",
+    run=lambda src, dc: _buffcut_partition(src.stream, dc.buffcut),
+))
+
+register_partitioner(PartitionerSpec(
+    name="buffcut-vec",
+    aliases=("vectorized",),
+    streaming=True,
+    description="Vectorized BuffCut: dense score vectors + top-wave "
+                "eviction (TPU adaptation; wave=1,chunk=1 is bit-exact).",
+    run=lambda src, dc: _buffcut_partition_vectorized(src.stream, dc.buffcut, dc.vectorized),
+))
+
+register_partitioner(PartitionerSpec(
+    name="buffcut-pipe",
+    aliases=("pipelined", "buffcut-par"),
+    streaming=True,
+    description="Pipelined BuffCut (paper §3.5): reader / PQ handler / "
+                "partition worker threads.",
+    run=lambda src, dc: _buffcut_partition_pipelined(src.stream, dc.buffcut, dc.pipeline),
+))
+
+register_partitioner(PartitionerSpec(
+    name="heistream",
+    streaming=False,
+    description="HeiStream baseline [Faraj & Schulz]: contiguous batches, "
+                "same multilevel scheme (memory-only).",
+    run=lambda src, dc: _heistream_partition(src.require_graph("heistream"), dc.buffcut),
+))
+
+register_partitioner(PartitionerSpec(
+    name="cuttana",
+    streaming=False,
+    description="Cuttana baseline [Hajidehi et al.]: CBS buffer + "
+                "sequential Fennel eviction + sub-partition trades "
+                "(memory-only).",
+    run=lambda src, dc: _cuttana_partition(
+        src.require_graph("cuttana"), as_cuttana(dc.buffcut)
+    ),
+))
+
+register_partitioner(PartitionerSpec(
+    name="fennel",
+    streaming=False,
+    description="Fennel one-pass baseline [Tsourakakis et al.] (memory-only).",
+    run=lambda src, dc: (
+        _fennel_partition(
+            src.require_graph("fennel"),
+            dc.buffcut.k, dc.buffcut.eps, dc.buffcut.gamma,
+        ),
+        None,
+    ),
+))
+
+register_partitioner(PartitionerSpec(
+    name="ldg",
+    streaming=False,
+    description="Linear Deterministic Greedy baseline [Stanton & Kliot] "
+                "(memory-only).",
+    run=lambda src, dc: (
+        _ldg_partition(src.require_graph("ldg"), dc.buffcut.k, dc.buffcut.eps),
+        None,
+    ),
+))

@@ -31,8 +31,12 @@ from repro.core.buffcut import BuffCutConfig, StreamStats, buffcut_partition
 from repro.core.heistream import heistream_partition
 from repro.core.cuttana import CuttanaConfig, cuttana_partition
 from repro.core.restream import restream, restream_pass
-from repro.core.vector_stream import buffcut_partition_vectorized, score_kernel
-from repro.core.pipeline import buffcut_partition_pipelined
+from repro.core.vector_stream import (
+    VectorizedConfig,
+    buffcut_partition_vectorized,
+    score_kernel,
+)
+from repro.core.pipeline import PipelineConfig, buffcut_partition_pipelined
 
 __all__ = [
     "edge_cut", "cut_ratio", "balance", "is_balanced", "block_loads", "l_max",
@@ -49,6 +53,6 @@ __all__ = [
     "heistream_partition",
     "CuttanaConfig", "cuttana_partition",
     "restream", "restream_pass",
-    "buffcut_partition_vectorized", "score_kernel",
-    "buffcut_partition_pipelined",
+    "VectorizedConfig", "buffcut_partition_vectorized", "score_kernel",
+    "PipelineConfig", "buffcut_partition_pipelined",
 ]

@@ -1,0 +1,38 @@
+"""Shared helpers for the legacy-entry-point deprecation policy (DESIGN §9).
+
+The seven partitioner functions remain importable from `repro.core` forever
+(scripts in the wild call them), but each is now a thin shim over a private
+implementation: it emits a `DeprecationWarning` pointing at the one front
+door (`repro.api.partition`) and delegates.  The API layer calls the private
+implementations directly, so the warning fires exactly when user code takes
+the legacy path — bit-identity between the two paths is pinned in
+tests/test_api.py.
+"""
+from __future__ import annotations
+
+import warnings
+
+from repro.graphs.csr import CSRGraph
+
+_STREAMING_DRIVERS = "buffcut / buffcut-vec / buffcut-pipe"
+
+
+def warn_legacy(old: str, new: str) -> None:
+    """Emit the standard legacy-entry-point DeprecationWarning."""
+    warnings.warn(
+        f"{old} is deprecated; call repro.api.partition instead, e.g. {new}",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def require_csr(g: object, algo: str) -> CSRGraph:
+    """Memory-only algorithms fail fast on streams, not deep in CSR access."""
+    if isinstance(g, CSRGraph):
+        return g
+    raise TypeError(
+        f"{algo} is memory-only and needs a CSRGraph, got {type(g).__name__}. "
+        "Materialize the stream first (repro.graphs.read_packed/read_metis, "
+        "repro.api.resolve_source(...).materialize(), or the CLI's "
+        f"--materialize flag) or use a streaming driver ({_STREAMING_DRIVERS})."
+    )

@@ -19,15 +19,17 @@ buffer + batch + the stream's read-ahead window — measured, not modeled, in
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
 from repro.graphs.stream import NodeStreamBase, as_node_stream
+from repro.core._deprecation import warn_legacy
 from repro.core.buffer import BucketPQ
 from repro.core.rescore import RescoreState
-from repro.core.scores import ScoreSpec, get_score
+from repro.core.scores import SCORES, ScoreSpec, get_score
 from repro.core.fennel import FennelParams, fennel_choose
 from repro.core.batch_model import build_batch_model_from_adj
 from repro.core.multilevel import MultilevelConfig, multilevel_partition
@@ -47,10 +49,82 @@ class BuffCutConfig:
     ml: MultilevelConfig = dataclasses.field(default_factory=MultilevelConfig)
     collect_stats: bool = False
 
+    def __post_init__(self) -> None:
+        if self.k < 2:
+            raise ValueError(
+                f"BuffCutConfig.k must be >= 2 (got {self.k}): partitioning "
+                "into fewer than 2 blocks is a no-op"
+            )
+        if self.eps <= 0:
+            raise ValueError(
+                f"BuffCutConfig.eps must be > 0 (got {self.eps}): the balance "
+                "cap is (1+eps)*c(V)/k and eps=0 leaves no slack for streaming "
+                "assignment (paper default: 0.03)"
+            )
+        if self.buffer_size < 1:
+            raise ValueError(
+                f"BuffCutConfig.buffer_size (Q_max) must be >= 1, got {self.buffer_size}"
+            )
+        if self.batch_size < 1:
+            raise ValueError(
+                f"BuffCutConfig.batch_size (delta) must be >= 1, got {self.batch_size}"
+            )
+        if self.batch_size > self.buffer_size and self.buffer_size != 1:
+            # buffer_size == 1 is the paper's Q=1 degeneracy (contiguous
+            # batches == HeiStream) and legitimately pairs with any delta.
+            raise ValueError(
+                f"BuffCutConfig requires batch_size <= buffer_size (got "
+                f"batch_size={self.batch_size} > buffer_size={self.buffer_size}): "
+                "a batch can never out-grow the buffer feeding it. Shrink "
+                "batch_size, grow buffer_size, or set buffer_size=1 for the "
+                "unbuffered contiguous-batch mode."
+            )
+        if self.d_max <= 0:
+            raise ValueError(
+                f"BuffCutConfig.d_max (hub threshold) must be > 0, got {self.d_max}"
+            )
+        if self.disc_factor < 1:
+            raise ValueError(
+                f"BuffCutConfig.disc_factor must be >= 1, got {self.disc_factor}"
+            )
+        if isinstance(self.score, str) and self.score.lower() not in SCORES:
+            raise ValueError(
+                f"unknown score {self.score!r}: known scores are "
+                f"{sorted(SCORES)} (or pass a ScoreSpec instance)"
+            )
+
     def score_spec(self) -> ScoreSpec:
         if isinstance(self.score, ScoreSpec):
             return dataclasses.replace(self.score, d_max=float(self.d_max))
         return get_score(self.score, d_max=float(self.d_max))
+
+    # ------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, ScoreSpec):
+                v = dataclasses.asdict(v)
+            elif isinstance(v, MultilevelConfig):
+                v = v.to_dict()
+            out[f.name] = v
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BuffCutConfig":
+        d = dict(d)
+        if isinstance(d.get("score"), dict):
+            d["score"] = ScoreSpec(**d["score"])
+        if isinstance(d.get("ml"), dict):
+            d["ml"] = MultilevelConfig.from_dict(d["ml"])
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "BuffCutConfig":
+        return cls.from_dict(json.loads(s))
 
 
 @dataclasses.dataclass
@@ -71,6 +145,16 @@ class StreamStats:
     @property
     def mean_ier(self) -> float:
         return float(np.mean(self.ier_per_batch)) if self.ier_per_batch else 0.0
+
+    def to_dict(self) -> dict:
+        out = dataclasses.asdict(self)
+        out["ier_per_batch"] = [float(x) for x in self.ier_per_batch]
+        out["evictions"] = [int(x) for x in self.evictions]
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "StreamStats":
+        return cls(**d)
 
 
 class _State(RescoreState):
@@ -102,6 +186,14 @@ def _bump_buffered(st: _State, pq: BucketPQ, v: int) -> None:
 
 
 def buffcut_partition(
+    g: CSRGraph | NodeStreamBase, cfg: BuffCutConfig
+) -> tuple[np.ndarray, StreamStats]:
+    """Deprecated shim — `repro.api.partition` is the front door."""
+    warn_legacy("buffcut_partition(g, cfg)", "partition(g, driver='buffcut', k=...)")
+    return _buffcut_partition(g, cfg)
+
+
+def _buffcut_partition(
     g: CSRGraph | NodeStreamBase, cfg: BuffCutConfig
 ) -> tuple[np.ndarray, StreamStats]:
     stream = as_node_stream(g)

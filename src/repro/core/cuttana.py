@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.graphs.csr import CSRGraph
 from repro.graphs.stream import NodeStream
+from repro.core._deprecation import require_csr, warn_legacy
 from repro.core.buffer import BucketPQ
 from repro.core.buffcut import BuffCutConfig, StreamStats, _State, _bump_assigned
 from repro.core.scores import get_score
@@ -26,10 +27,30 @@ class CuttanaConfig(BuffCutConfig):
     subpart_ratio: int = 16       # k'/k (paper evaluates 16 and 4096)
     refine_passes: int = 2
 
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if self.subpart_ratio < 1:
+            raise ValueError(
+                f"CuttanaConfig.subpart_ratio (k'/k) must be >= 1, got {self.subpart_ratio}"
+            )
+        if self.refine_passes < 0:
+            raise ValueError(
+                f"CuttanaConfig.refine_passes must be >= 0, got {self.refine_passes}"
+            )
+
 
 def cuttana_partition(
     g: CSRGraph, cfg: CuttanaConfig
 ) -> tuple[np.ndarray, StreamStats]:
+    """Deprecated shim — `repro.api.partition` is the front door."""
+    warn_legacy("cuttana_partition(g, cfg)", "partition(g, driver='cuttana', k=...)")
+    return _cuttana_partition(g, cfg)
+
+
+def _cuttana_partition(
+    g: CSRGraph, cfg: CuttanaConfig
+) -> tuple[np.ndarray, StreamStats]:
+    g = require_csr(g, "cuttana")
     spec = get_score("cbs", d_max=float(cfg.d_max))
     p = FennelParams(
         k=cfg.k, n_total=float(g.node_w.sum()), m_total=g.total_edge_weight(),

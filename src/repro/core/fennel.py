@@ -15,6 +15,7 @@ import dataclasses
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
+from repro.core._deprecation import require_csr, warn_legacy
 from repro.core.metrics import l_max
 
 
@@ -77,7 +78,16 @@ def fennel_choose(
 def fennel_partition(
     g: CSRGraph, k: int, eps: float = 0.03, gamma: float = 1.5
 ) -> np.ndarray:
+    """Deprecated shim — `repro.api.partition` is the front door."""
+    warn_legacy("fennel_partition(g, k, eps, gamma)", "partition(g, driver='fennel', k=...)")
+    return _fennel_partition(g, k, eps, gamma)
+
+
+def _fennel_partition(
+    g: CSRGraph, k: int, eps: float = 0.03, gamma: float = 1.5
+) -> np.ndarray:
     """One-pass Fennel over the stream order (node id order)."""
+    g = require_csr(g, "fennel")
     p = FennelParams(k=k, n_total=float(g.node_w.sum()), m_total=g.total_edge_weight(), eps=eps, gamma=gamma)
     block = np.full(g.n, -1, dtype=np.int64)
     loads = np.zeros(k, dtype=np.float64)
@@ -89,7 +99,14 @@ def fennel_partition(
 
 
 def ldg_partition(g: CSRGraph, k: int, eps: float = 0.03) -> np.ndarray:
+    """Deprecated shim — `repro.api.partition` is the front door."""
+    warn_legacy("ldg_partition(g, k, eps)", "partition(g, driver='ldg', k=...)")
+    return _ldg_partition(g, k, eps)
+
+
+def _ldg_partition(g: CSRGraph, k: int, eps: float = 0.03) -> np.ndarray:
     """Linear Deterministic Greedy: argmax |N(v) ∩ V_i| * (1 - c(V_i)/cap)."""
+    g = require_csr(g, "ldg")
     cap = l_max(float(g.node_w.sum()), k, eps)
     block = np.full(g.n, -1, dtype=np.int64)
     loads = np.zeros(k, dtype=np.float64)

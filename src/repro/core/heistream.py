@@ -11,6 +11,7 @@ import time
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
+from repro.core._deprecation import require_csr, warn_legacy
 from repro.core.buffcut import BuffCutConfig, StreamStats
 from repro.core.fennel import FennelParams
 from repro.core.batch_model import build_batch_model
@@ -21,6 +22,15 @@ from repro.core.metrics import internal_edge_ratio
 def heistream_partition(
     g: CSRGraph, cfg: BuffCutConfig
 ) -> tuple[np.ndarray, StreamStats]:
+    """Deprecated shim — `repro.api.partition` is the front door."""
+    warn_legacy("heistream_partition(g, cfg)", "partition(g, driver='heistream', k=...)")
+    return _heistream_partition(g, cfg)
+
+
+def _heistream_partition(
+    g: CSRGraph, cfg: BuffCutConfig
+) -> tuple[np.ndarray, StreamStats]:
+    g = require_csr(g, "heistream")
     p = FennelParams(
         k=cfg.k,
         n_total=float(g.node_w.sum()),

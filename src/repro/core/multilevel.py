@@ -30,6 +30,9 @@ _ELL_VOLUME_CAP = 1 << 24
 _ELL_WIDTH_CAP = 4096
 
 
+_ENGINES = ("auto", "sparse", "ell", "jax")
+
+
 @dataclasses.dataclass
 class MultilevelConfig:
     coarsen_target: int = 160      # free-node count target at coarsest level
@@ -39,6 +42,29 @@ class MultilevelConfig:
     min_shrink: float = 0.95       # stop coarsening if shrink factor above
     seed: int = 0
     engine: str = "auto"           # "auto" | "sparse" | "ell" | "jax"
+
+    def __post_init__(self) -> None:
+        if self.engine not in _ENGINES:
+            raise ValueError(
+                f"unknown multilevel engine {self.engine!r}: pick one of "
+                f"{_ENGINES} ('auto' dispatches sparse/ell by shape, 'jax' is "
+                "the device-resident V-cycle)"
+            )
+        if self.coarsen_target < 1:
+            raise ValueError(
+                f"MultilevelConfig.coarsen_target must be >= 1, got {self.coarsen_target}"
+            )
+        if self.max_levels < 1:
+            raise ValueError(
+                f"MultilevelConfig.max_levels must be >= 1, got {self.max_levels}"
+            )
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MultilevelConfig":
+        return cls(**d)
 
 
 def _resolve_engine(engine: str, g: CSRGraph) -> str:

@@ -16,6 +16,7 @@ EXPERIMENTS.md §B5); the structure is what ships.
 """
 from __future__ import annotations
 
+import dataclasses
 import queue
 import threading
 import time
@@ -24,6 +25,7 @@ import numpy as np
 
 from repro.graphs.csr import CSRGraph
 from repro.graphs.stream import NodeStreamBase, as_node_stream
+from repro.core._deprecation import warn_legacy
 from repro.core.buffcut import BuffCutConfig, StreamStats, _State, _bump_assigned, _bump_buffered
 from repro.core.buffer import BucketPQ
 from repro.core.fennel import FennelParams, fennel_choose
@@ -32,12 +34,55 @@ from repro.core.multilevel import multilevel_partition
 from repro.core.metrics import internal_edge_ratio_adj, streaming_cut_increment
 
 
+@dataclasses.dataclass
+class PipelineConfig:
+    """Knobs of the pipelined driver (formerly loose kwargs)."""
+
+    queue_depth: int = 4   # T2 -> T3 task queue bound
+    read_ahead: int = 64   # T1 -> T2 record queue bound (read-ahead window)
+
+    def __post_init__(self) -> None:
+        if self.queue_depth < 1:
+            raise ValueError(
+                f"PipelineConfig.queue_depth must be >= 1, got {self.queue_depth}"
+            )
+        if self.read_ahead < 1:
+            raise ValueError(
+                f"PipelineConfig.read_ahead must be >= 1, got {self.read_ahead}"
+            )
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PipelineConfig":
+        return cls(**d)
+
+
 def buffcut_partition_pipelined(
     g: CSRGraph | NodeStreamBase,
     cfg: BuffCutConfig,
     queue_depth: int = 4,
     read_ahead: int = 64,
 ) -> tuple[np.ndarray, StreamStats]:
+    """Deprecated shim — `repro.api.partition` is the front door; the loose
+    queue_depth/read_ahead kwargs fold into `PipelineConfig`."""
+    warn_legacy(
+        "buffcut_partition_pipelined(g, cfg, queue_depth=..., read_ahead=...)",
+        "partition(g, driver='buffcut-pipe', k=..., queue_depth=..., read_ahead=...)",
+    )
+    return _buffcut_partition_pipelined(
+        g, cfg, PipelineConfig(queue_depth=queue_depth, read_ahead=read_ahead)
+    )
+
+
+def _buffcut_partition_pipelined(
+    g: CSRGraph | NodeStreamBase,
+    cfg: BuffCutConfig,
+    pipe: PipelineConfig | None = None,
+) -> tuple[np.ndarray, StreamStats]:
+    pipe = pipe if pipe is not None else PipelineConfig()
+    queue_depth, read_ahead = pipe.queue_depth, pipe.read_ahead
     stream = as_node_stream(g)
     n = stream.n
     spec = cfg.score_spec()

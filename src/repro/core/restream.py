@@ -11,6 +11,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
+from repro.core._deprecation import require_csr
 from repro.core.buffcut import BuffCutConfig
 from repro.core.fennel import FennelParams
 from repro.core.batch_model import build_batch_model
@@ -20,6 +21,7 @@ from repro.core.multilevel import multilevel_partition
 def restream_pass(
     g: CSRGraph, block: np.ndarray, cfg: BuffCutConfig
 ) -> np.ndarray:
+    g = require_csr(g, "restream")
     p = FennelParams(
         k=cfg.k, n_total=float(g.node_w.sum()), m_total=g.total_edge_weight(),
         eps=cfg.eps, gamma=cfg.gamma,

@@ -20,6 +20,7 @@ the host driver calls its numpy twin for CPU streaming.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from functools import partial
 
@@ -29,6 +30,7 @@ import numpy as np
 
 from repro.graphs.csr import CSRGraph
 from repro.graphs.stream import NodeStreamBase, as_node_stream
+from repro.core._deprecation import warn_legacy
 from repro.core.buffer import VectorBuffer
 from repro.core.buffcut import BuffCutConfig, StreamStats
 from repro.core.fennel import FennelParams, fennel_choose
@@ -66,6 +68,37 @@ def score_kernel(
     raise ValueError(f"vectorized driver supports anr/cbs/haa/nss, got {kind}")
 
 
+@dataclasses.dataclass
+class VectorizedConfig:
+    """Knobs of the vectorized driver (formerly loose kwargs).
+
+    wave=1, chunk=1 reproduces the sequential driver bit-exactly; larger
+    values trade fidelity for VPU-lane utilization (DESIGN.md §3.2).
+    """
+
+    wave: int = 1                # eviction wave size (top-`wave` pops)
+    chunk: int = 1               # stream arrival chunk size
+    engine: str = "incremental"  # VectorBuffer engine: "incremental" | "scan"
+
+    def __post_init__(self) -> None:
+        if self.wave < 1:
+            raise ValueError(f"VectorizedConfig.wave must be >= 1, got {self.wave}")
+        if self.chunk < 1:
+            raise ValueError(f"VectorizedConfig.chunk must be >= 1, got {self.chunk}")
+        if self.engine not in ("incremental", "scan"):
+            raise ValueError(
+                f"unknown VectorBuffer engine {self.engine!r}: pick "
+                "'incremental' (O(occ) per wave) or 'scan' (the oracle)"
+            )
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "VectorizedConfig":
+        return cls(**d)
+
+
 def buffcut_partition_vectorized(
     g: CSRGraph | NodeStreamBase,
     cfg: BuffCutConfig,
@@ -74,6 +107,24 @@ def buffcut_partition_vectorized(
     chunk: int = 1,
     engine: str = "incremental",
 ) -> tuple[np.ndarray, StreamStats]:
+    """Deprecated shim — `repro.api.partition` is the front door; the loose
+    wave/chunk/engine kwargs fold into `VectorizedConfig`."""
+    warn_legacy(
+        "buffcut_partition_vectorized(g, cfg, wave=..., chunk=..., engine=...)",
+        "partition(g, driver='buffcut-vec', k=..., wave=..., chunk=..., vec_engine=...)",
+    )
+    return _buffcut_partition_vectorized(
+        g, cfg, VectorizedConfig(wave=wave, chunk=chunk, engine=engine)
+    )
+
+
+def _buffcut_partition_vectorized(
+    g: CSRGraph | NodeStreamBase,
+    cfg: BuffCutConfig,
+    vec: VectorizedConfig | None = None,
+) -> tuple[np.ndarray, StreamStats]:
+    vec = vec if vec is not None else VectorizedConfig()
+    wave, chunk, engine = vec.wave, vec.chunk, vec.engine
     spec = cfg.score_spec()
     if spec.needs_block_counts:
         raise ValueError("CMS needs per-block counts; use the sequential driver")

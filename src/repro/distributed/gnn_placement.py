@@ -18,8 +18,7 @@ import dataclasses
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
-from repro.core.buffcut import buffcut_partition
-from repro.core.fennel import fennel_partition
+from repro.api import DriverConfig, partition
 from repro.core.metrics import edge_cut, block_loads
 from repro.configs.buffcut_paper import scaled_config
 
@@ -42,10 +41,10 @@ def place_graph(
     g: CSRGraph, n_shards: int, *, method: str = "buffcut", seed: int = 0
 ) -> Placement:
     if method == "buffcut":
-        cfg = scaled_config(g.n, k=n_shards)
-        block, _ = buffcut_partition(g, cfg)
+        cfg = DriverConfig(driver="buffcut", buffcut=scaled_config(g.n, k=n_shards))
+        block = partition(g, cfg).labels
     elif method == "fennel":
-        block = fennel_partition(g, n_shards)
+        block = partition(g, driver="fennel", k=n_shards).labels
     elif method == "random":
         rng = np.random.default_rng(seed)
         block = rng.integers(0, n_shards, g.n)

@@ -1,10 +1,19 @@
-"""Batched serving driver (LM decode / DLRM scoring).
+"""Batched serving driver (LM decode / DLRM scoring / graph placement).
 
 Demonstrates the inference path end-to-end on CPU with the smoke configs:
 prefill a batch of prompts, decode N tokens with the KV cache (SWA archs go
 through the Pallas sliding-window kernel), report tokens/s.
 
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b --tokens 32
+
+``--arch partition`` serves the placement workload instead: the graph
+source is partitioned once through `repro.api` (any registered driver, any
+source kind the API resolves) and the resulting placement table answers
+batched node->block lookups — the query shape the GNN training loop and
+the sharded embedding path issue.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch partition \
+      --graph gen:grid:side=64 --k 16 --driver buffcut
 """
 from __future__ import annotations
 
@@ -67,14 +76,46 @@ def serve_dlrm(batch: int) -> None:
     print(f"dlrm serve: batch={b['dense'].shape[0]} {dt*1e6:.0f} us/batch")
 
 
+def serve_partition(source: str, k: int, driver: str, batch: int, queries: int) -> None:
+    """Placement-as-a-service: one `repro.api.partition` call builds the
+    placement table; serving is batched node->block lookups against it."""
+    from repro.api import partition
+
+    res = partition(source, k=k, driver=driver)
+    n = res.labels.shape[0]
+    rng = np.random.default_rng(0)
+    reqs = [rng.integers(0, n, batch) for _ in range(queries)]
+    t0 = time.perf_counter()
+    checksum = 0
+    for q in reqs:
+        checksum += int(res.labels[q].sum())
+    dt = time.perf_counter() - t0
+    total = batch * queries
+    print(
+        f"partition serve: driver={res.provenance['driver']} n={n} k={res.k} "
+        f"cut_ratio={res.cut_ratio:.4f} balance={res.balance:.3f} | "
+        f"{queries} batches x {batch} lookups in {dt*1e3:.1f}ms "
+        f"({total / max(dt, 1e-9):.0f} lookups/s, checksum={checksum})"
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="h2o-danube-1.8b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--graph", default="gen:grid:side=64",
+                    help="partition mode: graph source (path or gen: spec)")
+    ap.add_argument("--k", type=int, default=16, help="partition mode: blocks")
+    ap.add_argument("--driver", default="buffcut",
+                    help="partition mode: registry driver name")
+    ap.add_argument("--queries", type=int, default=64,
+                    help="partition mode: lookup batches to serve")
     args = ap.parse_args()
-    if args.arch == "dlrm-mlperf":
+    if args.arch == "partition":
+        serve_partition(args.graph, args.k, args.driver, args.batch, args.queries)
+    elif args.arch == "dlrm-mlperf":
         serve_dlrm(args.batch)
     else:
         serve_lm(args.arch, args.batch, args.prompt, args.tokens)
