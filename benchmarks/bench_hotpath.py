@@ -221,7 +221,16 @@ def main() -> None:
         "e2e": bench_e2e(args.smoke),
         "outofcore": bench_outofcore_run(smoke=args.smoke),
     }
-    Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+    out_path = Path(args.out)
+    if out_path.exists():
+        # preserve sections owned by other benches (e.g. bench_restream's
+        # restream_outofcore) instead of dropping them on rewrite
+        try:
+            for key, val in json.loads(out_path.read_text()).items():
+                report.setdefault(key, val)
+        except json.JSONDecodeError:
+            pass
+    out_path.write_text(json.dumps(report, indent=2) + "\n")
     h, e = report["histogram"], report["evict"]
     print(f"histogram inner op speedup (round0): {h['speedup']:.1f}x")
     for name, row in h["shapes"].items():

@@ -21,6 +21,8 @@ results = {name: partition(SOURCE, driver=name, **OPTS)
            for name in ("buffcut", "heistream", "fennel")}
 results["buffcut+restream"] = partition(SOURCE, driver="buffcut",
                                         restream_passes=1, **OPTS)
+results["…priority"] = partition(SOURCE, driver="buffcut", restream_passes=1,
+                                 restream_order="priority", **OPTS)
 
 for name, res in results.items():
     print(f"{name:16s} cut={100 * res.cut_ratio:5.2f}%  "

@@ -32,7 +32,7 @@ from repro.graphs.orderings import apply_order, bfs_order, konect_order
 from repro.graphs.stream import NodeStream
 from repro.graphs.stream_io import DiskNodeStream, permute_to_disk
 from repro.core.buffcut import BuffCutConfig
-from repro.core.restream import restream as _restream
+from repro.core.restream import restream_refine as _restream_refine
 from repro.api.config import (
     ORDERINGS,
     CuttanaConfig,
@@ -140,20 +140,51 @@ def partition(source, config: "DriverConfig | BuffCutConfig | None" = None, **ov
     spec = get_partitioner(dc.driver)
     src = resolve_source(source)
     run_src, perm, tmp = _realize_ordering(src, dc)
-    if dc.restream_passes > 0:
-        # fail before the (possibly hours-long) streaming run, not after it
-        run_src.require_graph("restream")
+    if (
+        dc.restream_passes > 0
+        and run_src.graph is None
+        and not isinstance(run_src.stream, DiskNodeStream)
+    ):
+        # restream replays the stream; a foreign stream with no file behind
+        # it is not replayable, so load it up front (before the first pass
+        # exhausts it).  NodeStream / DiskNodeStream replay natively.
+        g = run_src.materialize()
+        run_src = ResolvedSource(NodeStream(g), g, run_src.kind, run_src.origin)
     t0 = time.perf_counter()
+    rinfo = None
     try:
         labels, stats = spec.run(run_src, dc)
         if dc.restream_passes > 0:
-            labels = _restream(
-                run_src.require_graph("restream"), labels, dc.buffcut, dc.restream_passes
+            # streaming drivers hand over their exact accumulated cut and
+            # final block loads (skipping the restream prelude replay); the
+            # memory-only baselines don't maintain them, so the prelude
+            # computes both
+            seeded = stats is not None and spec.streaming
+            labels, rinfo = _restream_refine(
+                run_src.graph if run_src.graph is not None else run_src.stream,
+                labels,
+                dc.buffcut,
+                dc.restream_passes,
+                order=dc.restream_order,
+                initial_cut=stats.cut_weight if seeded else None,
+                initial_loads=(
+                    np.asarray(stats.block_loads, dtype=np.float64)
+                    if seeded and stats.block_loads else None
+                ),
             )
     finally:
         if tmp is not None:
             tmp.cleanup()
     runtime_s = time.perf_counter() - t0
+    if stats is not None and rinfo is not None:
+        # refresh: the labels were refined, so the streamed quality fields
+        # must describe the refined assignment, not pass 1's
+        stats.cut_weight = rinfo.cut_weight
+        stats.balance = rinfo.balance
+        stats.peak_resident_bytes = max(
+            stats.peak_resident_bytes, rinfo.peak_resident_bytes
+        )
+        stats.stream_bytes_read += rinfo.stream_bytes_read
     if perm is not None:  # map stream-position labels back to input node ids
         orig = np.empty_like(labels)
         orig[perm] = labels
@@ -164,6 +195,7 @@ def partition(source, config: "DriverConfig | BuffCutConfig | None" = None, **ov
         "ordering": dc.ordering,
         "order_seed": dc.order_seed,
         "restream_passes": dc.restream_passes,
+        "restream_order": dc.restream_order,
         "source": {
             "kind": src.kind,
             "origin": src.origin,
@@ -175,6 +207,9 @@ def partition(source, config: "DriverConfig | BuffCutConfig | None" = None, **ov
         "runtime_s": runtime_s,
         "config": dc.to_dict(),
     }
+    if rinfo is not None:
+        # pass-by-pass provenance: replay order, batches, moves, cut trace
+        provenance["restream"] = rinfo.to_dict()
     return PartitionResult(
         labels=labels,
         k=dc.buffcut.k,

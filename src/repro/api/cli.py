@@ -46,7 +46,12 @@ def _add_partition_parser(sub: "argparse._SubParsersAction") -> None:
     p.add_argument("--queue-depth", type=int, default=4, help="pipelined: task queue bound")
     p.add_argument("--read-ahead", type=int, default=64, help="pipelined: read-ahead records")
     p.add_argument("--restream", type=int, default=0, metavar="N",
-                   help="restreaming refinement passes (memory-only post-pass)")
+                   help="restreaming refinement passes (replays the stream "
+                        "out-of-core on disk sources)")
+    p.add_argument("--restream-order", default="stream",
+                   choices=["stream", "priority"],
+                   help="replay order for restream passes: contiguous stream "
+                        "order or gain-prioritized δ-batches")
     p.add_argument("--materialize", action="store_true",
                    help="load a disk source into memory (required for "
                         "memory-only drivers on file sources)")
@@ -77,6 +82,7 @@ def _cmd_partition(args: argparse.Namespace) -> int:
         ordering=args.ordering,
         order_seed=args.order_seed,
         restream_passes=args.restream,
+        restream_order=args.restream_order,
         wave=args.wave,
         chunk=args.chunk,
         queue_depth=args.queue_depth,

@@ -4,8 +4,9 @@ Composes the existing config dataclasses instead of re-inventing them:
 `BuffCutConfig` (algorithm parameters, including the nested
 `MultilevelConfig`), `VectorizedConfig` (the vectorized driver's former
 loose kwargs) and `PipelineConfig` (the pipelined driver's), plus the
-facade-level knobs: which driver, which stream ordering, and how many
-restreaming post-passes.
+facade-level knobs: which driver, which stream ordering, and the
+restreaming post-pass count + replay order (`restream_passes` /
+`restream_order`, core/restream.py — streams out-of-core on disk sources).
 
 `DriverConfig.create` is the flat-kwarg builder the CLI and the
 `partition(source, k=..., driver=...)` convenience path share: every key is
@@ -21,12 +22,13 @@ from repro.core.buffcut import BuffCutConfig
 from repro.core.cuttana import CuttanaConfig
 from repro.core.multilevel import MultilevelConfig
 from repro.core.pipeline import PipelineConfig
+from repro.core.restream import RESTREAM_ORDERS
 from repro.core.vector_stream import VectorizedConfig
 
 ORDERINGS = ("natural", "random", "bfs", "konect")
 
 # flat-kwarg routing table for DriverConfig.create (CLI + partition(**kw))
-_TOP_KEYS = ("driver", "ordering", "order_seed", "restream_passes")
+_TOP_KEYS = ("driver", "ordering", "order_seed", "restream_passes", "restream_order")
 _BUFFCUT_KEYS = (
     "k", "eps", "buffer_size", "batch_size", "d_max", "score",
     "disc_factor", "gamma", "collect_stats",
@@ -61,6 +63,7 @@ class DriverConfig:
     vectorized: VectorizedConfig = dataclasses.field(default_factory=VectorizedConfig)
     pipeline: PipelineConfig = dataclasses.field(default_factory=PipelineConfig)
     restream_passes: int = 0
+    restream_order: str = "stream"
     ordering: str = "natural"
     order_seed: int = 0
 
@@ -72,6 +75,11 @@ class DriverConfig:
         if self.restream_passes < 0:
             raise ValueError(
                 f"restream_passes must be >= 0, got {self.restream_passes}"
+            )
+        if self.restream_order not in RESTREAM_ORDERS:
+            raise ValueError(
+                f"unknown restream_order {self.restream_order!r}: pick one of "
+                f"{RESTREAM_ORDERS}"
             )
 
     # ------------------------------------------------------- flat builder
@@ -140,6 +148,7 @@ class DriverConfig:
             "vectorized": self.vectorized.to_dict(),
             "pipeline": self.pipeline.to_dict(),
             "restream_passes": self.restream_passes,
+            "restream_order": self.restream_order,
             "ordering": self.ordering,
             "order_seed": self.order_seed,
         }
@@ -154,6 +163,7 @@ class DriverConfig:
             vectorized=VectorizedConfig.from_dict(d.get("vectorized", {})),
             pipeline=PipelineConfig.from_dict(d.get("pipeline", {})),
             restream_passes=d.get("restream_passes", 0),
+            restream_order=d.get("restream_order", "stream"),
             ordering=d.get("ordering", "natural"),
             order_seed=d.get("order_seed", 0),
         )

@@ -9,6 +9,7 @@ from repro.core.metrics import (
     internal_edge_ratio,
     internal_edge_ratio_adj,
     streaming_cut_increment,
+    IncrementalCut,
 )
 from repro.core.scores import ScoreSpec, get_score, ANR, CBS, HAA, NSS, CMS
 from repro.core.buffer import BucketPQ, VectorBuffer
@@ -30,7 +31,13 @@ from repro.core.multilevel import MultilevelConfig, multilevel_partition
 from repro.core.buffcut import BuffCutConfig, StreamStats, buffcut_partition
 from repro.core.heistream import heistream_partition
 from repro.core.cuttana import CuttanaConfig, cuttana_partition
-from repro.core.restream import restream, restream_pass
+from repro.core.restream import (
+    RESTREAM_ORDERS,
+    RestreamInfo,
+    restream,
+    restream_pass,
+    restream_refine,
+)
 from repro.core.vector_stream import (
     VectorizedConfig,
     buffcut_partition_vectorized,
@@ -41,6 +48,7 @@ from repro.core.pipeline import PipelineConfig, buffcut_partition_pipelined
 __all__ = [
     "edge_cut", "cut_ratio", "balance", "is_balanced", "block_loads", "l_max",
     "internal_edge_ratio", "internal_edge_ratio_adj", "streaming_cut_increment",
+    "IncrementalCut",
     "ScoreSpec", "get_score", "ANR", "CBS", "HAA", "NSS", "CMS",
     "BucketPQ", "VectorBuffer",
     "AdjacencyCache", "RescoreState", "weighted_degrees",
@@ -52,7 +60,8 @@ __all__ = [
     "BuffCutConfig", "StreamStats", "buffcut_partition",
     "heistream_partition",
     "CuttanaConfig", "cuttana_partition",
-    "restream", "restream_pass",
+    "restream", "restream_pass", "restream_refine",
+    "RestreamInfo", "RESTREAM_ORDERS",
     "VectorizedConfig", "buffcut_partition_vectorized", "score_kernel",
     "PipelineConfig", "buffcut_partition_pipelined",
 ]

@@ -141,6 +141,9 @@ class StreamStats:
     balance: float = 0.0              # max load / (c(V)/k) at stream end
     peak_resident_bytes: int = 0      # retained adjacency + read-ahead, peak
     stream_bytes_read: int = 0        # bytes pulled from the stream backend
+    # final per-block f64 loads — handed to restream_refine so a seeded
+    # restream skips its loads/cut prelude replay (one whole-file read saved)
+    block_loads: list = dataclasses.field(default_factory=list)
 
     @property
     def mean_ier(self) -> float:
@@ -150,6 +153,7 @@ class StreamStats:
         out = dataclasses.asdict(self)
         out["ier_per_batch"] = [float(x) for x in self.ier_per_batch]
         out["evictions"] = [int(x) for x in self.evictions]
+        out["block_loads"] = [float(x) for x in self.block_loads]
         return out
 
     @classmethod
@@ -291,6 +295,7 @@ def _buffcut_partition(
         evict_one()
     commit_batch()
     stats.balance = float(loads.max() / (p.n_total / cfg.k)) if p.n_total > 0 else 1.0
+    stats.block_loads = loads.tolist()
     stats.stream_bytes_read = stream.bytes_read
     stats.runtime_s = time.perf_counter() - t0
     return block, stats

@@ -81,6 +81,61 @@ def streaming_cut_increment(
     return float(np.sum(w[cross & ~mates]) + 0.5 * np.sum(w[cross & mates]))
 
 
+class IncrementalCut:
+    """Exact edge-cut maintenance under batch reassignment (restreaming).
+
+    Start from a known-exact total (`edge_cut` on a resident graph, or the
+    driver's streamed `StreamStats.cut_weight`), then bracket every batch
+    reassignment: `stage` while `block` still holds the batch's *old*
+    labels, `commit` after the new labels are written back.  Both sides are
+    computed from the batch's retained adjacency only
+    (`streaming_cut_increment`), so the maintainer runs out-of-core.  The
+    delta is exact because labels outside the batch are fixed during the
+    reassignment: edges to out-of-batch nodes count in full on both sides,
+    edges between batch mates appear twice in the slice and are halved on
+    both sides, and self-loops are never cut on either side.
+    """
+
+    def __init__(self, cut0: float):
+        self.cut_weight = float(cut0)
+        self._staged: float | None = None
+
+    def stage(
+        self,
+        bnodes: np.ndarray,
+        degs: np.ndarray,
+        nbr: np.ndarray,
+        w: np.ndarray,
+        block: np.ndarray,
+    ) -> None:
+        """Record the batch's cut contribution under its current labels
+        (call before detaching / relabeling the batch)."""
+        if self._staged is not None:
+            raise RuntimeError("IncrementalCut.stage called twice without commit")
+        self._staged = streaming_cut_increment(
+            bnodes, block[bnodes], degs, nbr, w, block
+        )
+
+    def commit(
+        self,
+        bnodes: np.ndarray,
+        new_labels: np.ndarray,
+        degs: np.ndarray,
+        nbr: np.ndarray,
+        w: np.ndarray,
+        block: np.ndarray,
+    ) -> float:
+        """Fold the batch's new contribution in (call after
+        ``block[bnodes] = new_labels``).  Returns the cut delta."""
+        if self._staged is None:
+            raise RuntimeError("IncrementalCut.commit called before stage")
+        after = streaming_cut_increment(bnodes, new_labels, degs, nbr, w, block)
+        delta = after - self._staged
+        self._staged = None
+        self.cut_weight += delta
+        return delta
+
+
 def internal_edge_ratio_adj(
     bnodes: np.ndarray, nbr: np.ndarray, w: np.ndarray, n: int
 ) -> float:

@@ -1,51 +1,333 @@
-"""Restreaming refinement (paper §3.5).
+"""Restreaming refinement (paper §3.5) — stream-native.
 
-Pass 1 is buffcut_partition (or any partitioner). Later passes replay the
-stream *without* buffering or prioritization: contiguous δ-batches are
-re-partitioned with batch-wise multilevel refinement against the fixed
-global assignment — batch nodes are detached (their load released, their
-aux edges computed from neighbors' current blocks) and reassigned jointly.
+Pass 1 is any partitioner.  Later passes replay the *stream* — in-memory
+`NodeStream` or disk-backed `DiskNodeStream`, METIS text or packed binary —
+in bounded δ-batches and re-partition each batch jointly against the fixed
+global assignment, exactly the way the three first-pass drivers commit
+batches: adjacency is retained only for the current batch (plus, in
+priority mode, the bounded buffer) in a `rescore.AdjacencyCache`, the batch
+model comes from `build_batch_model_from_adj`, and the full graph is never
+materialized.  Resident state beyond the stream's read-ahead window is the
+global label array (O(n)), the per-block float64 loads (O(k)), and that
+retained adjacency (DESIGN.md §4, "Restream substrate").
+
+Replay orders (`restream_order`):
+
+* ``"stream"`` — contiguous δ-batches in stream order: the paper's
+  restreaming rows (Table 2), where later passes skip buffering entirely.
+* ``"priority"`` — gain-prioritized replay in the spirit of prioritized
+  restreaming (Awadelkarim & Ugander, arXiv:2007.03131): a bounded buffer
+  of up to Q_max arrivals holds *streamed gain estimates* (weight to the
+  best-connected block minus weight to the current block, from the record's
+  adjacency and the live labels); when full, the δ highest-gain nodes are
+  evicted as one batch, so the nodes with the most to gain are re-decided
+  first while their estimates are freshest.
+
+In both orders, hub rows (deg > d_max) bypass the batch/buffer and are
+re-assigned immediately via Fennel — the same Alg. 1 bypass the first pass
+uses — so the residency bound never depends on hub degrees.
+
+The exact edge cut is maintained incrementally across every reassignment
+(`metrics.IncrementalCut`): each batch is staged under its old labels and
+committed under its new ones, with the delta computed from the batch's
+retained adjacency only — no full-graph recompute between passes, and the
+final `RestreamInfo.cut_weight` matches an offline `edge_cut` on the
+refined labels.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
-from repro.core._deprecation import require_csr
+from repro.graphs.stream import NodeStream, NodeStreamBase, as_node_stream
 from repro.core.buffcut import BuffCutConfig
-from repro.core.fennel import FennelParams
-from repro.core.batch_model import build_batch_model
+from repro.core.fennel import FennelParams, block_connectivity, fennel_choose
+from repro.core.batch_model import build_batch_model_from_adj
 from repro.core.multilevel import multilevel_partition
+from repro.core.metrics import IncrementalCut
+from repro.core.rescore import AdjacencyCache
+
+RESTREAM_ORDERS = ("stream", "priority")
 
 
-def restream_pass(
-    g: CSRGraph, block: np.ndarray, cfg: BuffCutConfig
-) -> np.ndarray:
-    g = require_csr(g, "restream")
+@dataclasses.dataclass
+class RestreamInfo:
+    """What a `restream_refine` call measured: the refreshed quality fields
+    the caller folds back into `StreamStats`, the canonical totals the
+    Fennel params were built from (parity-pinned against the first pass),
+    and a per-pass provenance log."""
+
+    cut_weight: float = 0.0
+    balance: float = 0.0
+    n_total: float = 0.0
+    m_total: float = 0.0
+    order: str = "stream"
+    passes: list = dataclasses.field(default_factory=list)  # per-pass dicts
+    peak_resident_bytes: int = 0
+    stream_bytes_read: int = 0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _check_replay(stream: NodeStreamBase, seen: int) -> None:
+    """A replay that comes up short means the source is exhausted (one-shot
+    foreign stream) or truncated — fail loudly, never refine silently."""
+    if seen != stream.n:
+        raise ValueError(
+            f"stream replay yielded {seen} of {stream.n} records: the source "
+            "is not replayable (one-shot stream?) or is truncated. Restream "
+            "needs a CSRGraph, a NodeStream, or a disk-backed stream; "
+            "materialize one-shot streams first "
+            "(repro.api.resolve_source(...).materialize())."
+        )
+
+
+def _replay_totals(
+    stream: NodeStreamBase, block: np.ndarray, k: int, need_cut: bool
+) -> tuple[np.ndarray, float, int]:
+    """One bounded-memory prelude pass: per-block loads (float64,
+    accumulated in id order so every stream backend agrees bit-exactly)
+    and — when the caller has no driver-streamed cut to hand over — the
+    exact starting edge cut, each undirected edge charged once at its
+    higher-id endpoint (self-loops are never cut)."""
+    loads = np.zeros(k, dtype=np.float64)
+    if isinstance(stream, NodeStream) and not need_cut:
+        # graph-backed fast path: np.add.at accumulates element-by-element
+        # in id order — bit-identical to the per-record loop below, without
+        # a python-level replay of the whole stream
+        np.add.at(loads, block, stream._g.node_w.astype(np.float64))
+        return loads, 0.0, 0
+    cut = 0.0
+    peak = 0
+    seen = 0
+    for v, nbrs, w, node_w in stream:
+        loads[block[v]] += float(node_w)
+        if need_cut and nbrs.size:
+            nb = nbrs.astype(np.int64)
+            cross = (nb < v) & (block[nb] != block[v])
+            if cross.any():
+                cut += float(np.sum(w[cross].astype(np.float64)))
+        if stream.resident_bytes > peak:
+            peak = stream.resident_bytes
+        seen += 1
+    _check_replay(stream, seen)
+    return loads, cut, peak
+
+
+def _move_gain(v: int, nbrs: np.ndarray, w: np.ndarray, block: np.ndarray, k: int) -> float:
+    """Streamed gain estimate: weight to the best-connected block minus
+    weight to the current block (>= 0; 0 when v already sits best)."""
+    if nbrs.size == 0:
+        return 0.0
+    conn = block_connectivity(nbrs.astype(np.int64), w, block, k)
+    return float(conn.max() - conn[block[v]])
+
+
+def restream_refine(
+    source: "CSRGraph | NodeStreamBase",
+    block: np.ndarray,
+    cfg: BuffCutConfig,
+    passes: int,
+    *,
+    order: str = "stream",
+    initial_cut: "float | None" = None,
+    initial_loads: "np.ndarray | None" = None,
+) -> tuple[np.ndarray, RestreamInfo]:
+    """Apply `passes` restreaming passes over any replayable stream source.
+
+    `initial_cut` seeds the incremental maintainer with a known-exact cut
+    (the driver's streamed `StreamStats.cut_weight`) and `initial_loads`
+    with the driver's final per-block loads (`StreamStats.block_loads`);
+    with both supplied the prelude replay is skipped entirely — each
+    restream pass then costs exactly one stream read.  Without them the
+    prelude pass computes both.  Returns the refined labels and the
+    `RestreamInfo` bookkeeping (refreshed cut/balance, canonical totals,
+    per-pass log, measured peak residency).
+    """
+    if order not in RESTREAM_ORDERS:
+        raise ValueError(
+            f"unknown restream order {order!r}: pick one of {RESTREAM_ORDERS}"
+        )
+    if passes < 0:
+        raise ValueError(f"restream passes must be >= 0, got {passes}")
+    stream = as_node_stream(source)
+    block = np.asarray(block, dtype=np.int64).copy()
+    if block.shape[0] != stream.n:
+        raise ValueError(
+            f"label array has {block.shape[0]} entries, stream has {stream.n} nodes"
+        )
+    if block.size and ((block < 0).any() or (block >= cfg.k).any()):
+        raise ValueError(
+            "restream needs a complete first-pass assignment: every label in "
+            f"[0, {cfg.k})"
+        )
+    # canonical totals (graphs/stream.py): the restream FennelParams are
+    # bit-identical to the first-pass params on every stream backend
     p = FennelParams(
-        k=cfg.k, n_total=float(g.node_w.sum()), m_total=g.total_edge_weight(),
+        k=cfg.k, n_total=stream.n_total, m_total=stream.m_total,
         eps=cfg.eps, gamma=cfg.gamma,
     )
-    block = block.copy()
-    loads = np.zeros(cfg.k, dtype=np.float64)
-    np.add.at(loads, block, g.node_w.astype(np.float64))
-    for start in range(0, g.n, cfg.batch_size):
-        bnodes = np.arange(start, min(start + cfg.batch_size, g.n), dtype=np.int64)
+    info = RestreamInfo(order=order, n_total=p.n_total, m_total=p.m_total)
+    bytes0 = stream.bytes_read
+    if initial_loads is not None and initial_cut is not None:
+        loads = np.asarray(initial_loads, dtype=np.float64).copy()
+        if loads.shape[0] != cfg.k:
+            raise ValueError(
+                f"initial_loads has {loads.shape[0]} blocks, config has k={cfg.k}"
+            )
+    else:
+        loads, cut0, peak0 = _replay_totals(
+            stream, block, cfg.k, need_cut=initial_cut is None
+        )
+        info.peak_resident_bytes = peak0
+        if initial_cut is None:
+            initial_cut = cut0
+    cm = IncrementalCut(initial_cut)
+    for _ in range(passes):
+        cut_before = cm.cut_weight
+        log = _restream_pass_impl(stream, block, loads, cm, cfg, p, order, info)
+        log["cut_before"] = cut_before
+        log["cut_after"] = cm.cut_weight
+        info.passes.append(log)
+    info.cut_weight = cm.cut_weight
+    info.balance = float(loads.max() / (p.n_total / cfg.k)) if p.n_total > 0 else 1.0
+    info.stream_bytes_read = stream.bytes_read - bytes0
+    return block, info
+
+
+def _restream_pass_impl(
+    stream: NodeStreamBase,
+    block: np.ndarray,
+    loads: np.ndarray,
+    cm: IncrementalCut,
+    cfg: BuffCutConfig,
+    p: FennelParams,
+    order: str,
+    info: RestreamInfo,
+) -> dict:
+    n = stream.n
+    adj = AdjacencyCache()
+    log = {"order": order, "n_batches": 0, "n_hubs": 0, "moved": 0}
+
+    def note_peak(extra: int = 0) -> None:
+        resident = adj.resident_bytes + stream.resident_bytes + extra
+        if resident > info.peak_resident_bytes:
+            info.peak_resident_bytes = resident
+
+    def commit(bnodes: np.ndarray) -> None:
+        nbr_c, w_c, degs = adj.slice(bnodes)
+        node_w_b = adj.node_weights(bnodes)
+        old = block[bnodes].copy()
+        cm.stage(bnodes, degs, nbr_c, w_c, block)
         # detach the batch: release loads, hide current labels from the model
-        np.add.at(loads, block[bnodes], -g.node_w[bnodes].astype(np.float64))
+        np.add.at(loads, old, -node_w_b.astype(np.float64))
         block[bnodes] = -1
-        model = build_batch_model(g, bnodes, block, cfg.k)
+        model = build_batch_model_from_adj(
+            n, bnodes, degs, nbr_c, w_c, node_w_b, block, cfg.k
+        )
         labels = multilevel_partition(model.graph, model.pinned_block, p, loads, cfg.ml)
         new = labels[: bnodes.shape[0]]
         block[bnodes] = new
-        np.add.at(loads, new, g.node_w[bnodes].astype(np.float64))
-    return block
+        np.add.at(loads, new, node_w_b.astype(np.float64))
+        cm.commit(bnodes, new, degs, nbr_c, w_c, block)
+        note_peak(model.graph.indices.nbytes + model.graph.edge_w.nbytes)
+        log["n_batches"] += 1
+        log["moved"] += int(np.count_nonzero(new != old))
+        adj.drop(bnodes)
+
+    one = np.empty(1, dtype=np.int64)
+
+    def commit_hub(v: int, node_w: float) -> None:
+        # hub bypass (Alg. 1): immediate Fennel re-assignment keeps the
+        # batch/buffer residency bound independent of hub degrees
+        one[0] = v
+        nbr_c, w_c, degs = adj.slice(one)
+        cm.stage(one, degs, nbr_c, w_c, block)
+        old_b = int(block[v])
+        loads[old_b] -= float(node_w)
+        block[v] = -1
+        i = fennel_choose(nbr_c, w_c, float(node_w), block, loads, p)
+        block[v] = i
+        loads[i] += float(node_w)
+        cm.commit(one, np.asarray([i], dtype=np.int64), degs, nbr_c, w_c, block)
+        log["n_hubs"] += 1
+        log["moved"] += int(i != old_b)
+        adj.drop(one)
+
+    seen = 0
+    if order == "stream":
+        # contiguous δ-batches in stream order (paper Table 2 replay)
+        pend: list[int] = []
+        for v, nbrs, w, node_w in stream:
+            adj.put(v, nbrs, w, node_w)
+            note_peak()
+            seen += 1
+            if nbrs.size > cfg.d_max:
+                commit_hub(v, node_w)
+                continue
+            pend.append(v)
+            if len(pend) == cfg.batch_size:
+                commit(np.asarray(pend, dtype=np.int64))
+                pend.clear()
+        if pend:
+            commit(np.asarray(pend, dtype=np.int64))
+        _check_replay(stream, seen)
+        return log
+
+    # priority: bounded buffer of streamed gain estimates, δ best evict first
+    buf: list[int] = []
+    gains: list[float] = []
+
+    def evict_batch() -> None:
+        nonlocal buf, gains
+        take = min(cfg.batch_size, len(buf))
+        # highest gain first, node id breaks ties — deterministic on every
+        # backend because the gains are computed from identical records
+        idx = np.lexsort((np.asarray(buf, dtype=np.int64),
+                          -np.asarray(gains, dtype=np.float64)))
+        pick = idx[:take]
+        commit(np.asarray(buf, dtype=np.int64)[pick])
+        keep = np.ones(len(buf), dtype=bool)
+        keep[pick] = False
+        buf = [u for u, k_ in zip(buf, keep) if k_]
+        gains = [g_ for g_, k_ in zip(gains, keep) if k_]
+
+    for v, nbrs, w, node_w in stream:
+        adj.put(v, nbrs, w, node_w)
+        note_peak()
+        seen += 1
+        if nbrs.size > cfg.d_max:
+            commit_hub(v, node_w)
+            continue
+        buf.append(v)
+        gains.append(_move_gain(v, nbrs, w, block, cfg.k))
+        while len(buf) >= cfg.buffer_size:
+            evict_batch()
+    while buf:
+        evict_batch()
+    _check_replay(stream, seen)
+    return log
+
+
+def restream_pass(
+    source: "CSRGraph | NodeStreamBase", block: np.ndarray, cfg: BuffCutConfig
+) -> np.ndarray:
+    """One restreaming pass in stream order (legacy signature; accepts any
+    CSRGraph or replayable NodeStreamBase, disk-backed included)."""
+    out, _ = restream_refine(source, block, cfg, 1)
+    return out
 
 
 def restream(
-    g: CSRGraph, block: np.ndarray, cfg: BuffCutConfig, passes: int
+    source: "CSRGraph | NodeStreamBase",
+    block: np.ndarray,
+    cfg: BuffCutConfig,
+    passes: int,
+    order: str = "stream",
 ) -> np.ndarray:
     """Apply `passes` additional restreaming passes (paper Table 2 rows)."""
-    for _ in range(passes):
-        block = restream_pass(g, block, cfg)
-    return block
+    out, _ = restream_refine(source, block, cfg, passes, order=order)
+    return out

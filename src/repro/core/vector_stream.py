@@ -241,6 +241,7 @@ def _buffcut_partition_vectorized(
         admit(buf.evict(min(wave, len(buf))))
     commit_batch()
     stats.balance = float(loads.max() / (p.n_total / cfg.k)) if p.n_total > 0 else 1.0
+    stats.block_loads = loads.tolist()
     stats.stream_bytes_read = stream.bytes_read
     stats.runtime_s = time.perf_counter() - t0
     return block, stats

@@ -246,9 +246,56 @@ def test_memory_only_rejects_disk_stream(name, files):
         partition(files["binary"], _cfg(), driver=name)
 
 
-def test_restream_rejects_disk_stream(files):
-    with pytest.raises(TypeError, match="memory-only"):
-        partition(files["binary"], _cfg(), restream_passes=1)
+def test_restream_on_disk_stream_matches_memory(base_graph, files):
+    """ISSUE 5 tentpole: restream_passes works out-of-core and the labels
+    are bit-identical to the in-memory restream path."""
+    cfg = _cfg()
+    r_mem = partition(base_graph, cfg, restream_passes=2)
+    r_disk = partition(files["binary"], cfg, restream_passes=2)
+    assert np.array_equal(r_mem.labels, r_disk.labels)
+    assert r_mem.stats.cut_weight == r_disk.stats.cut_weight
+    assert r_mem.stats.balance == r_disk.stats.balance
+    # stats refresh: the streamed cut matches an offline recompute on the
+    # *refined* labels (regression: it used to describe pass 1's labels)
+    from repro.core import balance as balance_metric, edge_cut
+
+    assert r_disk.stats.cut_weight == pytest.approx(edge_cut(base_graph, r_disk.labels))
+    assert r_disk.stats.balance == pytest.approx(
+        balance_metric(base_graph, r_disk.labels, r_disk.k)
+    )
+    # no resident graph on the disk path: cut_ratio comes from the stats
+    assert r_disk.graph is None
+    assert r_disk.cut_weight == r_mem.cut_weight
+
+
+def test_restream_stats_refresh_after_refinement(base_graph):
+    """Regression (ISSUE 5 satellite): StreamStats.cut_weight/balance and
+    the serialized result must reflect the post-restream labels."""
+    from repro.core import balance as balance_metric, edge_cut
+
+    cfg = _cfg()
+    res = partition(base_graph, cfg, restream_passes=2, restream_order="priority")
+    assert res.stats.cut_weight == pytest.approx(edge_cut(base_graph, res.labels))
+    assert res.stats.balance == pytest.approx(
+        balance_metric(base_graph, res.labels, res.k)
+    )
+    blob = json.loads(res.to_json())
+    assert blob["stats"]["cut_weight"] == pytest.approx(res.stats.cut_weight)
+    log = blob["provenance"]["restream"]
+    assert log["order"] == "priority" and len(log["passes"]) == 2
+    assert log["passes"][-1]["cut_after"] == pytest.approx(res.stats.cut_weight)
+    # canonical-totals parity (ISSUE 5 satellite): restream params came from
+    # the same stream totals as the first-pass FennelParams
+    assert log["n_total"] == blob["provenance"]["n_total"]
+    assert log["m_total"] == blob["provenance"]["m_total"]
+
+
+def test_restream_order_knob_routes_and_validates(base_graph):
+    dc = DriverConfig.create(k=4, restream_passes=1, restream_order="priority")
+    assert dc.restream_order == "priority"
+    assert DriverConfig.from_json(dc.to_json()).restream_order == "priority"
+    with pytest.raises(ValueError, match="restream_order"):
+        DriverConfig.create(restream_order="bogus")
 
 
 def test_materialize_unlocks_memory_only(base_graph, files):

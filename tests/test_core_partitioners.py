@@ -100,13 +100,15 @@ def test_buffcut_beats_heistream_on_random_order(random_grid):
 
 
 def test_restream_improves(random_grid):
-    """Paper Table 2 direction: extra passes reduce cut, keep balance."""
+    """Paper Table 2 direction: extra passes reduce cut, keep balance —
+    in both replay orders (ISSUE 5 restream_order knob)."""
     g = random_grid
     cfg = _cfg(g)
     b0, _ = buffcut_partition(g, cfg)
-    b1 = restream(g, b0, cfg, 1)
-    assert edge_cut(g, b1) <= edge_cut(g, b0)
-    assert is_balanced(g, b1, cfg.k, cfg.eps)
+    for order in ("stream", "priority"):
+        b1 = restream(g, b0, cfg, 1, order=order)
+        assert edge_cut(g, b1) <= edge_cut(g, b0), order
+        assert is_balanced(g, b1, cfg.k, cfg.eps), order
 
 
 def test_hub_bypass(small_rmat):

@@ -1,0 +1,405 @@
+"""Restream substrate (ISSUE 5): stream-native restreaming refinement.
+
+Pins (a) the incremental cut maintainer against full recomputes under
+random reassignment sequences — including self-loop and isolated-node
+adjacency rows, (b) disk == memory bit-identity for both replay orders,
+(c) the canonical-totals parity of the restream FennelParams, (d) the
+memory ceiling on a 16x-buffer disk graph (restream peak resident is
+loads + labels + batch adjacency, measured), and (e) the CLI paths:
+``--restream N`` on a disk source works out-of-core, memory-only drivers
+still fail actionably.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.graphs import (
+    CSRGraph,
+    DiskNodeStream,
+    grid_mesh_to_disk,
+    read_packed,
+    rmat_graph,
+    write_metis,
+    write_packed,
+)
+from repro.core import (
+    BuffCutConfig,
+    IncrementalCut,
+    RestreamInfo,
+    balance,
+    edge_cut,
+    restream,
+    restream_pass,
+    restream_refine,
+)
+from repro.core.buffcut import _buffcut_partition
+from repro.api import partition
+from repro.api.cli import main as cli_main
+
+
+def _cfg(**kw) -> BuffCutConfig:
+    base = dict(k=4, buffer_size=24, batch_size=12, d_max=48, score="haa")
+    base.update(kw)
+    return BuffCutConfig(**base)
+
+
+# ------------------------------------------------ incremental cut maintainer
+
+
+def _random_adjacency(rng, n: int, with_self_loops: bool):
+    """Random weighted undirected graph as explicit adjacency lists; leaves
+    some nodes isolated and (optionally) adds self-loop rows."""
+    edges: dict = {}
+    for _ in range(3 * n):
+        u, v = int(rng.integers(n)), int(rng.integers(n))
+        if not with_self_loops and u == v:
+            continue
+        a, b = min(u, v), max(u, v)
+        edges[(a, b)] = edges.get((a, b), 0.0) + float(rng.integers(1, 5))
+    adj = {v: ([], []) for v in range(n)}
+    for (a, b), w in edges.items():
+        adj[a][0].append(b)
+        adj[a][1].append(w)
+        if b != a:  # a self-loop appears once in its own row
+            adj[b][0].append(a)
+            adj[b][1].append(w)
+    adj = {
+        v: (np.asarray(ids, dtype=np.int64), np.asarray(ws, dtype=np.float64))
+        for v, (ids, ws) in adj.items()
+    }
+    return edges, adj
+
+
+def _slice_of(adj, bnodes):
+    nbr = np.concatenate([adj[int(v)][0] for v in bnodes])
+    w = np.concatenate([adj[int(v)][1] for v in bnodes])
+    degs = np.array([adj[int(v)][0].shape[0] for v in bnodes], dtype=np.int64)
+    return nbr, w, degs
+
+
+def _brute_cut(edges, block) -> float:
+    return float(sum(w for (a, b), w in edges.items()
+                     if a != b and block[a] != block[b]))
+
+
+@pytest.mark.parametrize("with_self_loops", [False, True])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_incremental_cut_matches_recompute(seed, with_self_loops):
+    """Random reassignment sequences: the maintained cut equals a brute
+    recompute after every commit, self-loops and isolated rows included."""
+    rng = np.random.default_rng(seed)
+    n, k = 40, 4
+    edges, adj = _random_adjacency(rng, n, with_self_loops)
+    block = rng.integers(0, k, n).astype(np.int64)
+    cm = IncrementalCut(_brute_cut(edges, block))
+    for _ in range(30):
+        b = int(rng.integers(1, 6))
+        bnodes = rng.choice(n, size=b, replace=False).astype(np.int64)
+        nbr, w, degs = _slice_of(adj, bnodes)
+        cm.stage(bnodes, degs, nbr, w, block)
+        block[bnodes] = rng.integers(0, k, b)
+        cm.commit(bnodes, block[bnodes], degs, nbr, w, block)
+        assert cm.cut_weight == pytest.approx(_brute_cut(edges, block))
+
+
+@pytest.mark.parametrize("seed", [5, 6])
+def test_incremental_cut_on_csr_slices(seed):
+    """Same invariant through the CSR slice path the drivers use, singleton
+    (hub fast-path) batches included, vs metrics.edge_cut / cut_ratio."""
+    rng = np.random.default_rng(seed)
+    g = rmat_graph(96, 5, seed=seed)
+    block = rng.integers(0, 4, g.n).astype(np.int64)
+    cm = IncrementalCut(edge_cut(g, block))
+    for trial in range(25):
+        b = 1 if trial % 3 == 0 else int(rng.integers(2, 9))
+        bnodes = rng.choice(g.n, size=b, replace=False).astype(np.int64)
+        pos = g.slice_indices(bnodes)
+        degs = (g.indptr[bnodes + 1] - g.indptr[bnodes]).astype(np.int64)
+        nbr = g.indices[pos].astype(np.int64)
+        w = g.edge_w[pos].astype(np.float64)
+        cm.stage(bnodes, degs, nbr, w, block)
+        block[bnodes] = rng.integers(0, 4, b)
+        cm.commit(bnodes, block[bnodes], degs, nbr, w, block)
+        assert cm.cut_weight == pytest.approx(edge_cut(g, block))
+
+
+def test_incremental_cut_stage_commit_protocol():
+    cm = IncrementalCut(0.0)
+    one = np.array([0], dtype=np.int64)
+    e = np.empty(0, dtype=np.int64)
+    with pytest.raises(RuntimeError, match="before stage"):
+        cm.commit(one, np.array([1]), np.array([0]), e, np.empty(0), np.zeros(2, np.int64))
+    cm.stage(one, np.array([0]), e, np.empty(0), np.zeros(2, np.int64))
+    with pytest.raises(RuntimeError, match="twice"):
+        cm.stage(one, np.array([0]), e, np.empty(0), np.zeros(2, np.int64))
+
+
+# ------------------------------------------------------- stream-native passes
+
+
+@pytest.fixture(scope="module")
+def base_graph():
+    return rmat_graph(128, 5, seed=7)
+
+
+@pytest.fixture(scope="module")
+def packed_file(base_graph, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("restream") / "g.bcsr")
+    write_packed(base_graph, path)
+    return path
+
+
+@pytest.mark.parametrize("order", ["stream", "priority"])
+def test_disk_restream_bit_identical_to_memory(order, base_graph, packed_file):
+    cfg = _cfg()
+    b0, s0 = _buffcut_partition(base_graph, cfg)
+    b_mem, info_mem = restream_refine(
+        base_graph, b0, cfg, 2, order=order, initial_cut=s0.cut_weight
+    )
+    ds = DiskNodeStream(packed_file)
+    b_disk0, s_disk0 = _buffcut_partition(ds, cfg)
+    b_disk, info_disk = restream_refine(
+        ds, b_disk0, cfg, 2, order=order, initial_cut=s_disk0.cut_weight
+    )
+    assert np.array_equal(b_mem, b_disk)
+    assert info_mem.cut_weight == info_disk.cut_weight
+    assert info_mem.balance == info_disk.balance
+    assert info_mem.passes == info_disk.passes
+    # the maintained cut is exact: matches the offline recompute
+    assert info_mem.cut_weight == pytest.approx(edge_cut(base_graph, b_mem))
+    assert info_mem.balance == pytest.approx(balance(base_graph, b_mem, cfg.k))
+
+
+def test_restream_params_use_canonical_totals(base_graph, packed_file):
+    """Regression (ISSUE 5 satellite): restream FennelParams come from the
+    canonical stream totals, not naive per-graph sums — identical across
+    backends and identical to the first-pass params."""
+    cfg = _cfg()
+    ds = DiskNodeStream(packed_file)
+    b0, _ = _buffcut_partition(base_graph, cfg)
+    _, info_mem = restream_refine(base_graph, b0, cfg, 1)
+    _, info_disk = restream_refine(ds, b0, cfg, 1)
+    assert info_mem.n_total == info_disk.n_total == ds.n_total
+    assert info_mem.m_total == info_disk.m_total == ds.m_total
+
+
+def test_restream_without_initial_cut_matches_seeded(base_graph, packed_file):
+    """The prelude-computed starting cut agrees with the driver-streamed one
+    (same labels either way; the cut trace stays exact)."""
+    cfg = _cfg()
+    b0, s0 = _buffcut_partition(base_graph, cfg)
+    b_seeded, info_seeded = restream_refine(
+        base_graph, b0, cfg, 1, initial_cut=s0.cut_weight
+    )
+    b_fresh, info_fresh = restream_refine(DiskNodeStream(packed_file), b0, cfg, 1)
+    assert np.array_equal(b_seeded, b_fresh)
+    assert info_seeded.cut_weight == pytest.approx(info_fresh.cut_weight)
+
+
+def test_priority_order_is_deterministic_and_balanced(base_graph):
+    cfg = _cfg()
+    b0, _ = _buffcut_partition(base_graph, cfg)
+    b1, i1 = restream_refine(base_graph, b0, cfg, 2, order="priority")
+    b2, i2 = restream_refine(base_graph, b0, cfg, 2, order="priority")
+    assert np.array_equal(b1, b2) and i1.cut_weight == i2.cut_weight
+    assert (b1 >= 0).all() and (b1 < cfg.k).all()
+    from repro.core import is_balanced
+
+    assert is_balanced(base_graph, b1, cfg.k, cfg.eps)
+
+
+@pytest.mark.parametrize("order", ["stream", "priority"])
+def test_hub_bypass_keeps_residency_degree_independent(order):
+    """Hub rows (deg > d_max) are re-assigned immediately in both replay
+    orders, so peak resident never scales with hub degree; the pass log
+    counts them and the labels stay complete."""
+    from repro.graphs import star_graph
+
+    g = star_graph(300)
+    cfg = BuffCutConfig(k=4, buffer_size=32, batch_size=16, d_max=50)
+    b0, _ = _buffcut_partition(g, cfg)
+    b1, info = restream_refine(g, b0, cfg, 1, order=order)
+    assert info.passes[0]["n_hubs"] == 1  # the star center
+    assert (b1 >= 0).all()
+    assert info.cut_weight == pytest.approx(edge_cut(g, b1))
+
+
+def test_restream_legacy_wrappers_compose(base_graph):
+    """restream(g, b, cfg, 2) == two restream_pass applications (stream
+    order replays are stateless between passes except labels/loads)."""
+    cfg = _cfg()
+    b0, _ = _buffcut_partition(base_graph, cfg)
+    two = restream(base_graph, b0, cfg, 2)
+    one = restream_pass(base_graph, b0, cfg)
+    one = restream_pass(base_graph, one, cfg)
+    assert np.array_equal(two, one)
+
+
+def test_restream_validates_inputs(base_graph):
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="restream order"):
+        restream_refine(base_graph, np.zeros(base_graph.n, np.int64), cfg, 1, order="nope")
+    with pytest.raises(ValueError, match="entries"):
+        restream_refine(base_graph, np.zeros(3, np.int64), cfg, 1)
+    incomplete = np.zeros(base_graph.n, np.int64)
+    incomplete[0] = -1
+    with pytest.raises(ValueError, match="complete"):
+        restream_refine(base_graph, incomplete, cfg, 1)
+
+
+def test_isolated_nodes_stream_io_roundtrip(tmp_path):
+    """Isolated-node rows (blank METIS lines) survive the whole restream
+    path on both backends."""
+    edges = np.array([[0, 1], [1, 2], [4, 5], [5, 6], [0, 2], [4, 6]])
+    g = CSRGraph.from_edges(8, edges)  # nodes 3 and 7 isolated
+    path = str(tmp_path / "iso.metis")
+    write_metis(g, path)
+    cfg = BuffCutConfig(k=2, buffer_size=4, batch_size=2, d_max=16)
+    b0, s0 = _buffcut_partition(g, cfg)
+    b_mem, info_mem = restream_refine(g, b0, cfg, 1, order="priority")
+    b_disk, info_disk = restream_refine(
+        DiskNodeStream(path, io_chunk_bytes=7), b0, cfg, 1, order="priority"
+    )
+    assert np.array_equal(b_mem, b_disk)
+    assert info_mem.cut_weight == info_disk.cut_weight
+    assert info_mem.cut_weight == pytest.approx(edge_cut(g, b_mem))
+
+
+# ----------------------------------------------------------- memory ceiling
+
+
+def _restream_resident_bound(cfg: BuffCutConfig, max_deg: int, io_chunk: int) -> int:
+    """Batch (stream order) or buffer+batch (priority) adjacency at cache
+    dtypes, the transient batch model, and the reader window — the O(n)
+    labels and O(k) loads are the streaming budget, as in the first pass."""
+    per_node = max_deg * 16 + 96
+    return (cfg.buffer_size + 2 * cfg.batch_size + 2) * per_node + 2 * io_chunk + per_node
+
+
+@pytest.mark.parametrize("order", ["stream", "priority"])
+def test_memory_ceiling_on_16x_graph(order, tmp_path):
+    """ISSUE 5 acceptance: restream on a disk graph 16x the buffer keeps
+    peak resident within loads + labels + batch adjacency, bit-identical
+    to the in-memory restream."""
+    side = 64  # n = 4096 = 16x the 256-node buffer
+    path = str(tmp_path / "grid.bcsr")
+    grid_mesh_to_disk(side, path)
+    io_chunk = 1 << 12
+    cfg = BuffCutConfig(k=4, buffer_size=256, batch_size=128, d_max=64)
+    stream = DiskNodeStream(path, io_chunk_bytes=io_chunk)
+    assert stream.n >= 16 * cfg.buffer_size
+    b0, s0 = _buffcut_partition(stream, cfg)
+    b1, info = restream_refine(
+        stream, b0, cfg, 2, order=order, initial_cut=s0.cut_weight
+    )
+    bound = _restream_resident_bound(cfg, max_deg=8, io_chunk=io_chunk)
+    assert info.peak_resident_bytes <= bound, (info.peak_resident_bytes, bound)
+    full_graph_bytes = os.path.getsize(path) * 4
+    assert info.peak_resident_bytes < 0.5 * full_graph_bytes
+    # each pass re-reads the file once (plus the loads/cut prelude)
+    assert info.stream_bytes_read >= 3 * (os.path.getsize(path) - 64)
+    g = read_packed(path)
+    b_mem, _ = _buffcut_partition(g, cfg)
+    b_mem1, info_mem = restream_refine(g, b_mem, cfg, 2, order=order,
+                                       initial_cut=s0.cut_weight)
+    assert np.array_equal(b1, b_mem1)
+    assert info.cut_weight == pytest.approx(edge_cut(g, b1))
+
+
+def test_partition_api_16x_disk_restream_acceptance(tmp_path):
+    """`partition("disk.bcsr", restream_passes=2)` end-to-end: labels match
+    the in-memory path, StreamStats carries the bounded peak + exact cut."""
+    side = 64
+    path = str(tmp_path / "grid.bcsr")
+    grid_mesh_to_disk(side, path)
+    cfg = dict(k=4, buffer_size=256, batch_size=128, d_max=64)
+    r_disk = partition(path, restream_passes=2, **cfg)
+    g = read_packed(path)
+    r_mem = partition(g, restream_passes=2, **cfg)
+    assert np.array_equal(r_disk.labels, r_mem.labels)
+    assert r_disk.stats.cut_weight == pytest.approx(edge_cut(g, r_disk.labels))
+    bound = _restream_resident_bound(
+        BuffCutConfig(**cfg), max_deg=8,
+        io_chunk=DiskNodeStream(path).io_chunk_bytes,
+    )
+    assert r_disk.stats.peak_resident_bytes <= bound
+    # driver-seeded restream skips the prelude: total reads are the first
+    # pass + exactly one replay per restream pass (3x file, not 4x)
+    file_bytes = os.path.getsize(path)
+    assert r_disk.stats.stream_bytes_read >= 3 * (file_bytes - 64)
+    assert r_disk.stats.stream_bytes_read < 3.5 * file_bytes
+
+
+# -------------------------------------------------------------------- CLI
+
+
+def test_cli_restream_on_disk_source(packed_file, tmp_path, capsys):
+    out = str(tmp_path / "res.json")
+    rc = cli_main([
+        "partition", packed_file, "-k", "4", "--restream", "2",
+        "--restream-order", "priority", "--json", out,
+    ])
+    assert rc == 0
+    blob = json.loads(open(out).read())
+    log = blob["provenance"]["restream"]
+    assert log["order"] == "priority" and len(log["passes"]) == 2
+    assert blob["stats"]["cut_weight"] == pytest.approx(log["cut_weight"])
+    g = read_packed(packed_file)
+    assert blob["stats"]["cut_weight"] == pytest.approx(
+        edge_cut(g, np.asarray(blob["labels"]))
+    )
+
+
+def test_cli_memory_only_driver_still_actionable(packed_file, capsys):
+    """The genuinely memory-only combination keeps its actionable error."""
+    rc = cli_main(["partition", packed_file, "-k", "4", "--driver", "heistream"])
+    assert rc == 1
+    err = capsys.readouterr().err
+    assert "memory-only" in err and "--materialize" in err
+    rc = cli_main([
+        "partition", packed_file, "-k", "4", "--driver", "heistream",
+        "--materialize", "--restream", "1",
+    ])
+    assert rc == 0
+
+
+def test_foreign_one_shot_stream_materialized_for_restream(base_graph):
+    """A stream with no file behind it can't replay; `partition` must load
+    it up front instead of handing restream an exhausted iterator."""
+    from repro.graphs.stream import NodeStream, NodeStreamBase
+
+    class OneShot(NodeStreamBase):
+        def __init__(self, inner):
+            self.n, self.m = inner.n, inner.m
+            self._nt, self._mt = inner.n_total, inner.m_total
+            self._it = iter(inner)  # consumable exactly once
+
+        @property
+        def n_total(self):
+            return self._nt
+
+        @property
+        def m_total(self):
+            return self._mt
+
+        def __iter__(self):
+            return self._it
+
+    kw = dict(k=4, buffer_size=24, batch_size=12, d_max=48, restream_passes=1)
+    ref = partition(base_graph, **kw)
+    res = partition(OneShot(NodeStream(base_graph)), **kw)
+    assert np.array_equal(ref.labels, res.labels)
+    assert res.stats.cut_weight == pytest.approx(ref.stats.cut_weight)
+    # calling restream directly on an exhausted stream fails loudly instead
+    # of silently returning the labels unrefined
+    with pytest.raises(ValueError, match="not replayable"):
+        restream_refine(OneShot(NodeStream(base_graph)), ref.labels, _cfg(), 1)
+
+
+def test_restream_info_round_trips():
+    info = RestreamInfo(cut_weight=3.5, order="priority",
+                        passes=[{"order": "priority", "n_batches": 2}])
+    d = info.to_dict()
+    assert d["cut_weight"] == 3.5 and d["passes"][0]["n_batches"] == 2

@@ -31,6 +31,7 @@ from repro.core import (
     buffcut_partition_pipelined,
     buffcut_partition_vectorized,
     edge_cut,
+    restream_refine,
 )
 from repro.core.multilevel import MultilevelConfig
 
@@ -145,6 +146,56 @@ def test_weighted_disk_matches_memory(tmp_path):
     assert np.array_equal(b_mem, b_disk)
     assert s_mem.cut_weight == s_disk.cut_weight
     assert s_mem.balance == s_disk.balance
+
+
+# ------------------------------------------------------------- restream
+
+
+@pytest.mark.parametrize("order", sorted(ORDERINGS))
+@pytest.mark.parametrize("engine", ["sparse", "jax"])
+@pytest.mark.parametrize("rorder", ["stream", "priority"])
+def test_restream_disk_matches_memory(rorder, engine, order, base_graph, disk_files):
+    """ISSUE 5: restreaming replays the stream, so disk-restream labels are
+    bit-identical to in-memory restream — engines × orderings × both replay
+    orders — and the incrementally maintained cut is exact."""
+    cfg = _cfg(engine)
+    gm = _memory_graph(base_graph, order)
+    b_mem, s_mem = buffcut_partition(gm, cfg)
+    b_mem2, i_mem = restream_refine(
+        gm, b_mem, cfg, 1, order=rorder, initial_cut=s_mem.cut_weight
+    )
+    ds = DiskNodeStream(disk_files[order])
+    b_disk, s_disk = buffcut_partition(ds, cfg)
+    b_disk2, i_disk = restream_refine(
+        ds, b_disk, cfg, 1, order=rorder, initial_cut=s_disk.cut_weight
+    )
+    assert np.array_equal(b_mem2, b_disk2)
+    assert i_mem.cut_weight == i_disk.cut_weight
+    assert i_mem.balance == i_disk.balance
+    assert i_mem.passes == i_disk.passes
+    # restream params parity: canonical totals, same on every backend
+    assert i_mem.n_total == i_disk.n_total == ds.n_total
+    assert i_mem.m_total == i_disk.m_total == ds.m_total
+    # incremental maintenance == offline recompute on the refined labels
+    assert i_mem.cut_weight == pytest.approx(edge_cut(gm, b_mem2))
+
+
+def test_restream_metis_text_matches_packed(base_graph, disk_files, tmp_path):
+    """Both disk backends agree through the restream path too."""
+    cfg = _cfg("sparse")
+    p_txt = str(tmp_path / "g.metis")
+    write_metis(base_graph, p_txt)
+    out = {}
+    for name, src in (
+        ("text", DiskNodeStream(p_txt, io_chunk_bytes=97)),
+        ("binary", DiskNodeStream(disk_files["natural"])),
+    ):
+        b0, s0 = buffcut_partition(src, cfg)
+        out[name] = restream_refine(
+            src, b0, cfg, 2, order="priority", initial_cut=s0.cut_weight
+        )
+    assert np.array_equal(out["text"][0], out["binary"][0])
+    assert out["text"][1].cut_weight == out["binary"][1].cut_weight
 
 
 # ------------------------------------------------------- memory ceiling
