@@ -22,6 +22,7 @@ CLI twin: ``python -m repro partition <source> -k 16 --driver pipelined``.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import tempfile
 import time
@@ -31,7 +32,8 @@ import numpy as np
 from repro.graphs.orderings import apply_order, bfs_order, konect_order
 from repro.graphs.stream import NodeStream
 from repro.graphs.stream_io import DiskNodeStream, permute_to_disk
-from repro.core.buffcut import BuffCutConfig
+from repro.core.buffcut import BuffCutConfig, StreamStats
+from repro.core.checkpoint import CheckpointError, Checkpointer, load_checkpoint
 from repro.core.restream import restream_refine as _restream_refine
 from repro.api.config import (
     ORDERINGS,
@@ -52,6 +54,8 @@ from repro.api.sources import ResolvedSource, resolve_source
 
 __all__ = [
     "partition",
+    "resume",
+    "CheckpointError",
     "PartitionResult",
     "PartitionerSpec",
     "register_partitioner",
@@ -127,7 +131,13 @@ def _realize_ordering(
     )
 
 
-def partition(source, config: "DriverConfig | BuffCutConfig | None" = None, **overrides) -> PartitionResult:
+def partition(
+    source,
+    config: "DriverConfig | BuffCutConfig | None" = None,
+    *,
+    _resume_state: "dict | None" = None,
+    **overrides,
+) -> PartitionResult:
     """Partition `source` and return a `PartitionResult`.
 
     `config` is a `DriverConfig` (or a bare `BuffCutConfig`, wrapped);
@@ -135,10 +145,48 @@ def partition(source, config: "DriverConfig | BuffCutConfig | None" = None, **ov
     ordering="bfs", restream_passes=1, ...``) are routed by
     `DriverConfig.create`.  Labels are indexed by the input's node ids even
     when an ordering permutes the stream.
+
+    With ``checkpoint_path`` set (``checkpoint_every`` batches per snapshot,
+    default 8), the run is crash-safe: `repro.api.resume` — or ``python -m
+    repro partition --resume <ckpt>`` — reopens the stream at the
+    checkpointed byte offset and continues bit-identically (DESIGN.md §11).
+    `_resume_state` is that internal handoff; use `resume()`.
     """
     dc = _coerce_config(config, overrides)
     spec = get_partitioner(dc.driver)
     src = resolve_source(source)
+    ckpt = None
+    if dc.checkpoint_path:
+        if not spec.supports_checkpoint:
+            raise ValueError(
+                f"driver {spec.name!r} does not support checkpointing; "
+                "checkpoint-capable drivers: "
+                "buffcut, buffcut-vec, buffcut-pipe"
+            )
+        ckpt = Checkpointer(dc.checkpoint_path, dc.checkpoint_every)
+        # envelope merged into every snapshot so resume() can rebuild the
+        # run from the file alone (in-memory sources can't be re-resolved;
+        # resume() then requires an explicit source)
+        source_spec = src.path if src.path is not None else (
+            src.origin if src.kind == "generated" else None
+        )
+        ckpt.extra = {"api": {
+            "driver_config_json": dc.to_json(),
+            "source_spec": source_spec,
+        }}
+    rs = _resume_state
+    if rs is not None and ckpt is None:
+        raise ValueError(
+            "resuming needs checkpointing enabled: set checkpoint_path "
+            "(resume() carries it over from the checkpoint automatically)"
+        )
+    driver_resume = rs if rs is not None and rs.get("kind") != "restream" else None
+    restream_resume = rs if rs is not None and rs.get("kind") == "restream" else None
+    if restream_resume is not None and dc.restream_passes == 0:
+        raise CheckpointError(
+            "checkpoint was written during a restream pass but the resuming "
+            "config has restream_passes=0"
+        )
     run_src, perm, tmp = _realize_ordering(src, dc)
     if (
         dc.restream_passes > 0
@@ -153,13 +201,29 @@ def partition(source, config: "DriverConfig | BuffCutConfig | None" = None, **ov
     t0 = time.perf_counter()
     rinfo = None
     try:
-        labels, stats = spec.run(run_src, dc)
+        if restream_resume is not None:
+            # the driver phase finished before the checkpoint was written:
+            # its labels and stats ride in the snapshot, skip straight to
+            # the restream phase
+            env = restream_resume.get("api") or {}
+            sd = env.get("driver_stats")
+            stats = StreamStats.from_dict(sd) if sd else None
+            labels = np.asarray(restream_resume["block"], dtype=np.int64).copy()
+        elif ckpt is not None:
+            labels, stats = spec.run(run_src, dc, ckpt=ckpt, resume=driver_resume)
+        else:
+            labels, stats = spec.run(run_src, dc)
         if dc.restream_passes > 0:
             # streaming drivers hand over their exact accumulated cut and
             # final block loads (skipping the restream prelude replay); the
             # memory-only baselines don't maintain them, so the prelude
             # computes both
             seeded = stats is not None and spec.streaming
+            ckpt_pre = ckpt.written if ckpt is not None else 0
+            if ckpt is not None:
+                if stats is not None:
+                    ckpt.extra["api"]["driver_stats"] = stats.to_dict()
+                ckpt.reset()  # restream batch counters restart from zero
             labels, rinfo = _restream_refine(
                 run_src.graph if run_src.graph is not None else run_src.stream,
                 labels,
@@ -171,7 +235,13 @@ def partition(source, config: "DriverConfig | BuffCutConfig | None" = None, **ov
                     np.asarray(stats.block_loads, dtype=np.float64)
                     if seeded and stats.block_loads else None
                 ),
+                ckpt=ckpt,
+                resume=restream_resume,
             )
+            if ckpt is not None and stats is not None:
+                # restream-phase snapshots land in the same stats counter
+                # the driver phase already started
+                stats.checkpoints_written += ckpt.written - ckpt_pre
     finally:
         if tmp is not None:
             tmp.cleanup()
@@ -217,3 +287,46 @@ def partition(source, config: "DriverConfig | BuffCutConfig | None" = None, **ov
         provenance=provenance,
         graph=src.graph,
     )
+
+
+def resume(
+    checkpoint_path: str,
+    source=None,
+    config: "DriverConfig | BuffCutConfig | None" = None,
+    **overrides,
+) -> PartitionResult:
+    """Resume a checkpointed `partition` run and carry it to completion.
+
+    Loads the snapshot (magic/version/CRC verified — a torn or corrupt file
+    raises `CheckpointError`, never a wrong partition), rebuilds the
+    `DriverConfig` recorded in it (flat `overrides` still apply; anything
+    that changes the labels fails the resume identity check loudly),
+    re-resolves the source — from the recorded path / generator spec, or
+    from an explicit `source` when the original was an in-memory object —
+    and continues bit-identically from the recorded stream offset.
+    Snapshots keep being written to the same file unless overridden with
+    ``checkpoint_path=...``.
+    """
+    state = load_checkpoint(checkpoint_path)
+    env = state.get("api") or {}
+    if config is not None:
+        dc = _coerce_config(config, overrides)
+    elif env.get("driver_config_json"):
+        dc = DriverConfig.from_json(env["driver_config_json"])
+        if overrides:
+            dc = DriverConfig.create(dc, **overrides)
+    else:
+        raise CheckpointError(
+            f"checkpoint {checkpoint_path!r} has no recorded config "
+            "(written outside repro.api?); pass config= explicitly"
+        )
+    if dc.checkpoint_path != checkpoint_path and "checkpoint_path" not in overrides:
+        dc = dataclasses.replace(dc, checkpoint_path=checkpoint_path)
+    if source is None:
+        source = env.get("source_spec")
+        if source is None:
+            raise CheckpointError(
+                "the original run's source was an in-memory object the "
+                "checkpoint cannot re-resolve; pass source= explicitly"
+            )
+    return partition(source, dc, _resume_state=state)

@@ -24,8 +24,10 @@ def _add_partition_parser(sub: "argparse._SubParsersAction") -> None:
         description="Partition SOURCE (CSR file path or gen:<family>:... spec) "
                     "with any registered driver.",
     )
-    p.add_argument("source", help="METIS text / packed binary path, or gen:<family>:k=v,... spec")
-    p.add_argument("-k", type=int, required=True, help="number of blocks")
+    p.add_argument("source", nargs="?", default=None,
+                   help="METIS text / packed binary path, or gen:<family>:k=v,... spec "
+                        "(optional with --resume when the checkpoint recorded it)")
+    p.add_argument("-k", type=int, default=None, help="number of blocks")
     p.add_argument("--driver", default="buffcut",
                    help="registry name or alias (see `python -m repro list`)")
     p.add_argument("--engine", default="auto",
@@ -52,6 +54,16 @@ def _add_partition_parser(sub: "argparse._SubParsersAction") -> None:
                    choices=["stream", "priority"],
                    help="replay order for restream passes: contiguous stream "
                         "order or gain-prioritized δ-batches")
+    p.add_argument("--checkpoint", metavar="PATH", default=None,
+                   help="write crash-safe snapshots here (atomic; resume "
+                        "with --resume PATH)")
+    p.add_argument("--checkpoint-every", type=int, default=0, metavar="N",
+                   help="committed batches between snapshots "
+                        "(default 8 when --checkpoint is set)")
+    p.add_argument("--resume", metavar="CKPT", default=None,
+                   help="resume a checkpointed run bit-identically; config "
+                        "and source come from the checkpoint (tuning flags "
+                        "are ignored), SOURCE overrides the recorded one")
     p.add_argument("--materialize", action="store_true",
                    help="load a disk source into memory (required for "
                         "memory-only drivers on file sources)")
@@ -62,10 +74,36 @@ def _add_partition_parser(sub: "argparse._SubParsersAction") -> None:
     p.set_defaults(cmd=_cmd_partition)
 
 
+def _print_summary(res, json_path: "str | None") -> None:
+    prov = res.provenance
+    print(
+        f"driver={prov['driver']} engine={prov['engine']} ordering={prov['ordering']} "
+        f"source={prov['source']['kind']} n={prov['source']['n']} m={prov['source']['m']} "
+        f"k={res.k} cut_ratio={res.cut_ratio:.4f} balance={res.balance:.3f} "
+        f"runtime_s={prov['runtime_s']:.3f}"
+    )
+    if json_path:
+        res.to_json(json_path)
+        print(f"wrote {json_path}")
+
+
 def _cmd_partition(args: argparse.Namespace) -> int:
-    from repro.api import DriverConfig, partition, resolve_source
+    from repro.api import DriverConfig, partition, resolve_source, resume
     from repro.configs.buffcut_paper import scaled_config
 
+    if args.resume:
+        overrides = {}
+        if args.checkpoint:
+            overrides["checkpoint_path"] = args.checkpoint
+        if args.checkpoint_every:
+            overrides["checkpoint_every"] = args.checkpoint_every
+        res = resume(args.resume, source=args.source, **overrides)
+        _print_summary(res, args.json)
+        return 0
+    if args.source is None:
+        raise ValueError("SOURCE is required unless --resume is given")
+    if args.k is None:
+        raise ValueError("-k is required unless --resume is given")
     src = resolve_source(args.source)
     if args.materialize:
         src.materialize()
@@ -94,21 +132,14 @@ def _cmd_partition(args: argparse.Namespace) -> int:
                 ("buffer_size", args.buffer_size),
                 ("batch_size", args.batch_size),
                 ("d_max", args.d_max),
+                ("checkpoint_path", args.checkpoint),
+                ("checkpoint_every", args.checkpoint_every or None),
             )
             if val is not None
         },
     )
     res = partition(src, dc)
-    prov = res.provenance
-    print(
-        f"driver={prov['driver']} engine={prov['engine']} ordering={prov['ordering']} "
-        f"source={prov['source']['kind']} n={prov['source']['n']} m={prov['source']['m']} "
-        f"k={res.k} cut_ratio={res.cut_ratio:.4f} balance={res.balance:.3f} "
-        f"runtime_s={prov['runtime_s']:.3f}"
-    )
-    if args.json:
-        res.to_json(args.json)
-        print(f"wrote {args.json}")
+    _print_summary(res, args.json)
     return 0
 
 

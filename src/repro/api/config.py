@@ -28,7 +28,10 @@ from repro.core.vector_stream import VectorizedConfig
 ORDERINGS = ("natural", "random", "bfs", "konect")
 
 # flat-kwarg routing table for DriverConfig.create (CLI + partition(**kw))
-_TOP_KEYS = ("driver", "ordering", "order_seed", "restream_passes", "restream_order")
+_TOP_KEYS = (
+    "driver", "ordering", "order_seed", "restream_passes", "restream_order",
+    "checkpoint_path", "checkpoint_every",
+)
 _BUFFCUT_KEYS = (
     "k", "eps", "buffer_size", "batch_size", "d_max", "score",
     "disc_factor", "gamma", "collect_stats",
@@ -66,6 +69,10 @@ class DriverConfig:
     restream_order: str = "stream"
     ordering: str = "natural"
     order_seed: int = 0
+    # crash-safe checkpointing (core/checkpoint.py, DESIGN.md §11): snapshot
+    # to `checkpoint_path` every `checkpoint_every` committed batches
+    checkpoint_path: "str | None" = None
+    checkpoint_every: int = 0
 
     def __post_init__(self) -> None:
         if self.ordering not in ORDERINGS:
@@ -81,6 +88,18 @@ class DriverConfig:
                 f"unknown restream_order {self.restream_order!r}: pick one of "
                 f"{RESTREAM_ORDERS}"
             )
+        if self.checkpoint_every < 0:
+            raise ValueError(
+                f"checkpoint_every must be >= 0, got {self.checkpoint_every}"
+            )
+        if self.checkpoint_every > 0 and not self.checkpoint_path:
+            raise ValueError(
+                "checkpoint_every > 0 needs a checkpoint_path to write to"
+            )
+        if self.checkpoint_path and self.checkpoint_every == 0:
+            # path alone opts in; default cadence (EXPERIMENTS.md: <3%
+            # overhead at every=8 on the hot-path grid)
+            self.checkpoint_every = 8
 
     # ------------------------------------------------------- flat builder
     @classmethod
@@ -151,6 +170,8 @@ class DriverConfig:
             "restream_order": self.restream_order,
             "ordering": self.ordering,
             "order_seed": self.order_seed,
+            "checkpoint_path": self.checkpoint_path,
+            "checkpoint_every": self.checkpoint_every,
         }
 
     @classmethod
@@ -166,6 +187,8 @@ class DriverConfig:
             restream_order=d.get("restream_order", "stream"),
             ordering=d.get("ordering", "natural"),
             order_seed=d.get("order_seed", 0),
+            checkpoint_path=d.get("checkpoint_path"),
+            checkpoint_every=d.get("checkpoint_every", 0),
         )
 
     def to_json(self) -> str:

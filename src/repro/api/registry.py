@@ -38,6 +38,9 @@ class PartitionerSpec:
     streaming: bool                # consumes NodeStreamBase (out-of-core OK)
     description: str = ""
     aliases: tuple = ()
+    # run accepts ckpt=/resume= kwargs (core/checkpoint.py); the facade
+    # refuses --checkpoint/--resume for specs that don't
+    supports_checkpoint: bool = False
 
 
 _REGISTRY: dict[str, PartitionerSpec] = {}
@@ -91,7 +94,8 @@ register_partitioner(PartitionerSpec(
     streaming=True,
     description="BuffCut sequential driver (paper Alg. 1): prioritized "
                 "buffer + batch-wise multilevel.",
-    run=lambda src, dc: _buffcut_partition(src.stream, dc.buffcut),
+    supports_checkpoint=True,
+    run=lambda src, dc, **kw: _buffcut_partition(src.stream, dc.buffcut, **kw),
 ))
 
 register_partitioner(PartitionerSpec(
@@ -100,7 +104,10 @@ register_partitioner(PartitionerSpec(
     streaming=True,
     description="Vectorized BuffCut: dense score vectors + top-wave "
                 "eviction (TPU adaptation; wave=1,chunk=1 is bit-exact).",
-    run=lambda src, dc: _buffcut_partition_vectorized(src.stream, dc.buffcut, dc.vectorized),
+    supports_checkpoint=True,
+    run=lambda src, dc, **kw: _buffcut_partition_vectorized(
+        src.stream, dc.buffcut, dc.vectorized, **kw
+    ),
 ))
 
 register_partitioner(PartitionerSpec(
@@ -109,7 +116,10 @@ register_partitioner(PartitionerSpec(
     streaming=True,
     description="Pipelined BuffCut (paper §3.5): reader / PQ handler / "
                 "partition worker threads.",
-    run=lambda src, dc: _buffcut_partition_pipelined(src.stream, dc.buffcut, dc.pipeline),
+    supports_checkpoint=True,
+    run=lambda src, dc, **kw: _buffcut_partition_pipelined(
+        src.stream, dc.buffcut, dc.pipeline, **kw
+    ),
 ))
 
 register_partitioner(PartitionerSpec(

@@ -32,8 +32,16 @@ from repro.core.rescore import RescoreState
 from repro.core.scores import SCORES, ScoreSpec, get_score
 from repro.core.fennel import FennelParams, fennel_choose
 from repro.core.batch_model import build_batch_model_from_adj
-from repro.core.multilevel import MultilevelConfig, multilevel_partition
+from repro.core.multilevel import MultilevelConfig, multilevel_partition_resilient
 from repro.core.metrics import internal_edge_ratio_adj, streaming_cut_increment
+from repro.core.checkpoint import (
+    Checkpointer,
+    check_resume,
+    pack_bucket_pq,
+    pack_rescore,
+    unpack_bucket_pq,
+    unpack_rescore,
+)
 
 
 @dataclasses.dataclass
@@ -144,6 +152,10 @@ class StreamStats:
     # final per-block f64 loads — handed to restream_refine so a seeded
     # restream skips its loads/cut prelude replay (one whole-file read saved)
     block_loads: list = dataclasses.field(default_factory=list)
+    # fault-tolerance accounting (DESIGN.md §11):
+    io_retries: int = 0               # transient stream-IO errors absorbed
+    engine_fallbacks: int = 0         # batches degraded jax -> sparse engine
+    checkpoints_written: int = 0      # crash-safe snapshots persisted
 
     @property
     def mean_ier(self) -> float:
@@ -198,7 +210,11 @@ def buffcut_partition(
 
 
 def _buffcut_partition(
-    g: CSRGraph | NodeStreamBase, cfg: BuffCutConfig
+    g: CSRGraph | NodeStreamBase,
+    cfg: BuffCutConfig,
+    *,
+    ckpt: Checkpointer | None = None,
+    resume: dict | None = None,
 ) -> tuple[np.ndarray, StreamStats]:
     stream = as_node_stream(g)
     n = stream.n
@@ -216,7 +232,40 @@ def _buffcut_partition(
     loads = np.zeros(cfg.k, dtype=np.float64)
     batch: list[int] = []
     stats = StreamStats()
+    if resume is not None:
+        check_resume(resume, "buffcut", cfg.to_json(), n)
+        block[:] = resume["block"]
+        loads[:] = resume["loads"]
+        batch.extend(int(x) for x in np.asarray(resume["batch"]).tolist())
+        stats = StreamStats.from_dict(resume["stats"])
+        unpack_rescore(st, resume["state"])
+        unpack_bucket_pq(pq, resume["pq"])
+        if ckpt is not None:
+            ckpt.mark(stats.n_batches)
+    base_runtime = stats.runtime_s
+    base_bytes = stats.stream_bytes_read
+    base_retries = stats.io_retries
     t0 = time.perf_counter()
+
+    def make_state() -> dict:
+        sd = stats.to_dict()
+        sd["runtime_s"] = base_runtime + (time.perf_counter() - t0)
+        sd["stream_bytes_read"] = base_bytes + stream.bytes_read
+        sd["io_retries"] = base_retries + int(getattr(stream, "io_retries", 0))
+        # prior-run writes (resume base) + this run's + this very snapshot
+        sd["checkpoints_written"] += ckpt.written + 1
+        return {
+            "kind": "buffcut",
+            "config_json": cfg.to_json(),
+            "n": n,
+            "pos": stream.tell(),
+            "block": block,
+            "loads": loads,
+            "batch": np.asarray(batch, dtype=np.int64),
+            "stats": sd,
+            "state": pack_rescore(st),
+            "pq": pack_bucket_pq(pq),
+        }
 
     def note_peak(extra: int = 0) -> None:
         resident = st.adj.resident_bytes + stream.resident_bytes + extra
@@ -233,7 +282,12 @@ def _buffcut_partition(
             n, bnodes, degs, nbr_c, w_c, node_w_b, block, cfg.k
         )
         t_ml = time.perf_counter()
-        labels = multilevel_partition(model.graph, model.pinned_block, p, loads, cfg.ml)
+        labels = multilevel_partition_resilient(
+            model.graph, model.pinned_block, p, loads, cfg.ml,
+            on_fallback=lambda: setattr(
+                stats, "engine_fallbacks", stats.engine_fallbacks + 1
+            ),
+        )
         stats.ml_time_s += time.perf_counter() - t_ml
         lab_b = labels[: bnodes.shape[0]]
         block[bnodes] = lab_b
@@ -265,7 +319,8 @@ def _buffcut_partition(
             commit_batch()
 
     one = np.empty(1, dtype=np.int64)
-    for v, nbrs, nbr_w, node_w in stream:
+    records = stream.iter_from(dict(resume["pos"])) if resume is not None else iter(stream)
+    for v, nbrs, nbr_w, node_w in records:
         st.observe(v, nbrs, nbr_w, node_w)
         note_peak()
         if nbrs.size > cfg.d_max:  # hub bypass: assign immediately via Fennel
@@ -289,6 +344,10 @@ def _buffcut_partition(
                 stats.peak_mem_items = max(stats.peak_mem_items, len(pq) + len(batch))
         while len(pq) >= cfg.buffer_size and len(batch) < cfg.batch_size:
             evict_one()
+        if ckpt is not None:
+            # record boundary: hub fully committed or node buffered/evicted,
+            # IncrementalCut bracket closed — everything is snapshotable
+            ckpt.maybe_save(stats.n_batches, make_state)
 
     # flush (paper Alg. 1 tail)
     while len(pq) > 0:
@@ -296,6 +355,9 @@ def _buffcut_partition(
     commit_batch()
     stats.balance = float(loads.max() / (p.n_total / cfg.k)) if p.n_total > 0 else 1.0
     stats.block_loads = loads.tolist()
-    stats.stream_bytes_read = stream.bytes_read
-    stats.runtime_s = time.perf_counter() - t0
+    stats.stream_bytes_read = base_bytes + stream.bytes_read
+    stats.io_retries = base_retries + int(getattr(stream, "io_retries", 0))
+    if ckpt is not None:
+        stats.checkpoints_written += ckpt.written
+    stats.runtime_s = base_runtime + (time.perf_counter() - t0)
     return block, stats

@@ -100,6 +100,18 @@ class IncrementalCut:
         self.cut_weight = float(cut0)
         self._staged: float | None = None
 
+    def snapshot(self) -> float:
+        """Checkpointable cut total.  Only valid between stage/commit pairs
+        — a mid-bracket snapshot would double-count the staged batch on
+        resume, so it's refused loudly (core/checkpoint.py callers only
+        checkpoint at batch boundaries)."""
+        if self._staged is not None:
+            raise RuntimeError(
+                "IncrementalCut.snapshot between stage and commit: checkpoint "
+                "only at batch boundaries"
+            )
+        return self.cut_weight
+
     def stage(
         self,
         bnodes: np.ndarray,

@@ -309,6 +309,34 @@ def lp_refine(
 # driver
 # --------------------------------------------------------------------------
 
+def multilevel_partition_resilient(
+    g: CSRGraph,
+    pinned: np.ndarray,
+    p: FennelParams,
+    loads_base: np.ndarray,
+    cfg: MultilevelConfig | None = None,
+    on_fallback=None,
+) -> np.ndarray:
+    """multilevel_partition with graceful degradation (DESIGN.md §11): a
+    failure inside the jax engine (device OOM, runtime error, backend gone
+    mid-run) re-partitions the batch on the sparse host engine instead of
+    killing an hours-long stream run.  Safe because engine parity is pinned
+    — sparse and jax produce bit-identical labels — so the fallback changes
+    nothing but throughput.  Host-engine failures are real bugs and
+    propagate.  `on_fallback` (if given) is called once per degraded batch
+    so drivers can count them in `StreamStats.engine_fallbacks`."""
+    cfg = cfg or MultilevelConfig()
+    try:
+        return multilevel_partition(g, pinned, p, loads_base, cfg)
+    except Exception:
+        if cfg.engine != "jax":
+            raise
+        if on_fallback is not None:
+            on_fallback()
+        host_cfg = dataclasses.replace(cfg, engine="sparse")
+        return multilevel_partition(g, pinned, p, loads_base, host_cfg)
+
+
 def multilevel_partition(
     g: CSRGraph,
     pinned: np.ndarray,

@@ -13,6 +13,15 @@ their batch task is enqueued (paper: "as soon as their task is enqueued").
 
 On this 1-core container the wall-clock gain is ~none (documented in
 EXPERIMENTS.md §B5); the structure is what ships.
+
+Shutdown is hardened (DESIGN.md §11): every queue put/get is bounded and
+watches a shared stop event, worker exceptions are captured and re-raised
+on the main thread, and a ``finally`` block poison-pills and joins both
+stage threads with a timeout on *every* exit path — a mid-stream parse
+error can no longer strand a reader blocked on a full queue or leak a
+worker thread into the next test.  Checkpoints quiesce the worker first
+(wait until every enqueued task has committed) so the snapshot is taken at
+a true batch boundary.
 """
 from __future__ import annotations
 
@@ -30,8 +39,21 @@ from repro.core.buffcut import BuffCutConfig, StreamStats, _State, _bump_assigne
 from repro.core.buffer import BucketPQ
 from repro.core.fennel import FennelParams, fennel_choose
 from repro.core.batch_model import build_batch_model_from_adj
-from repro.core.multilevel import multilevel_partition
+from repro.core.multilevel import multilevel_partition_resilient
 from repro.core.metrics import internal_edge_ratio_adj, streaming_cut_increment
+from repro.core.checkpoint import (
+    Checkpointer,
+    check_resume,
+    pack_bucket_pq,
+    pack_rescore,
+    unpack_bucket_pq,
+    unpack_rescore,
+)
+
+# granularity of the stop-event checks around blocking queue ops; small
+# enough that teardown is prompt, large enough to stay off the profile
+_POLL_S = 0.05
+_JOIN_TIMEOUT_S = 5.0
 
 
 @dataclasses.dataclass
@@ -80,6 +102,9 @@ def _buffcut_partition_pipelined(
     g: CSRGraph | NodeStreamBase,
     cfg: BuffCutConfig,
     pipe: PipelineConfig | None = None,
+    *,
+    ckpt: Checkpointer | None = None,
+    resume: dict | None = None,
 ) -> tuple[np.ndarray, StreamStats]:
     pipe = pipe if pipe is not None else PipelineConfig()
     queue_depth, read_ahead = pipe.queue_depth, pipe.read_ahead
@@ -101,7 +126,74 @@ def _buffcut_partition_pipelined(
     task_q: queue.Queue = queue.Queue(maxsize=queue_depth)
     rec_q: queue.Queue = queue.Queue(maxsize=max(1, read_ahead))
     stats = StreamStats()
+    batch: list[int] = []
+    # queue knobs change throughput, never labels (tasks commit in enqueue
+    # order under one lock), so only the BuffCut config is resume identity
+    if resume is not None:
+        check_resume(resume, "buffcut-pipe", cfg.to_json(), n)
+        block[:] = resume["block"]
+        loads[:] = resume["loads"]
+        batch.extend(int(x) for x in np.asarray(resume["batch"]).tolist())
+        stats = StreamStats.from_dict(resume["stats"])
+        unpack_rescore(st, resume["state"])
+        unpack_bucket_pq(pq, resume["pq"])
+        if ckpt is not None:
+            ckpt.mark(stats.n_batches)
+    base_runtime = stats.runtime_s
+    base_bytes = stats.stream_bytes_read
+    base_retries = stats.io_retries
     t0 = time.perf_counter()
+
+    # ---- shutdown plumbing (DESIGN.md §11)
+    stop = threading.Event()
+    worker_err: list[BaseException] = []
+    done_cv = threading.Condition()
+    counts = {"put": 0, "done": 0}  # tasks enqueued / tasks committed
+    last_pos: dict | None = dict(resume["pos"]) if resume is not None else None
+    _DONE = object()  # reader's end-of-stream sentinel (None stops T3 only)
+
+    def q_put(q: queue.Queue, item) -> bool:
+        """Bounded put that gives up when the run is tearing down — a dying
+        pipeline must never leave a thread blocked on a full queue."""
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=_POLL_S)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def check_worker() -> None:
+        if worker_err:
+            raise worker_err[0]
+
+    def make_state() -> dict:
+        sd = stats.to_dict()
+        sd["runtime_s"] = base_runtime + (time.perf_counter() - t0)
+        sd["stream_bytes_read"] = base_bytes + stream.bytes_read
+        sd["io_retries"] = base_retries + int(getattr(stream, "io_retries", 0))
+        sd["checkpoints_written"] += ckpt.written + 1
+        return {
+            "kind": "buffcut-pipe",
+            "config_json": cfg.to_json(),
+            "n": n,
+            "pos": dict(last_pos),
+            "block": block,
+            "loads": loads,
+            "batch": np.asarray(batch, dtype=np.int64),
+            "stats": sd,
+            "state": pack_rescore(st),
+            "pq": pack_bucket_pq(pq),
+        }
+
+    def quiesce() -> None:
+        """Wait for T3 to drain every enqueued task, so block/loads/stats
+        describe a closed batch boundary before the snapshot is built."""
+        with done_cv:
+            while counts["done"] < counts["put"]:
+                check_worker()
+                done_cv.wait(timeout=_POLL_S)
+        check_worker()
 
     # bytes currently parsed-but-unconsumed in the read-ahead queue (T1->T2)
     # and in batch/hub payloads queued or being processed by T3 (T2->T3):
@@ -114,17 +206,26 @@ def _buffcut_partition_pipelined(
 
     def reader() -> None:  # T1
         try:
-            for rec in stream:
+            it = (stream.iter_from(dict(resume["pos"])) if resume is not None
+                  else iter(stream))
+            for rec in it:
+                # tell() right after the yield names the *next* record — the
+                # resume token a checkpoint taken after `rec` commits needs
+                try:
+                    pos = stream.tell()
+                except NotImplementedError:
+                    pos = None
                 nbytes = rec[1].nbytes + rec[2].nbytes + 32
                 with lock:
                     inflight["bytes"] += nbytes
                     inflight["peak_stream"] = max(
                         inflight["peak_stream"], stream.resident_bytes
                     )
-                rec_q.put(rec)
-            rec_q.put(None)
+                if not q_put(rec_q, (rec, pos)):
+                    return  # teardown in progress; main thread owns the error
+            q_put(rec_q, _DONE)
         except BaseException as e:  # surface parse errors in the main thread
-            rec_q.put(e)
+            q_put(rec_q, e)
 
     def note_peak(extra: int = 0, locked: bool = False) -> None:
         def compute() -> int:
@@ -142,58 +243,94 @@ def _buffcut_partition_pipelined(
             stats.peak_resident_bytes = resident
 
     def partition_worker() -> None:  # T3
-        while True:
-            item = task_q.get()
-            if item is None:
-                return
-            kind, payload = item
-            with lock:
-                if kind == "batch":
-                    bnodes, degs, nbr_c, w_c, node_w_b = payload
-                    model = build_batch_model_from_adj(
-                        n, bnodes, degs, nbr_c, w_c, node_w_b, block, cfg.k
-                    )
-                    note_peak(
-                        model.graph.indices.nbytes + model.graph.edge_w.nbytes,
-                        locked=True,
-                    )
-                    labels = multilevel_partition(
-                        model.graph, model.pinned_block, p, loads, cfg.ml
-                    )
-                    lab_b = labels[: bnodes.shape[0]]
-                    block[bnodes] = lab_b
-                    np.add.at(loads, lab_b, node_w_b.astype(np.float64))
-                    stats.cut_weight += streaming_cut_increment(
-                        bnodes, lab_b, degs, nbr_c, w_c, block
-                    )
-                    stats.n_batches += 1
-                    if cfg.collect_stats:
-                        stats.ier_per_batch.append(
-                            internal_edge_ratio_adj(bnodes, nbr_c, w_c, n)
+        try:
+            while True:
+                try:
+                    item = task_q.get(timeout=_POLL_S)
+                except queue.Empty:
+                    if stop.is_set():
+                        return
+                    continue
+                if item is None:
+                    return
+                kind, payload = item
+                with lock:
+                    if kind == "batch":
+                        bnodes, degs, nbr_c, w_c, node_w_b = payload
+                        model = build_batch_model_from_adj(
+                            n, bnodes, degs, nbr_c, w_c, node_w_b, block, cfg.k
                         )
-                else:  # single hub task: payload carries the stream record
-                    v, nbrs, nbr_w, node_w = payload
-                    i = fennel_choose(nbrs, nbr_w, float(node_w), block, loads, p)
-                    block[v] = i
-                    loads[i] += np.float32(node_w)
-                    hv = np.array([v], dtype=np.int64)
-                    stats.cut_weight += streaming_cut_increment(
-                        hv,
-                        np.array([i], dtype=np.int64),
-                        np.array([nbrs.size], dtype=np.int64),
-                        nbrs.astype(np.int64),
-                        nbr_w.astype(np.float64),
-                        block,
-                    )
-                    stats.n_hubs += 1
-                inflight["task_bytes"] -= _payload_bytes(payload)
+                        note_peak(
+                            model.graph.indices.nbytes + model.graph.edge_w.nbytes,
+                            locked=True,
+                        )
+                        labels = multilevel_partition_resilient(
+                            model.graph, model.pinned_block, p, loads, cfg.ml,
+                            on_fallback=lambda: setattr(
+                                stats, "engine_fallbacks", stats.engine_fallbacks + 1
+                            ),
+                        )
+                        lab_b = labels[: bnodes.shape[0]]
+                        block[bnodes] = lab_b
+                        np.add.at(loads, lab_b, node_w_b.astype(np.float64))
+                        stats.cut_weight += streaming_cut_increment(
+                            bnodes, lab_b, degs, nbr_c, w_c, block
+                        )
+                        stats.n_batches += 1
+                        if cfg.collect_stats:
+                            stats.ier_per_batch.append(
+                                internal_edge_ratio_adj(bnodes, nbr_c, w_c, n)
+                            )
+                    else:  # single hub task: payload carries the stream record
+                        v, nbrs, nbr_w, node_w = payload
+                        i = fennel_choose(nbrs, nbr_w, float(node_w), block, loads, p)
+                        block[v] = i
+                        loads[i] += np.float32(node_w)
+                        hv = np.array([v], dtype=np.int64)
+                        stats.cut_weight += streaming_cut_increment(
+                            hv,
+                            np.array([i], dtype=np.int64),
+                            np.array([nbrs.size], dtype=np.int64),
+                            nbrs.astype(np.int64),
+                            nbr_w.astype(np.float64),
+                            block,
+                        )
+                        stats.n_hubs += 1
+                    inflight["task_bytes"] -= _payload_bytes(payload)
+                with done_cv:
+                    counts["done"] += 1
+                    done_cv.notify_all()
+        except BaseException as e:
+            worker_err.append(e)
+            stop.set()
+            with done_cv:
+                done_cv.notify_all()
 
+    # daemon=True stays as a backstop, but the finally below always poison-
+    # pills and joins, so normal operation never relies on it
     worker = threading.Thread(target=partition_worker, daemon=True)
     worker.start()
     t1 = threading.Thread(target=reader, daemon=True)
     t1.start()
 
-    batch: list[int] = []
+    def get_rec():
+        while True:
+            check_worker()
+            try:
+                return rec_q.get(timeout=_POLL_S)
+            except queue.Empty:
+                continue
+
+    def put_task(item) -> None:
+        while True:
+            check_worker()
+            try:
+                task_q.put(item, timeout=_POLL_S)
+                if item is not None:  # the poison pill is not a task
+                    counts["put"] += 1
+                return
+            except queue.Full:
+                continue
 
     def flush_batch() -> None:
         if batch:
@@ -204,53 +341,71 @@ def _buffcut_partition_pipelined(
             payload = (bnodes, degs, nbr_c, w_c, node_w_b)
             with lock:
                 inflight["task_bytes"] += _payload_bytes(payload)
-            task_q.put(("batch", payload))
+            put_task(("batch", payload))
             batch.clear()
 
-    # T2 (PQ handler): consume the reader's records in stream order.
-    while True:
-        item = rec_q.get()
-        if item is None:
-            break
-        if isinstance(item, BaseException):
-            raise item
-        v, nbrs, nbr_w, node_w = item
-        with lock:
-            inflight["bytes"] -= nbrs.nbytes + nbr_w.nbytes + 32
-        st.observe(v, nbrs, nbr_w, node_w)
-        note_peak()
-        if nbrs.size > cfg.d_max:
-            payload = (v, nbrs, nbr_w, node_w)
+    try:
+        # T2 (PQ handler): consume the reader's records in stream order.
+        while True:
+            item = get_rec()
+            if item is _DONE:
+                break
+            if isinstance(item, BaseException):
+                raise item
+            (v, nbrs, nbr_w, node_w), pos = item
             with lock:
-                inflight["task_bytes"] += _payload_bytes(payload)
-            task_q.put(("hub", payload))
-            _bump_assigned(st, pq, v, was_buffered=False)  # enqueued == assigned
-            st.release(np.array([v], dtype=np.int64))
-        else:
-            _bump_buffered(st, pq, v)
-            pq.insert(v, st.score(v))
-            st.member[v] = True
-        while len(pq) >= cfg.buffer_size and len(batch) < cfg.batch_size:
+                inflight["bytes"] -= nbrs.nbytes + nbr_w.nbytes + 32
+            st.observe(v, nbrs, nbr_w, node_w)
+            note_peak()
+            if nbrs.size > cfg.d_max:
+                payload = (v, nbrs, nbr_w, node_w)
+                with lock:
+                    inflight["task_bytes"] += _payload_bytes(payload)
+                put_task(("hub", payload))
+                _bump_assigned(st, pq, v, was_buffered=False)  # enqueued == assigned
+                st.release(np.array([v], dtype=np.int64))
+            else:
+                _bump_buffered(st, pq, v)
+                pq.insert(v, st.score(v))
+                st.member[v] = True
+            while len(pq) >= cfg.buffer_size and len(batch) < cfg.batch_size:
+                u = pq.extract_max()
+                st.member[u] = False
+                batch.append(u)
+                _bump_assigned(st, pq, u, was_buffered=True)
+                if len(batch) == cfg.batch_size:
+                    flush_batch()
+            if pos is not None:
+                last_pos = pos
+            if (ckpt is not None and last_pos is not None
+                    and ckpt.due(stats.n_batches)):
+                quiesce()  # drain T3 so the snapshot sees a closed boundary
+                ckpt.maybe_save(stats.n_batches, make_state)
+        while len(pq) > 0:
             u = pq.extract_max()
             st.member[u] = False
             batch.append(u)
             _bump_assigned(st, pq, u, was_buffered=True)
             if len(batch) == cfg.batch_size:
                 flush_batch()
-    while len(pq) > 0:
-        u = pq.extract_max()
-        st.member[u] = False
-        batch.append(u)
-        _bump_assigned(st, pq, u, was_buffered=True)
-        if len(batch) == cfg.batch_size:
-            flush_batch()
-    flush_batch()
-    task_q.put(None)
-    worker.join()
-    t1.join()
+        flush_batch()
+        quiesce()
+        put_task(None)
+        worker.join(timeout=_JOIN_TIMEOUT_S)
+        t1.join(timeout=_JOIN_TIMEOUT_S)
+        check_worker()
+    finally:
+        # every exit path — normal, parse error, worker failure — tears the
+        # pipeline down: wake anything blocked, then join with a timeout
+        stop.set()
+        worker.join(timeout=_JOIN_TIMEOUT_S)
+        t1.join(timeout=_JOIN_TIMEOUT_S)
     with lock:
         stats.balance = float(loads.max() / (p.n_total / cfg.k)) if p.n_total > 0 else 1.0
     stats.block_loads = loads.tolist()
-    stats.stream_bytes_read = stream.bytes_read
-    stats.runtime_s = time.perf_counter() - t0
+    stats.stream_bytes_read = base_bytes + stream.bytes_read
+    stats.io_retries = base_retries + int(getattr(stream, "io_retries", 0))
+    if ckpt is not None:
+        stats.checkpoints_written += ckpt.written
+    stats.runtime_s = base_runtime + (time.perf_counter() - t0)
     return block, stats

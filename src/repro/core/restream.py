@@ -37,6 +37,7 @@ refined labels.
 from __future__ import annotations
 
 import dataclasses
+import json
 
 import numpy as np
 
@@ -45,9 +46,15 @@ from repro.graphs.stream import NodeStream, NodeStreamBase, as_node_stream
 from repro.core.buffcut import BuffCutConfig
 from repro.core.fennel import FennelParams, block_connectivity, fennel_choose
 from repro.core.batch_model import build_batch_model_from_adj
-from repro.core.multilevel import multilevel_partition
+from repro.core.multilevel import multilevel_partition_resilient
 from repro.core.metrics import IncrementalCut
 from repro.core.rescore import AdjacencyCache
+from repro.core.checkpoint import (
+    Checkpointer,
+    check_resume,
+    pack_adjacency,
+    unpack_adjacency,
+)
 
 RESTREAM_ORDERS = ("stream", "priority")
 
@@ -72,17 +79,40 @@ class RestreamInfo:
         return dataclasses.asdict(self)
 
 
-def _check_replay(stream: NodeStreamBase, seen: int) -> None:
+def _check_replay(stream: NodeStreamBase, seen: int, where: str = "") -> None:
     """A replay that comes up short means the source is exhausted (one-shot
-    foreign stream) or truncated — fail loudly, never refine silently."""
-    if seen != stream.n:
+    foreign stream) or truncated — fail loudly, never refine silently.
+
+    The two causes get distinct diagnoses: zero records is a source that
+    cannot replay at all; a partial replay is a stream that was truncated
+    mid-pass (disk file shrank under us), reported with the byte offset the
+    stream stopped at and which pass lost data.
+    """
+    if seen == stream.n:
+        return
+    if seen == 0:
         raise ValueError(
-            f"stream replay yielded {seen} of {stream.n} records: the source "
-            "is not replayable (one-shot stream?) or is truncated. Restream "
-            "needs a CSRGraph, a NodeStream, or a disk-backed stream; "
-            "materialize one-shot streams first "
+            f"stream replay{where} yielded 0 of {stream.n} records: the "
+            "source is not replayable (one-shot stream?). Restream needs a "
+            "CSRGraph, a NodeStream, or a disk-backed stream; materialize "
+            "one-shot streams first "
             "(repro.api.resolve_source(...).materialize())."
         )
+    at = ""
+    try:
+        pos = stream.tell()
+    except NotImplementedError:
+        pos = None
+    if pos is not None:
+        off = pos.get("offset")
+        at = (f" at byte offset {off}" if off is not None
+              else f" at record index {pos.get('index')}")
+    raise ValueError(
+        f"stream replay{where} yielded only {seen} of {stream.n} records{at}: "
+        "the stream was truncated mid-pass — the backing file shrank or the "
+        "source stops replaying part-way (not replayable end-to-end). "
+        "Refusing to refine against partial data."
+    )
 
 
 def _replay_totals(
@@ -113,7 +143,7 @@ def _replay_totals(
         if stream.resident_bytes > peak:
             peak = stream.resident_bytes
         seen += 1
-    _check_replay(stream, seen)
+    _check_replay(stream, seen, " during the loads/cut prelude")
     return loads, cut, peak
 
 
@@ -135,6 +165,8 @@ def restream_refine(
     order: str = "stream",
     initial_cut: "float | None" = None,
     initial_loads: "np.ndarray | None" = None,
+    ckpt: "Checkpointer | None" = None,
+    resume: "dict | None" = None,
 ) -> tuple[np.ndarray, RestreamInfo]:
     """Apply `passes` restreaming passes over any replayable stream source.
 
@@ -146,6 +178,15 @@ def restream_refine(
     prelude pass computes both.  Returns the refined labels and the
     `RestreamInfo` bookkeeping (refreshed cut/balance, canonical totals,
     per-pass log, measured peak residency).
+
+    `ckpt` snapshots at batch boundaries (kind "restream", counter
+    cumulative across passes so the cadence spans pass borders); `resume`
+    restarts mid-pass from such a snapshot — labels, loads, the incremental
+    cut total, completed-pass logs, the retained adjacency, and the
+    pending/priority buffers all restored, then the stream reopens at the
+    recorded byte offset.  The refined labels are bit-identical to the
+    uninterrupted run; the prelude and `initial_*` seeds are skipped
+    because their outcome is already baked into the snapshot.
     """
     if order not in RESTREAM_ORDERS:
         raise ValueError(
@@ -172,12 +213,33 @@ def restream_refine(
     )
     info = RestreamInfo(order=order, n_total=p.n_total, m_total=p.m_total)
     bytes0 = stream.bytes_read
-    if initial_loads is not None and initial_cut is not None:
+    bytes_base = 0
+    # order and total pass count shape the label trajectory, so both are
+    # part of the resume identity alongside the BuffCut config
+    config_json = json.dumps(
+        {"cfg": cfg.to_dict(), "order": order, "passes": passes}, sort_keys=True
+    )
+    total_batches = [0]  # cumulative across passes: the checkpoint cadence
+    start_pass = 0
+    if resume is not None:
+        check_resume(resume, "restream", config_json, stream.n)
+        block[:] = resume["block"]
+        loads = np.asarray(resume["loads"], dtype=np.float64)
+        cm = IncrementalCut(float(resume["cut_weight"]))
+        info.passes = list(resume["passes"])
+        info.peak_resident_bytes = int(resume["peak_resident_bytes"])
+        bytes_base = int(resume["stream_bytes_read"])
+        total_batches[0] = int(resume["total_batches"])
+        start_pass = int(resume["pass_idx"])
+        if ckpt is not None:
+            ckpt.mark(total_batches[0])
+    elif initial_loads is not None and initial_cut is not None:
         loads = np.asarray(initial_loads, dtype=np.float64).copy()
         if loads.shape[0] != cfg.k:
             raise ValueError(
                 f"initial_loads has {loads.shape[0]} blocks, config has k={cfg.k}"
             )
+        cm = IncrementalCut(initial_cut)
     else:
         loads, cut0, peak0 = _replay_totals(
             stream, block, cfg.k, need_cut=initial_cut is None
@@ -185,16 +247,23 @@ def restream_refine(
         info.peak_resident_bytes = peak0
         if initial_cut is None:
             initial_cut = cut0
-    cm = IncrementalCut(initial_cut)
-    for _ in range(passes):
-        cut_before = cm.cut_weight
-        log = _restream_pass_impl(stream, block, loads, cm, cfg, p, order, info)
+        cm = IncrementalCut(initial_cut)
+    for pi in range(start_pass, passes):
+        pass_resume = resume if (resume is not None and pi == start_pass) else None
+        cut_before = (float(resume["cut_before"]) if pass_resume is not None
+                      else cm.cut_weight)
+        log = _restream_pass_impl(
+            stream, block, loads, cm, cfg, p, order, info,
+            pass_idx=pi, config_json=config_json, total_batches=total_batches,
+            ckpt=ckpt, cut_before=cut_before, bytes_base=bytes_base,
+            bytes0=bytes0, resume=pass_resume,
+        )
         log["cut_before"] = cut_before
         log["cut_after"] = cm.cut_weight
         info.passes.append(log)
     info.cut_weight = cm.cut_weight
     info.balance = float(loads.max() / (p.n_total / cfg.k)) if p.n_total > 0 else 1.0
-    info.stream_bytes_read = stream.bytes_read - bytes0
+    info.stream_bytes_read = bytes_base + (stream.bytes_read - bytes0)
     return block, info
 
 
@@ -207,10 +276,50 @@ def _restream_pass_impl(
     p: FennelParams,
     order: str,
     info: RestreamInfo,
+    *,
+    pass_idx: int = 0,
+    config_json: str = "",
+    total_batches: "list[int] | None" = None,
+    ckpt: "Checkpointer | None" = None,
+    cut_before: float = 0.0,
+    bytes_base: int = 0,
+    bytes0: int = 0,
+    resume: "dict | None" = None,
 ) -> dict:
     n = stream.n
     adj = AdjacencyCache()
-    log = {"order": order, "n_batches": 0, "n_hubs": 0, "moved": 0}
+    log = {"order": order, "n_batches": 0, "n_hubs": 0, "moved": 0,
+           "engine_fallbacks": 0}
+    if total_batches is None:
+        total_batches = [0]
+    seen = 0
+    if resume is not None:
+        log = dict(resume["log"])
+        log.setdefault("engine_fallbacks", 0)
+        unpack_adjacency(adj, resume["adj"])
+        seen = int(resume["seen"])
+
+    def make_state(extra: dict) -> dict:
+        state = {
+            "kind": "restream",
+            "config_json": config_json,
+            "n": n,
+            "pos": stream.tell(),
+            "block": block,
+            "loads": loads,
+            "cut_weight": cm.snapshot(),
+            "pass_idx": pass_idx,
+            "cut_before": cut_before,
+            "log": dict(log),
+            "passes": list(info.passes),
+            "peak_resident_bytes": info.peak_resident_bytes,
+            "stream_bytes_read": bytes_base + (stream.bytes_read - bytes0),
+            "seen": seen,
+            "total_batches": total_batches[0],
+            "adj": pack_adjacency(adj),
+        }
+        state.update(extra)
+        return state
 
     def note_peak(extra: int = 0) -> None:
         resident = adj.resident_bytes + stream.resident_bytes + extra
@@ -228,13 +337,19 @@ def _restream_pass_impl(
         model = build_batch_model_from_adj(
             n, bnodes, degs, nbr_c, w_c, node_w_b, block, cfg.k
         )
-        labels = multilevel_partition(model.graph, model.pinned_block, p, loads, cfg.ml)
+        labels = multilevel_partition_resilient(
+            model.graph, model.pinned_block, p, loads, cfg.ml,
+            on_fallback=lambda: log.__setitem__(
+                "engine_fallbacks", log["engine_fallbacks"] + 1
+            ),
+        )
         new = labels[: bnodes.shape[0]]
         block[bnodes] = new
         np.add.at(loads, new, node_w_b.astype(np.float64))
         cm.commit(bnodes, new, degs, nbr_c, w_c, block)
         note_peak(model.graph.indices.nbytes + model.graph.edge_w.nbytes)
         log["n_batches"] += 1
+        total_batches[0] += 1
         log["moved"] += int(np.count_nonzero(new != old))
         adj.drop(bnodes)
 
@@ -257,29 +372,39 @@ def _restream_pass_impl(
         log["moved"] += int(i != old_b)
         adj.drop(one)
 
-    seen = 0
+    where = f" during restream pass {pass_idx + 1}"
+    records = (stream.iter_from(dict(resume["pos"])) if resume is not None
+               else iter(stream))
     if order == "stream":
         # contiguous δ-batches in stream order (paper Table 2 replay)
-        pend: list[int] = []
-        for v, nbrs, w, node_w in stream:
+        pend: list[int] = ([int(x) for x in np.asarray(resume["pend"]).tolist()]
+                           if resume is not None else [])
+        for v, nbrs, w, node_w in records:
             adj.put(v, nbrs, w, node_w)
             note_peak()
             seen += 1
             if nbrs.size > cfg.d_max:
                 commit_hub(v, node_w)
-                continue
-            pend.append(v)
-            if len(pend) == cfg.batch_size:
-                commit(np.asarray(pend, dtype=np.int64))
-                pend.clear()
+            else:
+                pend.append(v)
+                if len(pend) == cfg.batch_size:
+                    commit(np.asarray(pend, dtype=np.int64))
+                    pend.clear()
+            if ckpt is not None:
+                ckpt.maybe_save(
+                    total_batches[0],
+                    lambda: make_state({"pend": np.asarray(pend, dtype=np.int64)}),
+                )
         if pend:
             commit(np.asarray(pend, dtype=np.int64))
-        _check_replay(stream, seen)
+        _check_replay(stream, seen, where)
         return log
 
     # priority: bounded buffer of streamed gain estimates, δ best evict first
-    buf: list[int] = []
-    gains: list[float] = []
+    buf: list[int] = ([int(x) for x in np.asarray(resume["buf"]).tolist()]
+                      if resume is not None else [])
+    gains: list[float] = ([float(x) for x in np.asarray(resume["gains"]).tolist()]
+                          if resume is not None else [])
 
     def evict_batch() -> None:
         nonlocal buf, gains
@@ -295,20 +420,28 @@ def _restream_pass_impl(
         buf = [u for u, k_ in zip(buf, keep) if k_]
         gains = [g_ for g_, k_ in zip(gains, keep) if k_]
 
-    for v, nbrs, w, node_w in stream:
+    for v, nbrs, w, node_w in records:
         adj.put(v, nbrs, w, node_w)
         note_peak()
         seen += 1
         if nbrs.size > cfg.d_max:
             commit_hub(v, node_w)
-            continue
-        buf.append(v)
-        gains.append(_move_gain(v, nbrs, w, block, cfg.k))
-        while len(buf) >= cfg.buffer_size:
-            evict_batch()
+        else:
+            buf.append(v)
+            gains.append(_move_gain(v, nbrs, w, block, cfg.k))
+            while len(buf) >= cfg.buffer_size:
+                evict_batch()
+        if ckpt is not None:
+            ckpt.maybe_save(
+                total_batches[0],
+                lambda: make_state({
+                    "buf": np.asarray(buf, dtype=np.int64),
+                    "gains": np.asarray(gains, dtype=np.float64),
+                }),
+            )
     while buf:
         evict_batch()
-    _check_replay(stream, seen)
+    _check_replay(stream, seen, where)
     return log
 
 

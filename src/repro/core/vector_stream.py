@@ -21,6 +21,7 @@ the host driver calls its numpy twin for CPU streaming.
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from functools import partial
 
@@ -35,9 +36,17 @@ from repro.core.buffer import VectorBuffer
 from repro.core.buffcut import BuffCutConfig, StreamStats
 from repro.core.fennel import FennelParams, fennel_choose
 from repro.core.batch_model import build_batch_model_from_adj
-from repro.core.multilevel import multilevel_partition
+from repro.core.multilevel import multilevel_partition_resilient
 from repro.core.metrics import internal_edge_ratio_adj, streaming_cut_increment
 from repro.core.rescore import RescoreState
+from repro.core.checkpoint import (
+    Checkpointer,
+    check_resume,
+    pack_rescore,
+    pack_vector_buffer,
+    unpack_rescore,
+    unpack_vector_buffer,
+)
 
 
 @partial(jax.jit, static_argnames=("kind",))
@@ -122,6 +131,9 @@ def _buffcut_partition_vectorized(
     g: CSRGraph | NodeStreamBase,
     cfg: BuffCutConfig,
     vec: VectorizedConfig | None = None,
+    *,
+    ckpt: Checkpointer | None = None,
+    resume: dict | None = None,
 ) -> tuple[np.ndarray, StreamStats]:
     vec = vec if vec is not None else VectorizedConfig()
     wave, chunk, engine = vec.wave, vec.chunk, vec.engine
@@ -142,7 +154,49 @@ def _buffcut_partition_vectorized(
     batch: list[np.ndarray] = []
     batch_count = 0
     stats = StreamStats()
+    # wave/chunk/engine change labels, so they are part of the resume identity
+    config_json = json.dumps(
+        {"cfg": cfg.to_dict(), "vec": vec.to_dict()}, sort_keys=True
+    )
+    if resume is not None:
+        check_resume(resume, "buffcut-vec", config_json, n)
+        block[:] = resume["block"]
+        loads[:] = resume["loads"]
+        pend_b = np.asarray(resume["batch"], dtype=np.int64)
+        if pend_b.size:
+            batch.append(pend_b)
+            batch_count = int(pend_b.size)
+        stats = StreamStats.from_dict(resume["stats"])
+        # rescore first, buffer second: unpack_vector_buffer rewrites the
+        # shared in_buf mask that unpack_rescore restored via st.member
+        unpack_rescore(st, resume["state"])
+        unpack_vector_buffer(buf, resume["buf"])
+        if ckpt is not None:
+            ckpt.mark(stats.n_batches)
+    base_runtime = stats.runtime_s
+    base_bytes = stats.stream_bytes_read
+    base_retries = stats.io_retries
     t0 = time.perf_counter()
+
+    def make_state() -> dict:
+        sd = stats.to_dict()
+        sd["runtime_s"] = base_runtime + (time.perf_counter() - t0)
+        sd["stream_bytes_read"] = base_bytes + stream.bytes_read
+        sd["io_retries"] = base_retries + int(getattr(stream, "io_retries", 0))
+        sd["checkpoints_written"] += ckpt.written + 1
+        return {
+            "kind": "buffcut-vec",
+            "config_json": config_json,
+            "n": n,
+            "pos": stream.tell(),
+            "block": block,
+            "loads": loads,
+            "batch": (np.concatenate(batch)[:batch_count] if batch
+                      else np.empty(0, dtype=np.int64)),
+            "stats": sd,
+            "state": pack_rescore(st),
+            "buf": pack_vector_buffer(buf),
+        }
 
     def note_peak(extra: int = 0) -> None:
         resident = st.adj.resident_bytes + stream.resident_bytes + extra
@@ -166,7 +220,12 @@ def _buffcut_partition_vectorized(
             n, bnodes, degs, nbr_c, w_c, node_w_b, block, cfg.k
         )
         t_ml = time.perf_counter()
-        labels = multilevel_partition(model.graph, model.pinned_block, p, loads, cfg.ml)
+        labels = multilevel_partition_resilient(
+            model.graph, model.pinned_block, p, loads, cfg.ml,
+            on_fallback=lambda: setattr(
+                stats, "engine_fallbacks", stats.engine_fallbacks + 1
+            ),
+        )
         stats.ml_time_s += time.perf_counter() - t_ml
         lab_b = labels[: bnodes.shape[0]]
         block[bnodes] = lab_b
@@ -230,11 +289,16 @@ def _buffcut_partition_vectorized(
             admit(buf.evict(min(wave, len(buf) - cfg.buffer_size + 1)))
 
     pending: list[tuple[int, np.ndarray, np.ndarray, float]] = []
-    for rec in stream:
+    records = stream.iter_from(dict(resume["pos"])) if resume is not None else iter(stream)
+    for rec in records:
         pending.append(rec)
         if len(pending) == chunk:
             process_chunk(pending)
             pending = []
+            # chunk boundary: checkpoints only fire here, so a resumed run
+            # regroups the remaining records into the same chunks
+            if ckpt is not None:
+                ckpt.maybe_save(stats.n_batches, make_state)
     if pending:
         process_chunk(pending)
     while len(buf) > 0:
@@ -242,6 +306,9 @@ def _buffcut_partition_vectorized(
     commit_batch()
     stats.balance = float(loads.max() / (p.n_total / cfg.k)) if p.n_total > 0 else 1.0
     stats.block_loads = loads.tolist()
-    stats.stream_bytes_read = stream.bytes_read
-    stats.runtime_s = time.perf_counter() - t0
+    stats.stream_bytes_read = base_bytes + stream.bytes_read
+    stats.io_retries = base_retries + int(getattr(stream, "io_retries", 0))
+    if ckpt is not None:
+        stats.checkpoints_written += ckpt.written
+    stats.runtime_s = base_runtime + (time.perf_counter() - t0)
     return block, stats

@@ -20,6 +20,7 @@ from repro.graphs.orderings import (
     apply_order,
 )
 from repro.graphs.locality import aid_per_node, mean_aid
+from repro.graphs.faults import FaultSchedule, FaultyFile, FaultyOpener
 from repro.graphs.io import write_metis, read_metis
 from repro.graphs.stream import NodeStream, NodeStreamBase, as_node_stream
 from repro.graphs.stream_io import (
@@ -57,6 +58,9 @@ __all__ = [
     "NodeStreamBase",
     "as_node_stream",
     "DiskNodeStream",
+    "FaultSchedule",
+    "FaultyFile",
+    "FaultyOpener",
     "StreamFormatError",
     "open_stream",
     "permute_to_disk",

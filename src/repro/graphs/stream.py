@@ -96,6 +96,30 @@ class NodeStreamBase:
     def __iter__(self) -> Iterator[tuple[int, np.ndarray, np.ndarray, float]]:
         raise NotImplementedError
 
+    # -------------------------------------------------- resumable iteration
+    def tell(self) -> dict:
+        """Resume token for the record *after* the last one yielded by the
+        active iteration (checkpoint/resume, core/checkpoint.py).
+
+        The token is a plain JSON-able dict.  Every implementation carries
+        ``index`` (the next record's node id); disk streams add the byte
+        ``offset`` to seek to, the number of records to ``skip`` after the
+        seek (sectioned packed files can only seek to section starts), and
+        the running ``directed`` entry count so the end-of-stream
+        validation survives a resume.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support positioned iteration"
+        )
+
+    def iter_from(self, pos: dict) -> Iterator[tuple[int, np.ndarray, np.ndarray, float]]:
+        """Iterate records starting at a `tell()` token — the resume twin of
+        `__iter__`.  Yields (v, nbrs, weights, node_w) with v starting at
+        ``pos["index"]``, bit-identical to the tail of a full iteration."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support positioned iteration"
+        )
+
     def chunks(self, chunk: int) -> Iterator[dict]:
         """Yield contiguous chunks as padded-ELL dicts (generic path)."""
         pend: list[tuple[int, np.ndarray, np.ndarray, float]] = []
@@ -137,6 +161,7 @@ class NodeStream(NodeStreamBase):
         self._g = g
         self.n = g.n
         self.m = g.m
+        self._cursor = 0
         self.has_edge_w = not np.all(g.edge_w == 1.0)
         self.has_node_w = not np.all(g.node_w == 1.0)
         self._totals: tuple[float, float] | None = None
@@ -162,8 +187,15 @@ class NodeStream(NodeStreamBase):
         return self._compute_totals()[1]
 
     def __iter__(self) -> Iterator[tuple[int, np.ndarray, np.ndarray, float]]:
+        return self.iter_from({"index": 0})
+
+    def tell(self) -> dict:
+        return {"index": self._cursor}
+
+    def iter_from(self, pos: dict) -> Iterator[tuple[int, np.ndarray, np.ndarray, float]]:
         g = self._g
-        for v in range(g.n):
+        for v in range(int(pos["index"]), g.n):
+            self._cursor = v + 1
             yield v, g.neighbors(v), g.neighbor_weights(v), float(g.node_w[v])
 
     def chunks(self, chunk: int) -> Iterator[dict]:

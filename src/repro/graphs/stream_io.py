@@ -12,7 +12,38 @@ Packed binary format (``.bcsr``), little-endian:
     magic  b"BCSR" | version u32 | flags u32 (1 = edge weights,
     2 = node weights) | n u64 | m u64 (undirected edges) |
     n_total f64 | m_total f64 | 20 pad bytes          (64-byte header)
-    then n records:  deg u32 [node_w f32] nbr u32[deg] [w f32[deg]]
+
+Version 1 body: n records back to back.  Version 2 (the default since the
+fault-tolerance PR, DESIGN.md §11) groups records into *sections*, each
+prefixed by ``payload_len u32 | crc32 u32``; a section closes every
+`SECTION_RECORDS` records or `SECTION_BYTES` payload bytes, whichever comes
+first, and records never span sections.  Each record is
+``deg u32 [node_w f32] nbr u32[deg] [w f32[deg]]`` in both versions.
+
+The reader verifies each section's CRC *as it streams* (rolling crc32 over
+consumed payload bytes — residency stays one IO chunk, not one section) and
+raises `StreamFormatError` at the section boundary on any mismatch, so a
+bit-flipped or truncated file can never complete into a wrong partition.
+Version-1 files remain readable but are flagged unverified
+(`DiskNodeStream.crc_protected` is False).  Truncation anywhere — header,
+section header, or mid-record — is a loud `StreamFormatError`, never a
+silent EOF.
+
+Transient IO errors (`OSError` other than not-found/permission/is-a-dir)
+are retried with bounded exponential backoff (`RetryPolicy`); retries are
+counted on the reader (`io_retries`) and surfaced through
+`StreamStats.io_retries`.  `opener` injects an alternative `open` — the
+fault-injection harness (graphs/faults.py) plugs in here.
+
+Resumable iteration (checkpoint/resume, core/checkpoint.py): both readers
+track the byte position of the next record as they go; `DiskNodeStream.tell`
+returns a JSON-able token — next record ``index``, seek ``offset`` (a
+section start for v2 packed files), records to ``skip`` after the seek, and
+the running ``directed`` entry count — and `iter_from(token)` resumes the
+stream bit-identically to the tail of a full read.  Because v2 resume
+always seeks to a *section start* and re-accumulates that section's CRC
+over skipped records too, corruption inside a partially-consumed section is
+re-detected on resume.
 
 The header carries the canonical totals (graphs/stream.py) so weighted
 graphs need no pre-pass; METIS text streams derive them from the header for
@@ -29,8 +60,11 @@ appended to the output.  The result is byte-for-byte the stream
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import struct
+import time
+import zlib
 
 import numpy as np
 
@@ -39,13 +73,89 @@ from repro.graphs.stream import NodeStreamBase, canonical_totals, seq_sum64
 
 MAGIC = b"BCSR"
 _HEADER = struct.Struct("<4sIIQQdd20x")  # 64 bytes
+_HDR_CRC_OFF = _HEADER.size - 20         # v2: crc32 of bytes [0,44) in pad
+_SECTION = struct.Struct("<II")          # payload_len, crc32
 _FLAG_EDGE_W = 1
 _FLAG_NODE_W = 2
 DEFAULT_IO_CHUNK = 1 << 20
+PACKED_VERSION = 2
+SECTION_RECORDS = 1 << 12   # close a section every 4096 records ...
+SECTION_BYTES = 1 << 20     # ... or 1 MiB of payload, whichever first
 
 
 class StreamFormatError(ValueError):
-    """Malformed graph file (bad header, truncated data, invalid record)."""
+    """Malformed graph file (bad header, truncated data, invalid record,
+    CRC mismatch)."""
+
+
+# ------------------------------------------------------------ IO hardening
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry-with-backoff for transient IO errors.
+
+    `retries` is the number of re-attempts after the first failure; the
+    sleep starts at `backoff_s` and doubles per attempt.  Not-found /
+    permission / is-a-directory errors are never transient and propagate
+    immediately.  `retries=0` disables retrying.
+    """
+
+    retries: int = 3
+    backoff_s: float = 0.01
+
+    def is_transient(self, e: OSError) -> bool:
+        return not isinstance(
+            e, (FileNotFoundError, PermissionError, IsADirectoryError, NotADirectoryError)
+        )
+
+
+DEFAULT_RETRY = RetryPolicy()
+
+
+def _retrying(fn, policy: "RetryPolicy | None", counter=None):
+    """Call `fn()`; on a transient OSError retry up to `policy.retries`
+    times with exponential backoff, bumping `counter` (a 1-element list)
+    per retry.  The final failure propagates."""
+    if policy is None or policy.retries <= 0:
+        return fn()
+    delay = policy.backoff_s
+    for attempt in range(policy.retries + 1):
+        try:
+            return fn()
+        except OSError as e:
+            if not policy.is_transient(e) or attempt == policy.retries:
+                raise
+            if counter is not None:
+                counter[0] += 1
+            time.sleep(delay)
+            delay *= 2.0
+
+
+def _read_retrying(f, k: int, policy: "RetryPolicy | None", counter=None) -> bytes:
+    """`f.read(k)` with transient-error retry; the file position is pinned
+    before each attempt so a failed partial read cannot skip bytes."""
+    pos = f.tell()
+
+    def attempt() -> bytes:
+        if f.tell() != pos:
+            f.seek(pos)
+        return f.read(k)
+
+    return _retrying(attempt, policy, counter)
+
+
+def _read_exact(f, k: int) -> bytes:
+    """Read exactly `k` bytes unless EOF intervenes: POSIX read() may
+    legitimately return fewer bytes than asked, so fixed-size probes (magic,
+    packed header) must loop or they misparse on a partial read."""
+    buf = b""
+    while len(buf) < k:
+        chunk = f.read(k - len(buf))
+        if not chunk:
+            break
+        buf += chunk
+    return buf
 
 
 # --------------------------------------------------------------- METIS text
@@ -79,14 +189,27 @@ class MetisChunkReader:
     Tolerates trailing whitespace, CR line endings, '%' comment lines and
     blank lines (isolated nodes, unless node weights make them malformed).
     Raises StreamFormatError with the offending node on any malformed data.
+    Transient read errors retry per `retry`; `opener` swaps the `open`
+    implementation (fault injection).  `next_pos` is the resume token for
+    the record after the last one yielded (see module docstring).
     """
 
-    def __init__(self, path: str, io_chunk_bytes: int = DEFAULT_IO_CHUNK):
+    def __init__(self, path: str, io_chunk_bytes: int = DEFAULT_IO_CHUNK,
+                 *, opener=open, retry: "RetryPolicy | None" = DEFAULT_RETRY):
         self.path = path
         self.io_chunk_bytes = max(1, int(io_chunk_bytes))
+        self.opener = opener
+        self.retry = retry
         self.bytes_read = 0
         self.resident_bytes = 0
+        self._io_retries = [0]
         self._header: tuple[int, int, bool, bool] | None = None
+        self._offset = 0  # absolute byte offset of the next unconsumed line
+        self.next_pos: dict = {"index": 0, "offset": 0, "skip": 0, "directed": 0}
+
+    @property
+    def io_retries(self) -> int:
+        return self._io_retries[0]
 
     def header(self) -> tuple[int, int, bool, bool]:
         """(n, m, has_node_w, has_edge_w) — reads just enough of the file."""
@@ -97,14 +220,18 @@ class MetisChunkReader:
                 raise StreamFormatError(f"{self.path}: empty file, missing METIS header")
         return self._header
 
-    def _lines(self, count_into_self: bool = True):
+    def _lines(self, count_into_self: bool = True, start_offset: "int | None" = None):
         """Yield data lines (header consumed internally, comments skipped).
 
         A trailing newline terminates the last line rather than opening a
         phantom blank one; interior blank lines are real (isolated nodes).
+        `self._offset` always holds the absolute byte offset just past the
+        most recently yielded (or skipped) line.  With `start_offset` the
+        file is entered mid-body (resume): the header must already be known.
         """
         buf = b""
-        saw_header = False
+        saw_header = start_offset is not None
+        self._offset = start_offset or 0
 
         def handle(line: bytes):
             nonlocal saw_header
@@ -119,12 +246,16 @@ class MetisChunkReader:
                 return True  # header sentinel (consumed by header())
             return line
 
-        with open(self.path, "rb") as f:
+        f = _retrying(lambda: self.opener(self.path, "rb"), self.retry, self._io_retries)
+        with f:
+            if start_offset:
+                f.seek(start_offset)
             while True:
-                chunk = f.read(self.io_chunk_bytes)
+                chunk = _read_retrying(f, self.io_chunk_bytes, self.retry, self._io_retries)
                 if not chunk:
                     if buf:  # final line without trailing newline
                         out = handle(buf)
+                        self._offset += len(buf)
                         if out is True:
                             yield None
                         elif out is not None:
@@ -141,22 +272,36 @@ class MetisChunkReader:
                 buf = parts.pop()
                 for line in parts:
                     out = handle(line)
+                    self._offset += len(line) + 1
                     if out is True:
                         yield None
                     elif out is not None:
                         yield out
 
-    def records(self):
+    def records(self, start: "dict | None" = None):
         """Yield (nbrs int32, weights float32, node_w float) per node, in
-        file order; exactly n records or StreamFormatError."""
-        lines = self._lines()
-        try:
-            next(lines)  # header sentinel
-        except StopIteration:
-            raise StreamFormatError(f"{self.path}: empty file, missing METIS header") from None
+        file order; exactly n records or StreamFormatError.  `start` is a
+        `next_pos` token: parsing resumes at that byte offset / node index
+        with the directed-entry counter seeded, so the end-of-stream
+        validation still holds across a resume."""
+        if start is not None and int(start["offset"]) == 0:
+            start = None  # offset 0 precedes the header: a fresh start
+        if start is None:
+            lines = self._lines()
+            try:
+                next(lines)  # header sentinel
+            except StopIteration:
+                raise StreamFormatError(
+                    f"{self.path}: empty file, missing METIS header"
+                ) from None
+            v = 0
+            directed = 0
+        else:
+            self.header()  # n/m/fmt come from the file head
+            lines = self._lines(start_offset=int(start["offset"]))
+            v = int(start["index"])
+            directed = int(start["directed"])
         n, m, has_nw, has_ew = self._header
-        v = 0
-        directed = 0
         for line in lines:
             if v >= n:
                 if line:
@@ -200,8 +345,11 @@ class MetisChunkReader:
                     f"{self.path}: node {v + 1}: neighbor id out of range [1, {n}]"
                 )
             directed += int(nbrs.size)
-            yield (nbrs - 1).astype(np.int32), wts, node_w
             v += 1
+            self.next_pos = {
+                "index": v, "offset": self._offset, "skip": 0, "directed": directed,
+            }
+            yield (nbrs - 1).astype(np.int32), wts, node_w
         if v != n:
             raise StreamFormatError(
                 f"{self.path}: expected {n} node lines, file ended after {v}"
@@ -219,20 +367,43 @@ class MetisChunkReader:
 class PackedWriter:
     """Incremental writer for the packed format — one record at a time, no
     CSR required.  Keeps O(n) totals state (deg_w, node_w) to stamp the
-    canonical aggregates into the header on close."""
+    canonical aggregates into the header on close.
 
-    def __init__(self, path: str, n: int, m: int, *, has_edge_w: bool, has_node_w: bool):
+    Version 2 (default) buffers records into CRC32-protected sections
+    (`section_records` / `section_bytes` close thresholds); pass
+    ``version=1`` to emit the legacy unprotected layout.
+    """
+
+    def __init__(self, path: str, n: int, m: int, *, has_edge_w: bool, has_node_w: bool,
+                 version: int = PACKED_VERSION,
+                 section_records: int = SECTION_RECORDS,
+                 section_bytes: int = SECTION_BYTES):
+        if version not in (1, 2):
+            raise ValueError(f"packed version must be 1 or 2, got {version}")
         self.path = path
         self.n = int(n)
         self.m = int(m)
         self.has_edge_w = has_edge_w
         self.has_node_w = has_node_w
+        self.version = int(version)
+        self.section_records = max(1, int(section_records))
+        self.section_bytes = max(1, int(section_bytes))
         self._f = open(path, "wb")
-        self._f.write(_HEADER.pack(MAGIC, 1, 0, 0, 0, 0.0, 0.0))  # placeholder
+        self._f.write(_HEADER.pack(MAGIC, self.version, 0, 0, 0, 0.0, 0.0))  # placeholder
         self._deg_w = np.zeros(self.n, dtype=np.float64)
         self._node_w = np.ones(self.n, dtype=np.float32)
         self._written = 0
         self._directed = 0
+        self._sec = bytearray()
+        self._sec_records = 0
+
+    def _flush_section(self) -> None:
+        if not self._sec:
+            return
+        self._f.write(_SECTION.pack(len(self._sec), zlib.crc32(self._sec)))
+        self._f.write(self._sec)
+        self._sec = bytearray()
+        self._sec_records = 0
 
     def write_node(self, nbrs: np.ndarray, weights: np.ndarray | None = None,
                    node_w: float = 1.0) -> None:
@@ -243,12 +414,20 @@ class PackedWriter:
         if weights is None:
             weights = np.ones(nbrs.shape[0], dtype=np.float32)
         weights = np.asarray(weights, dtype=np.float32)
-        self._f.write(struct.pack("<I", nbrs.shape[0]))
+        rec = bytearray(struct.pack("<I", nbrs.shape[0]))
         if self.has_node_w:
-            self._f.write(struct.pack("<f", node_w))
-        self._f.write(nbrs.astype("<u4").tobytes())
+            rec += struct.pack("<f", node_w)
+        rec += nbrs.astype("<u4").tobytes()
         if self.has_edge_w:
-            self._f.write(weights.astype("<f4").tobytes())
+            rec += weights.astype("<f4").tobytes()
+        if self.version == 1:
+            self._f.write(rec)
+        else:
+            self._sec += rec
+            self._sec_records += 1
+            if (self._sec_records >= self.section_records
+                    or len(self._sec) >= self.section_bytes):
+                self._flush_section()
         self._deg_w[v] = seq_sum64(weights)
         self._node_w[v] = node_w
         self._directed += int(nbrs.shape[0])
@@ -265,10 +444,20 @@ class PackedWriter:
             raise StreamFormatError(
                 f"{self.path}: m={self.m} but {self._directed} directed entries written"
             )
+        if self.version >= 2:
+            self._flush_section()
         n_total, m_total = canonical_totals(self._deg_w, self._node_w)
         flags = (_FLAG_EDGE_W if self.has_edge_w else 0) | (_FLAG_NODE_W if self.has_node_w else 0)
+        hdr = _HEADER.pack(MAGIC, self.version, flags, self.n, self.m, n_total, m_total)
+        if self.version >= 2:
+            # header CRC lives in the first 4 pad bytes: the section CRCs
+            # cover the data, this covers n/m/totals (a flipped total would
+            # silently skew every score)
+            hdr = hdr[:_HDR_CRC_OFF] + struct.pack(
+                "<I", zlib.crc32(hdr[:_HDR_CRC_OFF])
+            ) + hdr[_HDR_CRC_OFF + 4:]
         self._f.seek(0)
-        self._f.write(_HEADER.pack(MAGIC, 1, flags, self.n, self.m, n_total, m_total))
+        self._f.write(hdr)
         self._f.close()
 
     def __enter__(self) -> "PackedWriter":
@@ -281,18 +470,33 @@ class PackedWriter:
             self._f.close()
 
 
-def read_packed_header(path: str) -> dict:
-    with open(path, "rb") as f:
-        raw = f.read(_HEADER.size)
+def read_packed_header(path: str, *, opener=open,
+                       retry: "RetryPolicy | None" = DEFAULT_RETRY,
+                       retry_counter=None) -> dict:
+    def _read() -> bytes:
+        with opener(path, "rb") as f:
+            return _read_exact(f, _HEADER.size)
+
+    raw = _retrying(_read, retry, retry_counter)
     if len(raw) < _HEADER.size:
         raise StreamFormatError(f"{path}: truncated packed header")
     magic, version, flags, n, m, n_total, m_total = _HEADER.unpack(raw)
     if magic != MAGIC:
         raise StreamFormatError(f"{path}: bad magic {magic!r} (not a packed graph)")
-    if version != 1:
+    if version not in (1, 2):
         raise StreamFormatError(f"{path}: unsupported packed version {version}")
+    if version >= 2:
+        # stored 0 = legacy v2 file from before the header CRC: readable,
+        # just unverified (mirrors the v1 "no CRC" contract)
+        stored = struct.unpack_from("<I", raw, _HDR_CRC_OFF)[0]
+        computed = zlib.crc32(raw[:_HDR_CRC_OFF])
+        if stored != 0 and stored != computed:
+            raise StreamFormatError(
+                f"{path}: packed header CRC mismatch (stored {stored:#010x}, "
+                f"computed {computed:#010x}): header is corrupted"
+            )
     return {
-        "n": int(n), "m": int(m),
+        "n": int(n), "m": int(m), "version": int(version),
         "has_edge_w": bool(flags & _FLAG_EDGE_W),
         "has_node_w": bool(flags & _FLAG_NODE_W),
         "n_total": float(n_total), "m_total": float(m_total),
@@ -300,28 +504,63 @@ def read_packed_header(path: str) -> dict:
 
 
 class PackedChunkReader:
-    """Incremental reader for the packed format with a bounded byte buffer."""
+    """Incremental reader for the packed format with a bounded byte buffer.
 
-    def __init__(self, path: str, io_chunk_bytes: int = DEFAULT_IO_CHUNK):
+    Version-2 sections are CRC-verified with a rolling crc32 over consumed
+    payload bytes — a mismatch raises `StreamFormatError` at the section
+    boundary, so residency never grows past the IO chunk.  `next_pos` is
+    the resume token for the record after the last one yielded; for v2 its
+    offset is always the enclosing section's header, with `skip` records to
+    discard after the seek (the whole section re-verifies on resume).
+    """
+
+    def __init__(self, path: str, io_chunk_bytes: int = DEFAULT_IO_CHUNK,
+                 *, opener=open, retry: "RetryPolicy | None" = DEFAULT_RETRY):
         self.path = path
         self.io_chunk_bytes = max(64, int(io_chunk_bytes))
-        self.meta = read_packed_header(path)
+        self.opener = opener
+        self.retry = retry
+        self._io_retries = [0]
+        self.meta = read_packed_header(path, opener=opener, retry=retry,
+                                       retry_counter=self._io_retries)
         self.bytes_read = 0
         self.resident_bytes = 0
+        self.next_pos: dict = {
+            "index": 0, "offset": _HEADER.size, "skip": 0, "directed": 0,
+        }
 
-    def records(self):
+    @property
+    def io_retries(self) -> int:
+        return self._io_retries[0]
+
+    def records(self, start: "dict | None" = None):
         meta = self.meta
         has_ew, has_nw = meta["has_edge_w"], meta["has_node_w"]
         n = meta["n"]
-        with open(self.path, "rb") as f:
-            f.seek(_HEADER.size)
+        sectioned = meta["version"] >= 2
+        if start is None:
+            v0, seek_to, skip, directed = 0, _HEADER.size, 0, 0
+        else:
+            v0 = int(start["index"])
+            seek_to = int(start["offset"])
+            skip = int(start.get("skip", 0))
+            directed = int(start["directed"])
+        f = _retrying(lambda: self.opener(self.path, "rb"), self.retry, self._io_retries)
+        with f:
+            f.seek(seek_to)
             buf = bytearray()
             pos = 0
+            abs_off = seek_to        # file offset of buf[pos]
+            sec_left = 0             # payload bytes left in the open section
+            sec_crc = 0              # rolling crc32 of consumed payload
+            sec_expect = 0           # the section header's crc32
+            sec_start = seek_to      # file offset of the open section header
+            sec_consumed = 0         # records consumed from the open section
 
             def ensure(k: int) -> bool:
                 nonlocal buf, pos
                 while len(buf) - pos < k:
-                    chunk = f.read(self.io_chunk_bytes)
+                    chunk = _read_retrying(f, self.io_chunk_bytes, self.retry, self._io_retries)
                     if not chunk:
                         return False
                     self.bytes_read += len(chunk)
@@ -331,19 +570,58 @@ class PackedChunkReader:
                     buf += chunk
                 return True
 
-            directed = 0
-            for v in range(n):
+            def open_section(v: int) -> None:
+                nonlocal pos, abs_off, sec_left, sec_crc, sec_expect, sec_start, sec_consumed
+                if not ensure(_SECTION.size):
+                    raise StreamFormatError(
+                        f"{self.path}: truncated section header before record {v} (of {n})"
+                    )
+                sec_start = abs_off
+                payload_len, sec_expect = _SECTION.unpack_from(buf, pos)
+                pos += _SECTION.size
+                abs_off += _SECTION.size
+                if payload_len == 0:
+                    raise StreamFormatError(
+                        f"{self.path}: empty section at offset {sec_start}"
+                    )
+                sec_left = payload_len
+                sec_crc = 0
+                sec_consumed = 0
+
+            def close_section() -> None:
+                nonlocal sec_left
+                if sec_crc != sec_expect:
+                    raise StreamFormatError(
+                        f"{self.path}: CRC mismatch in section at offset {sec_start} "
+                        f"(stored {sec_expect:#010x}, computed {sec_crc:#010x}): "
+                        "file is corrupted"
+                    )
+                sec_left = 0
+
+            consumed_skip = 0
+            v = v0
+            while v < n or consumed_skip < skip:
+                if sectioned and sec_left == 0:
+                    open_section(v)
                 if not ensure(4):
                     raise StreamFormatError(
                         f"{self.path}: truncated at record {v} (of {n})"
                     )
-                (deg,) = struct.unpack_from("<I", buf, pos)
-                pos += 4
-                need = (4 if has_nw else 0) + 4 * deg + (4 * deg if has_ew else 0)
-                if not ensure(need):
+                (deg,) = struct.unpack_from("<I", buf, pos)  # peek; pos unchanged
+                rec_bytes = 4 + (4 if has_nw else 0) + 4 * deg + (4 * deg if has_ew else 0)
+                if sectioned and rec_bytes > sec_left:
+                    raise StreamFormatError(
+                        f"{self.path}: record {v} (deg={deg}) overruns its section "
+                        f"at offset {sec_start}: file is corrupted or truncated"
+                    )
+                if not ensure(rec_bytes):
                     raise StreamFormatError(
                         f"{self.path}: truncated inside record {v} (deg={deg})"
                     )
+                # ensure() may compact, but never past pos — the record
+                # always starts at the (possibly relocated) current pos
+                rec_start = pos
+                pos += 4
                 node_w = 1.0
                 if has_nw:
                     (node_w,) = struct.unpack_from("<f", buf, pos)
@@ -355,13 +633,39 @@ class PackedChunkReader:
                     pos += 4 * deg
                 else:
                     wts = np.ones(deg, dtype=np.float32)
+                abs_off += rec_bytes
+                if sectioned:
+                    sec_crc = zlib.crc32(memoryview(buf)[rec_start:pos], sec_crc)
+                    sec_left -= rec_bytes
+                    sec_consumed += 1
+                    if sec_left == 0:
+                        close_section()
+                if consumed_skip < skip:
+                    # resume discard: bytes already count toward the CRC
+                    consumed_skip += 1
+                    continue
                 if deg and (nbrs.min() < 0 or nbrs.max() >= n):
                     raise StreamFormatError(
                         f"{self.path}: record {v}: neighbor id out of range [0, {n})"
                     )
                 directed += int(deg)
                 self.resident_bytes = len(buf) - pos
-                yield nbrs, wts, float(node_w)
+                v += 1
+                if sectioned and sec_left > 0:
+                    self.next_pos = {
+                        "index": v, "offset": sec_start,
+                        "skip": sec_consumed, "directed": directed,
+                    }
+                else:
+                    self.next_pos = {
+                        "index": v, "offset": abs_off, "skip": 0, "directed": directed,
+                    }
+                yield nbrs, wts, node_w
+            if sectioned and sec_left > 0:
+                raise StreamFormatError(
+                    f"{self.path}: section at offset {sec_start} has {sec_left} "
+                    f"payload bytes past the last record: file is corrupted"
+                )
             if directed != 2 * meta["m"]:
                 raise StreamFormatError(
                     f"{self.path}: header m={meta['m']} but {directed} directed entries"
@@ -379,27 +683,54 @@ class DiskNodeStream(NodeStreamBase):
     come from the packed header, or — for METIS text — from the header
     directly (fmt 00) or a one-shot counting pre-pass (weighted formats).
     Iterating opens a fresh reader, so multiple passes (restreaming) work.
+
+    `tell()` / `iter_from(token)` expose resumable iteration for
+    checkpoint/resume; `crc_protected` says whether the backing file
+    carries per-section CRCs (packed v2) or streams unverified (METIS
+    text, packed v1); `io_retries` counts transient-IO retries absorbed by
+    the hardened readers.
     """
 
-    def __init__(self, path: str, io_chunk_bytes: int = DEFAULT_IO_CHUNK):
+    def __init__(self, path: str, io_chunk_bytes: int = DEFAULT_IO_CHUNK,
+                 *, opener=open, retry: "RetryPolicy | None" = DEFAULT_RETRY):
         self.path = path
         self.io_chunk_bytes = int(io_chunk_bytes)
+        self.opener = opener
+        self.retry = retry
         self._reader: MetisChunkReader | PackedChunkReader | None = None
         self._bytes_read_done = 0
-        with open(path, "rb") as f:
-            self._packed = f.read(4) == MAGIC
+        self._io_retries_done = 0
+
+        def _magic() -> bytes:
+            with opener(path, "rb") as f:
+                return _read_exact(f, 4)
+
+        init_retries = [0]
+        self._packed = _retrying(_magic, retry, init_retries) == MAGIC
+        self._io_retries_done += init_retries[0]
         if self._packed:
-            meta = read_packed_header(path)
+            hdr_retries = [0]
+            meta = read_packed_header(path, opener=opener, retry=retry,
+                                      retry_counter=hdr_retries)
+            self._io_retries_done += hdr_retries[0]
             self.n, self.m = meta["n"], meta["m"]
             self._totals: tuple[float, float] | None = (meta["n_total"], meta["m_total"])
             self.has_edge_w = meta["has_edge_w"]
             self.has_node_w = meta["has_node_w"]
+            self.crc_protected = meta["version"] >= 2
         else:
-            r = MetisChunkReader(path, io_chunk_bytes)
+            r = self._make_reader()
             self.n, self.m, self.has_node_w, self.has_edge_w = r.header()
+            self._bytes_read_done += r.bytes_read
+            self._io_retries_done += r.io_retries
+            self.crc_protected = False
             # fmt 00: unit weights make the canonical f64 sums exact integers
             weighted = self.has_node_w or self.has_edge_w
             self._totals = None if weighted else (float(self.n), float(self.m))
+
+    def _make_reader(self) -> "MetisChunkReader | PackedChunkReader":
+        cls = PackedChunkReader if self._packed else MetisChunkReader
+        return cls(self.path, self.io_chunk_bytes, opener=self.opener, retry=self.retry)
 
     # ----------------------------------------------------------- aggregates
     def _compute_totals(self) -> tuple[float, float]:
@@ -407,11 +738,12 @@ class DiskNodeStream(NodeStreamBase):
             # weighted METIS text: one counting pre-pass (O(n) state only)
             deg_w = np.zeros(self.n, dtype=np.float64)
             node_w = np.ones(self.n, dtype=np.float32)
-            r = MetisChunkReader(self.path, self.io_chunk_bytes)
+            r = self._make_reader()
             for v, (_, wts, nw) in enumerate(r.records()):
                 deg_w[v] = seq_sum64(wts)
                 node_w[v] = nw
             self._bytes_read_done += r.bytes_read
+            self._io_retries_done += r.io_retries
             self._totals = canonical_totals(deg_w, node_w)
         return self._totals
 
@@ -433,32 +765,50 @@ class DiskNodeStream(NodeStreamBase):
         r = self._reader
         return self._bytes_read_done + (r.bytes_read if r is not None else 0)
 
+    @property
+    def io_retries(self) -> int:
+        r = self._reader
+        return self._io_retries_done + (r.io_retries if r is not None else 0)
+
     # ------------------------------------------------------------ iteration
     def __iter__(self):
-        if self._packed:
-            reader: MetisChunkReader | PackedChunkReader = PackedChunkReader(
-                self.path, self.io_chunk_bytes
-            )
-        else:
-            reader = MetisChunkReader(self.path, self.io_chunk_bytes)
+        return self._iterate(None)
+
+    def tell(self) -> dict:
+        r = self._reader
+        if r is None:
+            start = _HEADER.size if self._packed else 0
+            return {"index": 0, "offset": start, "skip": 0, "directed": 0}
+        return dict(r.next_pos)
+
+    def iter_from(self, pos: dict):
+        return self._iterate(dict(pos))
+
+    def _iterate(self, pos: "dict | None"):
+        reader = self._make_reader()
         self._reader = reader
+        v = 0 if pos is None else int(pos["index"])
         try:
-            for v, (nbrs, wts, node_w) in enumerate(reader.records()):
+            for nbrs, wts, node_w in reader.records(pos):
                 yield v, nbrs, wts, node_w
+                v += 1
         finally:
             self._bytes_read_done += reader.bytes_read
+            self._io_retries_done += reader.io_retries
             self._reader = None
 
 
-def open_stream(path: str, io_chunk_bytes: int = DEFAULT_IO_CHUNK) -> DiskNodeStream:
+def open_stream(path: str, io_chunk_bytes: int = DEFAULT_IO_CHUNK, **kw) -> DiskNodeStream:
     """Open a graph file (METIS text or packed binary) as a disk stream."""
-    return DiskNodeStream(path, io_chunk_bytes)
+    return DiskNodeStream(path, io_chunk_bytes, **kw)
 
 
 # ---------------------------------------------------------------- writers
 
 
-def write_packed(g, path: str) -> None:
+def write_packed(g, path: str, *, version: int = PACKED_VERSION,
+                 section_records: int = SECTION_RECORDS,
+                 section_bytes: int = SECTION_BYTES) -> None:
     """Write a CSRGraph or any NodeStream to the packed format.
 
     Given a stream, this is a pure disk-to-disk conversion: only one record
@@ -471,6 +821,7 @@ def write_packed(g, path: str) -> None:
         path, stream.n, stream.m,
         has_edge_w=getattr(stream, "has_edge_w", True),
         has_node_w=getattr(stream, "has_node_w", True),
+        version=version, section_records=section_records, section_bytes=section_bytes,
     ) as w:
         for _, nbrs, wts, node_w in stream:
             w.write_node(nbrs, wts, node_w)

@@ -9,7 +9,16 @@ except ModuleNotFoundError:
 
 import pytest
 
-from repro.graphs import (
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "faultinject: deterministic IO fault-injection tests (run alone with "
+        "`pytest -m faultinject`)",
+    )
+
+
+from repro.graphs import (  # noqa: E402
     rmat_graph,
     grid_mesh_graph,
     sbm_graph,

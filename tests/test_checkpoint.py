@@ -1,0 +1,323 @@
+"""Unit + property tests for core/checkpoint.py: file format integrity,
+cadence semantics, and structure packers round-tripping bit-exactly
+(including tombstoned PQ buckets, CMS rows, and the vectorized buffer's
+zero-copy member aliasing)."""
+import os
+import struct
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buffer import BucketPQ, VectorBuffer
+from repro.core.checkpoint import (
+    CKPT_MAGIC,
+    CheckpointError,
+    Checkpointer,
+    check_resume,
+    load_checkpoint,
+    pack_bucket_pq,
+    pack_rescore,
+    pack_vector_buffer,
+    save_checkpoint,
+    unpack_bucket_pq,
+    unpack_rescore,
+    unpack_vector_buffer,
+)
+from repro.core.rescore import RescoreState
+from repro.core.scores import get_score
+
+
+# ------------------------------------------------------------- file format
+
+
+def _state() -> dict:
+    return {
+        "kind": "buffcut",
+        "n": 64,
+        "pos": {"index": 3, "offset": 1234, "skip": 0},
+        "block": np.arange(64, dtype=np.int64) % 4,
+        "loads": np.linspace(0.0, 1.0, 4),
+        "nested": {"list": [1, 2.5, "s", None, np.arange(3)], "flag": True},
+    }
+
+
+def test_save_load_round_trip(tmp_path):
+    p = str(tmp_path / "c.ckpt")
+    save_checkpoint(p, _state())
+    out = load_checkpoint(p)
+    ref = _state()
+    assert out["kind"] == ref["kind"] and out["n"] == ref["n"]
+    assert out["pos"] == ref["pos"]
+    np.testing.assert_array_equal(out["block"], ref["block"])
+    np.testing.assert_array_equal(out["loads"], ref["loads"])
+    assert out["nested"]["flag"] is True
+    np.testing.assert_array_equal(out["nested"]["list"][4], np.arange(3))
+    # loaded arrays are writable copies
+    out["block"][0] = 99
+
+
+def test_save_is_atomic_no_tmp_left(tmp_path):
+    p = str(tmp_path / "c.ckpt")
+    save_checkpoint(p, _state())
+    save_checkpoint(p, _state())  # overwrite goes through the same rename
+    assert os.listdir(tmp_path) == ["c.ckpt"]
+
+
+def test_load_rejects_bad_magic(tmp_path):
+    p = str(tmp_path / "c.ckpt")
+    save_checkpoint(p, _state())
+    raw = bytearray(open(p, "rb").read())
+    raw[:4] = b"NOPE"
+    open(p, "wb").write(bytes(raw))
+    with pytest.raises(CheckpointError, match="bad magic"):
+        load_checkpoint(p)
+
+
+def test_load_rejects_bad_version(tmp_path):
+    p = str(tmp_path / "c.ckpt")
+    save_checkpoint(p, _state())
+    raw = bytearray(open(p, "rb").read())
+    raw[4:8] = struct.pack("<I", 999)
+    open(p, "wb").write(bytes(raw))
+    with pytest.raises(CheckpointError, match="version"):
+        load_checkpoint(p)
+
+
+def test_load_rejects_truncation(tmp_path):
+    p = str(tmp_path / "c.ckpt")
+    save_checkpoint(p, _state())
+    raw = open(p, "rb").read()
+    open(p, "wb").write(raw[: len(raw) // 2])
+    with pytest.raises(CheckpointError, match="truncated"):
+        load_checkpoint(p)
+    open(p, "wb").write(raw[:10])
+    with pytest.raises(CheckpointError, match="truncated"):
+        load_checkpoint(p)
+
+
+def test_load_rejects_payload_corruption(tmp_path):
+    p = str(tmp_path / "c.ckpt")
+    save_checkpoint(p, _state())
+    raw = bytearray(open(p, "rb").read())
+    raw[len(raw) // 2] ^= 0xFF
+    open(p, "wb").write(bytes(raw))
+    with pytest.raises(CheckpointError, match="CRC"):
+        load_checkpoint(p)
+
+
+def test_magic_is_not_a_valid_prefix_of_anything_else(tmp_path):
+    # a packed graph handed to load_checkpoint must fail loudly, not parse
+    p = str(tmp_path / "g.bin")
+    open(p, "wb").write(b"not a checkpoint at all" * 4)
+    with pytest.raises(CheckpointError):
+        load_checkpoint(p)
+    assert CKPT_MAGIC == b"BCKP"
+
+
+def test_encode_rejects_unserializable(tmp_path):
+    with pytest.raises(TypeError):
+        save_checkpoint(str(tmp_path / "c"), {"bad": object()})
+    with pytest.raises(TypeError):
+        save_checkpoint(str(tmp_path / "c"), {1: "non-str key"})
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.integers(-2**40, 2**40), max_size=6),
+    st.lists(st.floats(-1e9, 1e9), max_size=6),
+    st.integers(0, 50),
+)
+def test_property_state_tree_round_trip(tmp_path_factory, ints, floats, arr_n):
+    # mixed scalar types, nesting, None/bool leaves, and arrays of several
+    # dtypes — the exact value classes the drivers put in snapshots
+    p = str(tmp_path_factory.mktemp("ck") / "c.ckpt")
+    state = {
+        "tree": {"ints": ints, "floats": floats, "none": None, "flag": True,
+                 "deep": [{"s": "x", "t": (1, 2.5)}]},
+        "i64": np.arange(arr_n, dtype=np.int64),
+        "f64": np.linspace(-1.0, 1.0, arr_n),
+        "bool": (np.arange(arr_n) % 2 == 0),
+    }
+    save_checkpoint(p, state)
+    out = load_checkpoint(p)
+    assert out["tree"]["ints"] == ints and out["tree"]["floats"] == floats
+    assert out["tree"]["none"] is None and out["tree"]["flag"] is True
+    assert out["tree"]["deep"] == [{"s": "x", "t": [1, 2.5]}]  # tuples -> lists
+    for key in ("i64", "f64", "bool"):
+        np.testing.assert_array_equal(out[key], state[key])
+        assert out[key].dtype == state[key].dtype
+
+
+# ----------------------------------------------------------- check_resume
+
+
+def test_check_resume_guards():
+    res = {"kind": "buffcut", "config_json": "{}", "n": 10}
+    check_resume(res, "buffcut", "{}", 10)
+    with pytest.raises(CheckpointError, match="written by a 'buffcut' run"):
+        check_resume(res, "buffcut-vec", "{}", 10)
+    with pytest.raises(CheckpointError, match="config does not match"):
+        check_resume(res, "buffcut", '{"k": 4}', 10)
+    with pytest.raises(CheckpointError, match="10-node stream"):
+        check_resume(res, "buffcut", "{}", 11)
+
+
+# -------------------------------------------------------------- cadence
+
+
+def test_checkpointer_crossing_semantics(tmp_path):
+    ck = Checkpointer(str(tmp_path / "c"), every=4)
+    saves = []
+    mk = lambda: saves.append(1) or {"kind": "t"}  # noqa: E731
+    assert not ck.maybe_save(3, mk)
+    assert ck.maybe_save(4, mk)          # exact multiple
+    assert not ck.maybe_save(4, mk)      # no re-save at the same counter
+    assert not ck.maybe_save(7, mk)
+    assert ck.maybe_save(9, mk)          # jumped past 8 — still fires
+    assert not ck.maybe_save(11, mk)
+    assert ck.maybe_save(32, mk)         # multi-multiple jump fires once
+    assert not ck.maybe_save(33, mk)
+    assert ck.written == 3 and len(saves) == 3
+
+
+def test_checkpointer_mark_and_reset(tmp_path):
+    ck = Checkpointer(str(tmp_path / "c"), every=4)
+    ck.mark(9)  # resumed at batch 9: next save is at 12, not immediately
+    assert not ck.due(9) and not ck.due(11)
+    assert ck.due(12)
+    ck.reset()  # new phase: counter restarts
+    assert ck.due(4)
+
+
+def test_checkpointer_disabled_costs_nothing(tmp_path):
+    ck = Checkpointer(str(tmp_path / "c"), every=0)
+    assert not ck.maybe_save(10**9, lambda: pytest.fail("built state"))
+    with pytest.raises(ValueError):
+        Checkpointer(str(tmp_path / "c"), every=-1)
+
+
+def test_checkpointer_extra_merged(tmp_path):
+    p = str(tmp_path / "c.ckpt")
+    ck = Checkpointer(p, every=1)
+    ck.extra = {"api": {"driver_config_json": "{}"}}
+    ck.maybe_save(1, lambda: {"kind": "t", "n": 1})
+    out = load_checkpoint(p)
+    assert out["api"] == {"driver_config_json": "{}"} and out["kind"] == "t"
+
+
+# -------------------------------------------------------------- packers
+
+
+def _pq_ops(pq, ops):
+    """Apply a (node, score) op list: first sight inserts, repeats raise
+    the key — the pattern that manufactures tombstones mid-bucket."""
+    seen = set()
+    for v, s in ops:
+        if v in seen:
+            pq.increase_key(v, s)
+        else:
+            pq.insert(v, s)
+            seen.add(v)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(
+    st.tuples(st.integers(0, 15), st.floats(0.0, 2.0, allow_nan=False)),
+    min_size=0, max_size=40,
+))
+def test_property_bucket_pq_round_trip(ops):
+    a = BucketPQ(2.0, disc_factor=10)
+    _pq_ops(a, ops)
+    b = BucketPQ(2.0, disc_factor=10)
+    unpack_bucket_pq(b, pack_bucket_pq(a))
+    assert len(a) == len(b)
+    order_a = [a.extract_max() for _ in range(len(a))]
+    order_b = [b.extract_max() for _ in range(len(b))]
+    assert order_a == order_b  # extraction order survives the round trip
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(st.tuples(st.integers(0, 31), st.floats(0.0, 2.0, allow_nan=False)),
+             min_size=0, max_size=40),
+    st.integers(0, 10),
+)
+def test_property_vector_buffer_round_trip(ops, n_evict):
+    a = VectorBuffer(32, 2.0, disc_factor=10)
+    inserted = set()
+    for v, s in ops:
+        if v in inserted:
+            a.update_scores(np.array([v]), np.array([s]))
+        else:
+            a.insert_many(np.array([v]), np.array([s]))
+            inserted.add(v)
+    for _ in range(min(n_evict, len(a))):
+        evicted = a.evict(1)
+        inserted.difference_update(evicted.tolist())
+    b = VectorBuffer(32, 2.0, disc_factor=10)
+    unpack_vector_buffer(b, pack_vector_buffer(a))
+    assert len(a) == len(b)
+    np.testing.assert_array_equal(a.in_buf, b.in_buf)
+    order_a = [int(a.evict(1)[0]) for _ in range(len(a))]
+    order_b = [int(b.evict(1)[0]) for _ in range(len(b))]
+    assert order_a == order_b
+
+
+@pytest.mark.parametrize("score", ["haa", "cms", "nss"])
+def test_rescore_round_trip_with_hubs_in_flight(score):
+    """CMS exercises blk_w/cmax; the 'hub in flight' shape is a node whose
+    adjacency was observed but never buffered (deg > d_max bypass)."""
+    n, k = 24, 3
+    spec = get_score(score, d_max=100.0)
+    rng = np.random.default_rng(5)
+    a = RescoreState(n, spec, k)
+    for v in range(10):
+        nbrs = rng.choice(n, size=3, replace=False).astype(np.int64)
+        a.observe(v, nbrs, np.ones(3), 1.0)
+        if v < 7:  # 7..9 stay adjacency-only: the hub-bypass shape
+            a.member[v] = True
+            if a.buffered_w is not None:
+                a.buffered_w[nbrs] += 1.0
+            if a.blk_w is not None:
+                a.blk_w[v] = rng.random(k)
+    a.assigned_w[:] = rng.random(n)
+    if a.cmax is not None:
+        a.cmax[:] = rng.random(n)
+    b = RescoreState(n, spec, k)
+    unpack_rescore(b, pack_rescore(a))
+    np.testing.assert_array_equal(a.member, b.member)
+    np.testing.assert_array_equal(a.assigned_w, b.assigned_w)
+    np.testing.assert_array_equal(a.deg_w, b.deg_w)
+    if a.blk_w is not None:
+        assert set(a.blk_w) == set(b.blk_w)
+        for u in a.blk_w:
+            np.testing.assert_array_equal(a.blk_w[u], b.blk_w[u])
+    vs = np.arange(10, dtype=np.int64)
+    for x, y in zip(a._slice(vs), b._slice(vs)):
+        np.testing.assert_array_equal(x, y)
+    assert a.adj.resident_bytes == b.adj.resident_bytes
+
+
+def test_rescore_empty_buffer_round_trip():
+    spec = get_score("haa", d_max=10.0)
+    a = RescoreState(8, spec, 2)
+    b = RescoreState(8, spec, 2)
+    unpack_rescore(b, pack_rescore(a))
+    np.testing.assert_array_equal(a.member, b.member)
+    assert len(b.adj._nbr) == 0
+
+
+def test_unpack_vector_buffer_preserves_member_aliasing():
+    """The vectorized driver shares buf.in_buf with RescoreState.member
+    zero-copy; the in-place restore must keep them the same array."""
+    spec = get_score("haa", d_max=10.0)
+    buf = VectorBuffer(16, 2.0, disc_factor=10)
+    st_ = RescoreState(16, spec, 2, member=buf.in_buf)
+    buf.insert_many(np.array([3, 5]), np.array([0.5, 1.5]))
+    packed = pack_vector_buffer(buf)
+    buf2 = VectorBuffer(16, 2.0, disc_factor=10)
+    st2 = RescoreState(16, spec, 2, member=buf2.in_buf)
+    unpack_vector_buffer(buf2, packed)
+    assert st2.member is buf2.in_buf
+    np.testing.assert_array_equal(st2.member, st_.member)

@@ -1,0 +1,226 @@
+"""Fault-injection suite (marker: faultinject): deterministic IO faults from
+repro.graphs.faults driven through the hardened stream readers and the full
+drivers.  Contract: transient errors are absorbed (and counted), data
+corruption and truncation are loud `StreamFormatError`s — never a silently
+wrong partition."""
+import errno
+
+import numpy as np
+import pytest
+
+from repro.api import partition
+from repro.core.buffcut import BuffCutConfig, _buffcut_partition
+from repro.graphs.faults import FaultSchedule, FaultyOpener
+from repro.graphs.generators import rmat_graph
+from repro.graphs.io import write_metis
+from repro.graphs.stream_io import (
+    DiskNodeStream,
+    RetryPolicy,
+    StreamFormatError,
+    write_packed,
+)
+
+pytestmark = pytest.mark.faultinject
+
+_CFG = dict(k=8, buffer_size=64, batch_size=16, eps=0.1)
+_FAST = RetryPolicy(retries=3, backoff_s=0.0005)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat_graph(200, 6, seed=9)  # rounds up to n=256
+
+
+@pytest.fixture(scope="module")
+def packed_file(graph, tmp_path_factory):
+    p = str(tmp_path_factory.mktemp("faults") / "g.bcsr")
+    write_packed(graph, p)
+    return p
+
+
+@pytest.fixture(scope="module")
+def metis_file(graph, tmp_path_factory):
+    p = str(tmp_path_factory.mktemp("faults") / "g.metis")
+    write_metis(graph, p)
+    return p
+
+
+def _drain(stream):
+    return [(v, nbrs.copy(), w.copy(), nw) for v, nbrs, w, nw in stream]
+
+
+def _assert_same_records(a, b):
+    assert len(a) == len(b)
+    for (va, na, wa, nwa), (vb, nb_, wb, nwb) in zip(a, b):
+        assert va == vb and nwa == nwb
+        np.testing.assert_array_equal(na, nb_)
+        np.testing.assert_array_equal(wa, wb)
+
+
+@pytest.mark.parametrize("fmt", ["packed", "metis"])
+def test_transient_read_errors_are_absorbed_and_counted(
+    fmt, packed_file, metis_file
+):
+    path = packed_file if fmt == "packed" else metis_file
+    clean = _drain(DiskNodeStream(path, 512))
+    sched = FaultSchedule(transient_reads={1, 4, 7})
+    faulty = DiskNodeStream(path, 512, opener=FaultyOpener(sched), retry=_FAST)
+    _assert_same_records(_drain(faulty), clean)
+    assert sched.injected["transient_read"] >= 1
+    assert faulty.io_retries >= sched.injected["transient_read"]
+
+
+def test_transient_open_errors_are_absorbed(packed_file):
+    clean = _drain(DiskNodeStream(packed_file, 512))
+    sched = FaultSchedule(fail_opens={0, 2})
+    faulty = DiskNodeStream(packed_file, 512, opener=FaultyOpener(sched), retry=_FAST)
+    _assert_same_records(_drain(faulty), clean)
+    assert sched.injected["failed_open"] == 2
+
+
+@pytest.mark.parametrize("fmt", ["packed", "metis"])
+def test_short_reads_are_transparent(fmt, packed_file, metis_file):
+    path = packed_file if fmt == "packed" else metis_file
+    clean = _drain(DiskNodeStream(path, 512))
+    sched = FaultSchedule(short_reads={0, 1, 2, 3})
+    faulty = DiskNodeStream(path, 512, opener=FaultyOpener(sched), retry=_FAST)
+    _assert_same_records(_drain(faulty), clean)
+    assert sched.injected["short_read"] >= 1
+
+
+def test_retry_exhaustion_propagates_the_error(packed_file):
+    # every attempt at the same position is a fresh read index: 5 straight
+    # failures exceed retries=3 (1 try + 3 retries) and the OSError escapes
+    sched = FaultSchedule(transient_reads=set(range(1, 30)))
+    with pytest.raises(OSError):
+        _drain(DiskNodeStream(packed_file, 512, opener=FaultyOpener(sched),
+                              retry=_FAST))
+
+
+def test_permanent_errors_never_retry(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        DiskNodeStream(str(tmp_path / "missing.bcsr"), retry=_FAST)
+
+
+def test_corrupted_packed_section_is_a_stream_format_error(packed_file):
+    # flip one payload byte mid-file: the v2 rolling section CRC must catch
+    # it on that section's close — a loud error, never a wrong partition
+    stream = DiskNodeStream(packed_file, 512)
+    assert stream.crc_protected
+    hits = 0
+    for read_idx in (1, 2, 3):
+        for at in (7, 512, 4000):
+            sched = FaultSchedule(corrupt_reads={read_idx}, corrupt_byte=at)
+            try:
+                # corruption may land in the header (caught at open) or in a
+                # data section (caught by the rolling CRC at section close)
+                _drain(DiskNodeStream(packed_file, 512,
+                                      opener=FaultyOpener(sched), retry=_FAST))
+            except StreamFormatError:
+                hits += 1
+            else:
+                # a flip inside already-consumed header bytes or padding can
+                # be re-read cleanly; require that *data* corruption trips
+                assert sched.injected["corrupt_read"] >= 1
+    assert hits >= 3, "section CRC never fired on payload corruption"
+
+
+def test_truncated_packed_tail_is_a_stream_format_error(packed_file):
+    sched = FaultSchedule(truncate_after=4096)
+    faulty = DiskNodeStream(packed_file, 512, opener=FaultyOpener(sched), retry=_FAST)
+    with pytest.raises(StreamFormatError):
+        _drain(faulty)
+    assert sched.injected["truncated_read"] >= 1
+
+
+def test_driver_absorbs_transient_faults_bit_identically(packed_file):
+    cfg = BuffCutConfig(**_CFG)
+    clean_labels, clean_stats = _buffcut_partition(DiskNodeStream(packed_file, 512), cfg)
+    sched = FaultSchedule(transient_reads={2, 5})
+    faulty = DiskNodeStream(packed_file, 512, opener=FaultyOpener(sched), retry=_FAST)
+    labels, stats = _buffcut_partition(faulty, cfg)
+    np.testing.assert_array_equal(labels, clean_labels)
+    assert stats.cut_weight == clean_stats.cut_weight
+    assert stats.io_retries >= 1, "retries must surface in StreamStats"
+    assert clean_stats.io_retries == 0
+
+
+def test_driver_never_partitions_corrupted_data(packed_file):
+    cfg = BuffCutConfig(**_CFG)
+    # read 3 is the first data-section chunk (0=magic, 1-2=header reads)
+    sched = FaultSchedule(corrupt_reads={3}, corrupt_byte=100)
+    faulty = DiskNodeStream(packed_file, 512, opener=FaultyOpener(sched), retry=_FAST)
+    with pytest.raises(StreamFormatError):
+        _buffcut_partition(faulty, cfg)
+    assert sched.injected["corrupt_read"] == 1
+
+
+def test_checkpointed_run_with_faults_still_resumes(packed_file, tmp_path,
+                                                    monkeypatch):
+    """Transient faults + crash + resume composed: the recovery path reads
+    through the same hardened readers."""
+    import repro.core.checkpoint as ckmod
+    from repro.api import resume
+
+    base = partition(packed_file, driver="buffcut", **_CFG)
+    cp = str(tmp_path / "run.ckpt")
+    real = ckmod.save_checkpoint
+    snap = str(tmp_path / "snap.ckpt")
+
+    state_count = [0]
+
+    def tee(path, state):
+        real(path, state)
+        state_count[0] += 1
+        if state_count[0] == 2:
+            import shutil
+            shutil.copy(path, snap)
+
+    monkeypatch.setattr(ckmod, "save_checkpoint", tee)
+    sched = FaultSchedule(transient_reads={3, 9})
+    faulty = DiskNodeStream(packed_file, 512, opener=FaultyOpener(sched), retry=_FAST)
+    cfg = BuffCutConfig(**_CFG)
+    from repro.core.checkpoint import Checkpointer
+    ck = Checkpointer(cp, every=2)
+    labels, stats = _buffcut_partition(faulty, cfg, ckpt=ck)
+    np.testing.assert_array_equal(labels, base.labels)
+    assert state_count[0] >= 2
+    monkeypatch.undo()
+    # resume the captured mid-run snapshot over a faulty stream too
+    st = ckmod.load_checkpoint(snap)
+    sched2 = FaultSchedule(transient_reads={1})
+    faulty2 = DiskNodeStream(packed_file, 512, opener=FaultyOpener(sched2), retry=_FAST)
+    labels2, stats2 = _buffcut_partition(faulty2, cfg, resume=st)
+    np.testing.assert_array_equal(labels2, base.labels)
+    # retries accumulate across the resume boundary: snapshot's count plus
+    # the fault injected into the resumed stream's first data read
+    assert stats2.io_retries >= int(st["stats"]["io_retries"]) + 1
+
+
+def test_header_crc_catches_on_disk_corruption(graph, tmp_path):
+    from repro.graphs.stream_io import read_packed_header
+
+    p = str(tmp_path / "g.bcsr")
+    write_packed(graph, p)
+    raw = bytearray(open(p, "rb").read())
+    # flip a bit inside m_total (bytes 36..44 of the header)
+    good = raw[:]
+    raw[40] ^= 0x01
+    open(p, "wb").write(bytes(raw))
+    with pytest.raises(StreamFormatError, match="header CRC"):
+        read_packed_header(p)
+    # legacy v2 file (pad all zero, no stored header CRC): readable, just
+    # unverified — mirrors the v1 contract
+    good[44:48] = b"\x00\x00\x00\x00"
+    open(p, "wb").write(bytes(good))
+    meta = read_packed_header(p)
+    assert meta["n"] == graph.n
+
+
+def test_errno_variants_all_retry(packed_file):
+    clean = _drain(DiskNodeStream(packed_file, 512))
+    for code in (errno.EIO, errno.EAGAIN, errno.EINTR):
+        sched = FaultSchedule(transient_reads={2}, errno_code=code)
+        faulty = DiskNodeStream(packed_file, 512, opener=FaultyOpener(sched),
+                                retry=_FAST)
+        _assert_same_records(_drain(faulty), clean)
