@@ -20,9 +20,11 @@ Tracks the de-quadratized assignment-side inner loops from PR 1 onward
       through the uploaded artifact trajectory.
   e2e — the full vectorized BuffCut driver.
   outofcore — disk-streamed partitioning of a generated graph ≥4x the
-      configured buffer (benchmarks/bench_outofcore.py): measured peak
-      resident bytes vs the buffer+batch+read-ahead bound, throughput, and
-      bit-exact label agreement with the in-memory path.
+      configured buffer (benchmarks/bench_outofcore.py): the *pipelined*
+      driver (prefetch + fused scalar hot loop, DESIGN §12) vs the serial
+      loop it replaced, measured peak resident bytes vs the
+      buffer+batch+prefetch+queue bound, throughput, and bit-exact label
+      agreement with the sequential and in-memory paths.
 
 Usage:  python benchmarks/bench_hotpath.py [--smoke] [--out PATH]
 Emits BENCH_hotpath.json (repo root by default).
@@ -163,17 +165,32 @@ def bench_multilevel(smoke: bool) -> dict:
     out = {"n": g.n, "directed_edges": int(g.indices.size), "k": k,
            "engines": {}}
     labels = {}
-    for engine in ("sparse", "jax"):
-        cfg = MultilevelConfig(engine=engine)
+    rows = (
+        ("sparse", MultilevelConfig(engine="sparse")),
+        ("jax", MultilevelConfig(engine="jax")),
+        # measured-time aggregation-mode selection (ISSUE 7): steady-state
+        # row, so let the tuner explore + commit before timing
+        ("jax_autotune", MultilevelConfig(engine="jax", agg_autotune=True)),
+    )
+    for engine, cfg in rows:
+        if engine == "jax_autotune":
+            from repro.core.multilevel_jax import reset_agg_tuner
+
+            reset_agg_tuner()
+            for _ in range(8):
+                multilevel_partition(g, pinned, p, loads, cfg)
         labels[engine] = multilevel_partition(g, pinned, p, loads, cfg)
         t = _best_of(lambda: multilevel_partition(g, pinned, p, loads, cfg),
                      reps)
         out["engines"][engine] = {"ms": t * 1e3}
-    assert np.array_equal(labels["sparse"], labels["jax"]), \
-        "engine parity broke — bench refuses to time unequal work"
+    for engine in ("jax", "jax_autotune"):
+        assert np.array_equal(labels["sparse"], labels[engine]), \
+            "engine parity broke — bench refuses to time unequal work"
     out["cut_ratio"] = cut_ratio(g, labels["sparse"])
     out["jax_over_sparse"] = (out["engines"]["jax"]["ms"]
                               / out["engines"]["sparse"]["ms"])
+    out["jax_autotune_over_sparse"] = (out["engines"]["jax_autotune"]["ms"]
+                                       / out["engines"]["sparse"]["ms"])
     return out
 
 
@@ -244,7 +261,9 @@ def main() -> None:
     print(f"multilevel e2e (n={ml['n']}, k={ml['k']}): "
           f"sparse {ml['engines']['sparse']['ms']:8.1f} ms  "
           f"jax {ml['engines']['jax']['ms']:8.1f} ms  "
-          f"({ml['jax_over_sparse']:.2f}x, identical labels)")
+          f"jax+autotune {ml['engines']['jax_autotune']['ms']:8.1f} ms  "
+          f"({ml['jax_over_sparse']:.2f}x / "
+          f"{ml['jax_autotune_over_sparse']:.2f}x, identical labels)")
     for engine, row in report["e2e"]["engines"].items():
         print(f"e2e {engine:>11}: {row['runtime_s']:.2f} s  cut_ratio {row['cut_ratio']:.4f}")
     oc = report["outofcore"]

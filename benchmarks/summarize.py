@@ -1,4 +1,10 @@
-"""Render dryrun_results.jsonl / roofline.jsonl into EXPERIMENTS.md tables."""
+"""Render bench outputs into EXPERIMENTS.md tables.
+
+Modes: `dryrun` / `roofline` (jsonl trajectories) and `hotpath`
+(BENCH_hotpath.json — every section, including the `checkpoint` and
+`restream_outofcore` sections merged in by bench_checkpoint.py and
+bench_restream.py).
+"""
 from __future__ import annotations
 
 import json
@@ -63,10 +69,63 @@ def roofline_table(path: str = "roofline_results.jsonl") -> str:
     return "\n".join(out)
 
 
+def hotpath_table(path: str = "BENCH_hotpath.json") -> str:
+    """One row per BENCH_hotpath.json section — the headline number, the
+    guard it is gated on, and whether the parity/bound checks held."""
+    with open(path) as f:
+        r = json.load(f)
+    out = ["| section | headline | guard | parity/bound |",
+           "|---|---|---|---|"]
+
+    h = r.get("histogram")
+    if h:
+        out.append(f"| histogram | {h['speedup']:.1f}x vs seed (round0) "
+                   f"| > 1.2x | exact-match asserted |")
+    e = r.get("evict")
+    if e:
+        out.append(f"| evict | flatness {e['incremental_flatness']:.2f} over n "
+                   f"| < 3.0 | scan growth {e['scan_growth']:.2f} |")
+    ml = r.get("multilevel")
+    if ml:
+        tuned = ml.get("jax_autotune_over_sparse")
+        tuned_s = f", autotuned {tuned:.2f}x" if tuned is not None else ""
+        out.append(f"| multilevel | jax {ml['jax_over_sparse']:.2f}x sparse{tuned_s} "
+                   f"| <= 6.0x | identical labels |")
+    e2e = r.get("e2e")
+    if e2e:
+        rt = {k: v["runtime_s"] for k, v in e2e["engines"].items()}
+        out.append(f"| e2e | " + ", ".join(f"{k} {v:.2f}s" for k, v in rt.items())
+                   + " | — | equal cut_ratio |")
+    oc = r.get("outofcore")
+    if oc:
+        spd = oc.get("pipeline_speedup")
+        spd_s = f" ({spd:.1f}x serial)" if spd is not None else ""
+        out.append(f"| outofcore | {oc['nodes_per_s']:.0f} nodes/s{spd_s} "
+                   f"| peak <= bound + nodes/s floor "
+                   f"| within_bound={oc['within_bound']}, "
+                   f"labels_match={oc.get('labels_match_memory')} |")
+    rs = r.get("restream_outofcore")
+    if rs:
+        orders = rs.get("orders", {})
+        cuts = ", ".join(f"{o}: {row['cut_before']:.0f}→{row['cut_after']:.0f}"
+                         for o, row in orders.items())
+        out.append(f"| restream_outofcore | {cuts} "
+                   f"| peak <= bound | exact_cut={rs.get('cut_is_exact')}, "
+                   f"labels_match={rs.get('labels_match_memory')} |")
+    ck = r.get("checkpoint")
+    if ck:
+        out.append(f"| checkpoint | densest-cadence overhead "
+                   f"{ck['overhead_densest']:.1%} | <= 25% "
+                   f"| resume_bit_identical={ck['resume_bit_identical']} |")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     kind = sys.argv[1] if len(sys.argv) > 1 else "dryrun"
     path = sys.argv[2] if len(sys.argv) > 2 else None
     if kind == "dryrun":
         print(dryrun_table(path or "dryrun_results.jsonl"))
+    elif kind == "hotpath":
+        print(hotpath_table(path or "BENCH_hotpath.json"))
     else:
         print(roofline_table(path or "roofline_results.jsonl"))

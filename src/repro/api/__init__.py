@@ -230,6 +230,7 @@ def partition(
                 dc.buffcut,
                 dc.restream_passes,
                 order=dc.restream_order,
+                prefetch_batches=dc.pipeline.prefetch_batches,
                 initial_cut=stats.cut_weight if seeded else None,
                 initial_loads=(
                     np.asarray(stats.block_loads, dtype=np.float64)

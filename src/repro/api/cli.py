@@ -47,6 +47,9 @@ def _add_partition_parser(sub: "argparse._SubParsersAction") -> None:
     p.add_argument("--chunk", type=int, default=1, help="vectorized: arrival chunk size")
     p.add_argument("--queue-depth", type=int, default=4, help="pipelined: task queue bound")
     p.add_argument("--read-ahead", type=int, default=64, help="pipelined: read-ahead records")
+    p.add_argument("--prefetch-batches", type=int, default=2,
+                   help="stream prefetcher depth in batches (0 disables the "
+                        "background reader thread)")
     p.add_argument("--restream", type=int, default=0, metavar="N",
                    help="restreaming refinement passes (replays the stream "
                         "out-of-core on disk sources)")
@@ -125,6 +128,7 @@ def _cmd_partition(args: argparse.Namespace) -> int:
         chunk=args.chunk,
         queue_depth=args.queue_depth,
         read_ahead=args.read_ahead,
+        prefetch_batches=args.prefetch_batches,
         collect_stats=args.stats,
         **{
             key: val

@@ -38,10 +38,10 @@ _BUFFCUT_KEYS = (
 )
 _ML_KEYS = (
     "coarsen_target", "max_levels", "lp_iters", "refine_rounds",
-    "min_shrink", "seed",
+    "min_shrink", "seed", "agg_autotune",
 )  # plus "engine", routed to ml below
 _VEC_KEYS = ("wave", "chunk")  # plus "vec_engine" -> VectorizedConfig.engine
-_PIPE_KEYS = ("queue_depth", "read_ahead")
+_PIPE_KEYS = ("queue_depth", "read_ahead", "prefetch_batches")
 _CUTTANA_KEYS = ("subpart_ratio", "refine_passes")
 
 

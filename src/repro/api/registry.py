@@ -95,7 +95,10 @@ register_partitioner(PartitionerSpec(
     description="BuffCut sequential driver (paper Alg. 1): prioritized "
                 "buffer + batch-wise multilevel.",
     supports_checkpoint=True,
-    run=lambda src, dc, **kw: _buffcut_partition(src.stream, dc.buffcut, **kw),
+    run=lambda src, dc, **kw: _buffcut_partition(
+        src.stream, dc.buffcut,
+        prefetch_batches=dc.pipeline.prefetch_batches, **kw,
+    ),
 ))
 
 register_partitioner(PartitionerSpec(
@@ -106,7 +109,8 @@ register_partitioner(PartitionerSpec(
                 "eviction (TPU adaptation; wave=1,chunk=1 is bit-exact).",
     supports_checkpoint=True,
     run=lambda src, dc, **kw: _buffcut_partition_vectorized(
-        src.stream, dc.buffcut, dc.vectorized, **kw
+        src.stream, dc.buffcut, dc.vectorized,
+        prefetch_batches=dc.pipeline.prefetch_batches, **kw,
     ),
 ))
 

@@ -15,10 +15,27 @@ explicit local<->global map is required (paper §3.4, last paragraph).
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
+
+# per-thread reusable global->local map: one O(n) memset per *driver run*
+# instead of per batch.  Entries touched by a build are reset to -1 in its
+# finally, so the array is always all -1 between calls; thread-local storage
+# keeps concurrent drivers (the pipelined worker vs a main-thread run)
+# from sharing it.  O(n) persistent scratch is within the streaming budget —
+# the caller already holds the O(n) label vector.
+_TLS = threading.local()
+
+
+def _local_scratch(n: int) -> np.ndarray:
+    a = getattr(_TLS, "local_of", None)
+    if a is None or a.shape[0] != n:
+        a = np.full(n, -1, dtype=np.int64)
+        _TLS.local_of = a
+    return a
 
 
 @dataclasses.dataclass
@@ -68,11 +85,14 @@ def build_batch_model_from_adj(
     the full graph is required (out-of-core path; DESIGN.md §4)."""
     batch = np.asarray(batch, dtype=np.int64)
     b = batch.shape[0]
-    local_of = np.full(n, -1, dtype=np.int64)
-    local_of[batch] = np.arange(b)
+    local_of = _local_scratch(n)
+    try:
+        local_of[batch] = np.arange(b)
+        dst_l = local_of[dst_g]
+    finally:
+        local_of[batch] = -1
     src_l = np.repeat(np.arange(b, dtype=np.int64), degs)
 
-    dst_l = local_of[dst_g]
     internal = dst_l >= 0
     int_src, int_dst, int_w = src_l[internal], dst_l[internal], w[internal]
     keep = int_src < int_dst  # one canonical direction; from_edges symmetrizes

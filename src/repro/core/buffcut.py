@@ -28,6 +28,7 @@ from repro.graphs.csr import CSRGraph
 from repro.graphs.stream import NodeStreamBase, as_node_stream
 from repro.core._deprecation import warn_legacy
 from repro.core.buffer import BucketPQ
+from repro.core.prefetch import maybe_prefetch
 from repro.core.rescore import RescoreState
 from repro.core.scores import SCORES, ScoreSpec, get_score
 from repro.core.fennel import FennelParams, fennel_choose
@@ -213,10 +214,13 @@ def _buffcut_partition(
     g: CSRGraph | NodeStreamBase,
     cfg: BuffCutConfig,
     *,
+    prefetch_batches: int = 0,
     ckpt: Checkpointer | None = None,
     resume: dict | None = None,
 ) -> tuple[np.ndarray, StreamStats]:
-    stream = as_node_stream(g)
+    # prefetch overlaps parsing with scoring, record order (and therefore
+    # every label) untouched — tell()/resident_bytes stay consumer-truthful
+    stream = maybe_prefetch(as_node_stream(g), prefetch_batches, cfg.batch_size)
     n = stream.n
     spec = cfg.score_spec()
     p = FennelParams(

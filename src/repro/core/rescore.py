@@ -103,6 +103,16 @@ class AdjacencyCache:
             self._node_w.pop(v)
             self.resident_bytes -= nb.nbytes + w.nbytes + 32
 
+    def drop_one(self, v: int) -> None:
+        """Scalar `drop` for a single node (the fused hot loop's hub path):
+        same bookkeeping, no ndarray round-trip."""
+        nb = self._nbr.pop(v, None)
+        if nb is None:
+            return
+        w = self._w.pop(v)
+        self._node_w.pop(v)
+        self.resident_bytes -= nb.nbytes + w.nbytes + 32
+
     def slice(self, us: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Concatenated (neighbors int64, weights float64, degs int64) of
         `us` in order — the batched equivalent of a CSR slice."""
@@ -240,6 +250,113 @@ class RescoreState:
         np.add.at(self.buffered_w, nbr_b, w_b)
         touched = _first_occurrence(nbr_b)
         return touched, self.scores_of(touched)
+
+    # ------------------------------------------------- scalar twins (fused)
+    # The fused per-record hot loop (core/pipeline.py) replays the exact
+    # update orderings above in plain python: adds in adjacency order (what
+    # np.add.at does element-by-element), touched nodes in first-occurrence
+    # order, scores computed only after every add landed.  numpy float64
+    # scalars and python floats run the same IEEE-754 ops, so the resulting
+    # state and IncreaseKey sequences are bitwise-identical to the batched
+    # versions — pinned by tests/test_rescore_scalar.py against random
+    # interleavings, and end-to-end by the conformance sweep.
+
+    def observe_scalar(
+        self, v: int, nbrs: np.ndarray, weights: np.ndarray, node_w: float
+    ) -> None:
+        """Scalar `observe`: a left-to-right python-float sum is the same
+        accumulation order as seq_sum64's bincount."""
+        s = 0.0
+        for x in weights.tolist():
+            s += x
+        self.deg_w[v] = s
+        self.adj.put(v, nbrs, weights, node_w)
+
+    def score_scalar(self, v: int, fscore) -> float:
+        """`score(v)` through a `ScoreSpec.scalar_fn` closure."""
+        bw, cm = self.buffered_w, self.cmax
+        return fscore(
+            float(self.assigned_w[v]),
+            float(self.deg_w[v]),
+            float(bw[v]) if bw is not None else 0.0,
+            float(cm[v]) if cm is not None else 0.0,
+        )
+
+    def bump_assigned_scalar(self, u: int, was_buffered: bool, fscore, apply) -> None:
+        """Scalar `bump_assigned` for one node; `apply(node, score)` is
+        invoked in first-occurrence adjacency order after all adds — the
+        same IncreaseKey sequence `_apply` issues from the batched result."""
+        nbr = self.adj._nbr.get(u)
+        if nbr is None or nbr.shape[0] == 0:
+            return
+        w = self.adj._w[u]
+        member = self.member
+        aw = self.assigned_w
+        bw_dec = self.buffered_w if (was_buffered and self.buffered_w is not None) else None
+        touched: list[int] = []
+        seen: set[int] = set()
+        for x, ew in zip(nbr.tolist(), w.tolist()):
+            if not member[x]:
+                continue
+            aw[x] = aw[x] + ew
+            if bw_dec is not None:
+                # np.add.at(bw, nbr_b, -w_b) adds the negation; a - b and
+                # a + (-b) are the same IEEE op for float64
+                bw_dec[x] = bw_dec[x] - ew
+            if x not in seen:
+                seen.add(x)
+                touched.append(x)
+        if not touched:
+            return
+        bw, cm, dw = self.buffered_w, self.cmax, self.deg_w
+        for x in touched:
+            apply(
+                x,
+                fscore(
+                    float(aw[x]),
+                    float(dw[x]),
+                    float(bw[x]) if bw is not None else 0.0,
+                    float(cm[x]) if cm is not None else 0.0,
+                ),
+            )
+
+    def bump_buffered_scalar(self, v: int, fscore, apply) -> None:
+        """Scalar `bump_buffered` (NSS) for one arrival.  The arrival's own
+        buffered_w and the members' credits touch disjoint entries (v is
+        not yet a member, so it never appears in its own kept neighbor
+        list), so one pass accumulating both matches the batched
+        bincount-then-add.at ordering bit-for-bit."""
+        if self.buffered_w is None:
+            return
+        nbr = self.adj._nbr[v]
+        w = self.adj._w[v]
+        member = self.member
+        bw = self.buffered_w
+        s = 0.0
+        touched: list[int] = []
+        seen: set[int] = set()
+        for x, ew in zip(nbr.tolist(), w.tolist()):
+            if not member[x]:
+                continue
+            s += ew
+            bw[x] = bw[x] + ew
+            if x not in seen:
+                seen.add(x)
+                touched.append(x)
+        bw[v] = s
+        if not touched:
+            return
+        aw, cm, dw = self.assigned_w, self.cmax, self.deg_w
+        for x in touched:
+            apply(
+                x,
+                fscore(
+                    float(aw[x]),
+                    float(dw[x]),
+                    float(bw[x]),
+                    float(cm[x]) if cm is not None else 0.0,
+                ),
+            )
 
     def bump_block_counts(self, u: int, blk: int) -> tuple[np.ndarray, np.ndarray]:
         """CMS: node `u` received concrete block `blk`; update the buffered

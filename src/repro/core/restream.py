@@ -48,6 +48,7 @@ from repro.core.fennel import FennelParams, block_connectivity, fennel_choose
 from repro.core.batch_model import build_batch_model_from_adj
 from repro.core.multilevel import multilevel_partition_resilient
 from repro.core.metrics import IncrementalCut
+from repro.core.prefetch import maybe_prefetch
 from repro.core.rescore import AdjacencyCache
 from repro.core.checkpoint import (
     Checkpointer,
@@ -165,6 +166,7 @@ def restream_refine(
     order: str = "stream",
     initial_cut: "float | None" = None,
     initial_loads: "np.ndarray | None" = None,
+    prefetch_batches: int = 0,
     ckpt: "Checkpointer | None" = None,
     resume: "dict | None" = None,
 ) -> tuple[np.ndarray, RestreamInfo]:
@@ -194,7 +196,9 @@ def restream_refine(
         )
     if passes < 0:
         raise ValueError(f"restream passes must be >= 0, got {passes}")
-    stream = as_node_stream(source)
+    # every replay pass reads through the same prefetcher (parse overlaps
+    # the re-partitioning); record order — and labels — are unchanged
+    stream = maybe_prefetch(as_node_stream(source), prefetch_batches, cfg.batch_size)
     block = np.asarray(block, dtype=np.int64).copy()
     if block.shape[0] != stream.n:
         raise ValueError(

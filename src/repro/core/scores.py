@@ -70,6 +70,68 @@ class ScoreSpec:
             return cmax / d_safe
         raise ValueError(self.kind)
 
+    def scalar_fn(self):
+        """A pure-python ``f(a, d, q=0.0, cmax=0.0) -> float`` closure,
+        bitwise-identical to `__call__` on float64 inputs — the fused
+        per-record hot loop (core/pipeline.py) scores with this instead of
+        paying a numpy dispatch per node.
+
+        Identity notes: python float +,-,*,/ are the same IEEE-754 ops the
+        float64 ufunc loops run, and ``maximum(d, 1)`` is ``d if d > 1.0
+        else 1.0`` for the finite non-negative degrees the drivers produce.
+        The one treacherous op is ``dn ** beta``: numpy's broadcast-scalar
+        power loop short-circuits beta == 2.0 to ``dn * dn``, which is NOT
+        always bitwise ``pow(dn, 2.0)`` — so the closure replicates the
+        short-circuit for the default HAA beta and falls back to the
+        np.power ufunc (same inner loop as the array path) for exotic
+        betas.  Parity for every kind is pinned in
+        tests/test_scores.py::test_scalar_fn_matches_vectorized.
+        """
+        d_max, beta, theta, eta = self.d_max, self.beta, self.theta, self.eta
+        if self.kind == "anr":
+            def f(a, d, q=0.0, cmax=0.0):
+                return a / (d if d > 1.0 else 1.0)
+        elif self.kind == "cbs":
+            def f(a, d, q=0.0, cmax=0.0):
+                return d / d_max + theta * (a / (d if d > 1.0 else 1.0))
+        elif self.kind == "haa" and beta == 2.0:
+            def f(a, d, q=0.0, cmax=0.0):
+                dn = d / d_max
+                return dn * dn + theta * (1.0 - dn) * (a / (d if d > 1.0 else 1.0))
+        elif self.kind == "haa":
+            # the broadcast power loop also short-circuits beta 0.5 / -1.0
+            # (sqrt / reciprocal) past what scalar np.power computes —
+            # replicate each, verified empirically and pinned by the parity
+            # test alongside the generic np.power fallback
+            import math as _math
+
+            import numpy as _np
+
+            if beta == 0.5:
+                def _pow(dn):
+                    return _math.sqrt(dn)
+            elif beta == -1.0:
+                def _pow(dn):
+                    return 1.0 / dn
+            else:
+                def _pow(dn):
+                    return float(_np.power(dn, beta))
+
+            def f(a, d, q=0.0, cmax=0.0):
+                dn = d / d_max
+                return _pow(dn) + theta * (1.0 - dn) * (
+                    a / (d if d > 1.0 else 1.0)
+                )
+        elif self.kind == "nss":
+            def f(a, d, q=0.0, cmax=0.0):
+                return (a + eta * q) / (d if d > 1.0 else 1.0)
+        elif self.kind == "cms":
+            def f(a, d, q=0.0, cmax=0.0):
+                return cmax / (d if d > 1.0 else 1.0)
+        else:
+            raise ValueError(self.kind)
+        return f
+
 
 ANR = ScoreSpec("anr")
 CBS = ScoreSpec("cbs", theta=0.75)

@@ -38,6 +38,7 @@ from repro.core.fennel import FennelParams, fennel_choose
 from repro.core.batch_model import build_batch_model_from_adj
 from repro.core.multilevel import multilevel_partition_resilient
 from repro.core.metrics import internal_edge_ratio_adj, streaming_cut_increment
+from repro.core.prefetch import maybe_prefetch
 from repro.core.rescore import RescoreState
 from repro.core.checkpoint import (
     Checkpointer,
@@ -132,6 +133,7 @@ def _buffcut_partition_vectorized(
     cfg: BuffCutConfig,
     vec: VectorizedConfig | None = None,
     *,
+    prefetch_batches: int = 0,
     ckpt: Checkpointer | None = None,
     resume: dict | None = None,
 ) -> tuple[np.ndarray, StreamStats]:
@@ -140,7 +142,8 @@ def _buffcut_partition_vectorized(
     spec = cfg.score_spec()
     if spec.needs_block_counts:
         raise ValueError("CMS needs per-block counts; use the sequential driver")
-    stream = as_node_stream(g)
+    # background read-ahead: record order — and therefore labels — unchanged
+    stream = maybe_prefetch(as_node_stream(g), prefetch_batches, cfg.batch_size)
     n = stream.n
     p = FennelParams(
         k=cfg.k, n_total=stream.n_total, m_total=stream.m_total,

@@ -7,7 +7,9 @@ read-ahead window (one IO chunk + the record spanning its edge).  The full
 CSR is never materialized, so the partitioner's peak resident set is
 buffer + batch + read-ahead, and graphs larger than RAM stream fine.
 
-Packed binary format (``.bcsr``), little-endian:
+Packed binary format (``.bcsr``), little-endian — the byte-level
+specification (header offsets, v2 header CRC at pad offset 44, rolling
+section CRCs, legacy-v1 semantics) is docs/FORMATS.md; summary:
 
     magic  b"BCSR" | version u32 | flags u32 (1 = edge weights,
     2 = node weights) | n u64 | m u64 (undirected edges) |
@@ -73,6 +75,23 @@ from repro.graphs.stream import NodeStreamBase, canonical_totals, seq_sum64
 
 MAGIC = b"BCSR"
 _HEADER = struct.Struct("<4sIIQQdd20x")  # 64 bytes
+_U32 = struct.Struct("<I")
+_F32 = struct.Struct("<f")
+
+# shared unit-weight pool for weightless records: readers yield read-only
+# slices instead of allocating np.ones per record (~2us each on the parse
+# hot path).  Consumers copy on cast (AdjacencyCache, ELL builders), and the
+# write=False flag turns any accidental in-place mutation into an error.
+_UNIT_W = np.ones(0, dtype=np.float32)
+
+
+def _unit_weights(deg: int) -> np.ndarray:
+    global _UNIT_W
+    if deg > _UNIT_W.shape[0]:
+        w = np.ones(max(deg, 4096), dtype=np.float32)
+        w.setflags(write=False)
+        _UNIT_W = w
+    return _UNIT_W[:deg]
 _HDR_CRC_OFF = _HEADER.size - 20         # v2: crc32 of bytes [0,44) in pad
 _SECTION = struct.Struct("<II")          # payload_len, crc32
 _FLAG_EDGE_W = 1
@@ -335,7 +354,7 @@ class MetisChunkReader:
                     wts = np.array([float(t) for t in rest[1::2]], dtype=np.float32)
                 else:
                     nbrs = np.array([int(t) for t in rest], dtype=np.int64)
-                    wts = np.ones(nbrs.shape[0], dtype=np.float32)
+                    wts = _unit_weights(nbrs.shape[0])
             except ValueError:
                 raise StreamFormatError(
                     f"{self.path}: node {v + 1}: non-numeric adjacency token"
@@ -607,7 +626,7 @@ class PackedChunkReader:
                     raise StreamFormatError(
                         f"{self.path}: truncated at record {v} (of {n})"
                     )
-                (deg,) = struct.unpack_from("<I", buf, pos)  # peek; pos unchanged
+                (deg,) = _U32.unpack_from(buf, pos)  # peek; pos unchanged
                 rec_bytes = 4 + (4 if has_nw else 0) + 4 * deg + (4 * deg if has_ew else 0)
                 if sectioned and rec_bytes > sec_left:
                     raise StreamFormatError(
@@ -624,15 +643,23 @@ class PackedChunkReader:
                 pos += 4
                 node_w = 1.0
                 if has_nw:
-                    (node_w,) = struct.unpack_from("<f", buf, pos)
+                    (node_w,) = _F32.unpack_from(buf, pos)
                     pos += 4
-                nbrs = np.frombuffer(buf, dtype="<u4", count=deg, offset=pos).astype(np.int32)
+                raw = np.frombuffer(buf, dtype="<u4", count=deg, offset=pos)
+                nbrs = raw.astype(np.int32)
+                # one reduction on the raw u4 view covers both failure modes:
+                # ids >= n, and ids >= 2^31 (which would wrap negative in the
+                # int32 cast) are both >= n as unsigned.  The view must die
+                # here — a live export blocks the bytearray compaction in
+                # ensure() with a BufferError.
+                umax = int(raw.max()) if deg else -1
+                del raw
                 pos += 4 * deg
                 if has_ew:
                     wts = np.frombuffer(buf, dtype="<f4", count=deg, offset=pos).copy()
                     pos += 4 * deg
                 else:
-                    wts = np.ones(deg, dtype=np.float32)
+                    wts = _unit_weights(deg)
                 abs_off += rec_bytes
                 if sectioned:
                     sec_crc = zlib.crc32(memoryview(buf)[rec_start:pos], sec_crc)
@@ -644,7 +671,7 @@ class PackedChunkReader:
                     # resume discard: bytes already count toward the CRC
                     consumed_skip += 1
                     continue
-                if deg and (nbrs.min() < 0 or nbrs.max() >= n):
+                if umax >= n:
                     raise StreamFormatError(
                         f"{self.path}: record {v}: neighbor id out of range [0, {n})"
                     )

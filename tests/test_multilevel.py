@@ -203,3 +203,68 @@ def test_multilevel_property(k, seed):
     assert (labels >= 0).all() and (labels < k).all()
     loads = np.bincount(labels, weights=g.node_w, minlength=k)
     assert loads.max() <= p.cap + 1e-6
+
+
+# ------------------------------------------------- scalar gain engine pin
+
+
+def _fennel_sequential_reference(g, order, labels, loads, *, alpha, gamma,
+                                 cap, k):
+    """The vectorized per-step loop `fennel_gain_sequential` replaced: ell
+    gather + np.bincount + penalty + masked np.argmax per step."""
+    labels = labels.copy()
+    loads = loads.copy()
+    ag = float(alpha) * float(gamma)
+    for v in order.tolist():
+        lo, hi = g.indptr[v], g.indptr[v + 1]
+        nbr_lab = labels[g.indices[lo:hi]]
+        keep = nbr_lab >= 0
+        conn = np.bincount(nbr_lab[keep],
+                           weights=g.edge_w[lo:hi][keep].astype(np.float64),
+                           minlength=k)
+        penalty = ag * np.power(np.maximum(loads, 0.0), float(gamma) - 1.0)
+        nw = float(g.node_w[v])
+        feasible = loads + nw <= cap
+        if feasible.any():
+            best = int(np.argmax(np.where(feasible, conn - penalty, -np.inf)))
+        else:
+            best = int(np.argmin(loads))
+        labels[v] = best
+        loads[best] = loads[best] + nw
+    return labels, loads
+
+
+@pytest.mark.parametrize("gamma", [1.25, 1.5, 3.0])
+def test_fennel_gain_sequential_matches_vectorized_reference(gamma):
+    """kernels/fennel_gain.py::fennel_gain_sequential is bit-identical to
+    the per-step numpy loop it replaced — the `_pow_scalar` fast paths
+    (gamma-1 ∈ {0.25 generic, 0.5 sqrt, 2.0 square}) and the left-to-right
+    connectivity adds are the contract (referenced by the kernel
+    docstring)."""
+    from repro.kernels.fennel_gain import fennel_gain_sequential
+
+    rng = np.random.default_rng(13)
+    g = rmat_graph(256, 6, seed=21)
+    k = 5
+    p = FennelParams(k=k, n_total=float(g.node_w.sum()),
+                     m_total=g.total_edge_weight(), eps=0.08, gamma=gamma)
+    # partially pinned start + matching loads, like a coarsest-level call
+    labels0 = np.full(g.n, -1, dtype=np.int64)
+    pin = rng.choice(g.n, 60, replace=False)
+    labels0[pin] = rng.integers(0, k, pin.size)
+    loads0 = np.bincount(labels0[pin], weights=g.node_w[pin],
+                         minlength=k).astype(np.float64)
+    free = np.nonzero(labels0 < 0)[0]
+    order = free[np.lexsort((free, -g.node_w[free]))]
+
+    ref_labels, ref_loads = _fennel_sequential_reference(
+        g, order, labels0, loads0, alpha=p.alpha, gamma=p.gamma, cap=p.cap, k=k
+    )
+    got_labels = labels0.copy()
+    got_loads = loads0.copy()
+    fennel_gain_sequential(
+        g.indptr, g.indices, g.edge_w, g.node_w, order, got_labels,
+        got_loads, alpha=p.alpha, gamma=p.gamma, cap=p.cap, k=k,
+    )
+    assert np.array_equal(ref_labels, got_labels)
+    assert np.array_equal(ref_loads, got_loads)  # bitwise, not approx

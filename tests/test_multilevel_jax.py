@@ -163,3 +163,44 @@ def test_jit_cache_bounded_over_stream():
     counts = mlj.trace_counts()
     assert counts, "engine never traced — did the jax engine run?"
     assert max(counts.values()) <= 3, counts
+
+
+def test_agg_autotune_identical_labels_and_converges():
+    """cfg.ml.agg_autotune explores both aggregation modes per (phase,
+    shape) then commits to the measured-fastest — exploration must never
+    change a label, and after warmup every key has a decision."""
+    g = rmat_graph(768, 8, seed=9)
+    k = 6
+    p = _params(g, k)
+    pinned = np.full(g.n, -1, dtype=np.int64)
+    ref = multilevel_partition(g, pinned, p, np.zeros(k),
+                               MultilevelConfig(engine="jax"))
+    mlj.reset_agg_tuner()
+    try:
+        cfg = MultilevelConfig(engine="jax", agg_autotune=True)
+        # warmup + timed samples for both candidates, then the decided mode
+        for _ in range(2 * (mlj._AggTuner.WARMUP + mlj._AggTuner.TIMED) + 1):
+            got = multilevel_partition(g, pinned, p, np.zeros(k), cfg)
+            assert np.array_equal(ref, got)  # exploration never leaks out
+        decisions = mlj.agg_decisions()
+        assert decisions, "tuner never converged to a decision"
+        assert set(decisions.values()) <= {"dense", "sort"}
+        for phase, n_pad, l_pad in decisions:
+            assert phase in ("cluster", "refine")
+            assert n_pad > 0 and l_pad > 0
+    finally:
+        mlj.reset_agg_tuner()
+
+
+def test_agg_autotune_off_by_default():
+    """MultilevelConfig defaults keep the tuner out of the loop (so jit
+    compilation counts stay deterministic for the cache-bound test)."""
+    assert MultilevelConfig().agg_autotune is False
+    mlj.reset_agg_tuner()
+    g = rmat_graph(256, 6, seed=2)
+    p = _params(g, 4)
+    pinned = np.full(g.n, -1, dtype=np.int64)
+    multilevel_partition(g, pinned, p, np.zeros(4),
+                         MultilevelConfig(engine="jax"))
+    assert mlj.agg_decisions() == {}
+    assert not mlj._TUNER._samples

@@ -1,0 +1,220 @@
+"""PrefetchStream conformance (ISSUE 7 acceptance): the background reader
+changes *when* records are parsed, never *what* the partitioner sees.
+
+Two contracts pinned here:
+
+* **Bit-identity sweep** — labels are identical across
+  ``prefetch_batches`` ∈ {0, 1, 2, 8} × all 3 drivers × both disk
+  backends (packed binary, METIS text) × multilevel engines
+  {sparse, jax}, and equal to the in-memory run.
+* **No thread leaks** — the "prefetch-pump" thread is joined on every
+  exit path: normal exhaustion, consumer abandon/`break`, parse errors
+  surfacing mid-stream, and driver failures (referenced by
+  core/prefetch.py and DESIGN.md §12.2).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import BuffCutConfig, PipelineConfig, VectorizedConfig
+from repro.core.buffcut import _buffcut_partition
+from repro.core.multilevel import MultilevelConfig
+from repro.core.pipeline import _buffcut_partition_pipelined
+from repro.core.vector_stream import _buffcut_partition_vectorized
+from repro.core.prefetch import PrefetchStream, maybe_prefetch
+from repro.graphs import (
+    DiskNodeStream,
+    StreamFormatError,
+    rmat_graph,
+    write_metis,
+    write_packed,
+)
+
+PF_SWEEP = (0, 1, 2, 8)
+
+DRIVERS = {
+    "sequential": lambda s, cfg, pf: _buffcut_partition(
+        s, cfg, prefetch_batches=pf
+    ),
+    "vectorized": lambda s, cfg, pf: _buffcut_partition_vectorized(
+        s, cfg, VectorizedConfig(wave=1, chunk=1), prefetch_batches=pf
+    ),
+    "pipelined": lambda s, cfg, pf: _buffcut_partition_pipelined(
+        s, cfg, PipelineConfig(prefetch_batches=pf)
+    ),
+}
+
+
+@pytest.fixture(scope="module")
+def base_graph():
+    return rmat_graph(128, 5, seed=7)
+
+
+@pytest.fixture(scope="module")
+def disk_files(base_graph, tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("prefetch")
+    packed = str(tmp / "g.bcsr")
+    text = str(tmp / "g.metis")
+    write_packed(base_graph, packed)
+    write_metis(base_graph, text)
+    return {"packed": packed, "text": text}
+
+
+def _cfg(engine: str) -> BuffCutConfig:
+    return BuffCutConfig(
+        k=4, buffer_size=24, batch_size=12, d_max=48, score="haa",
+        collect_stats=True, ml=MultilevelConfig(engine=engine),
+    )
+
+
+def _open(disk_files, backend: str) -> DiskNodeStream:
+    if backend == "text":
+        # odd chunk size so record boundaries land mid-chunk
+        return DiskNodeStream(disk_files["text"], io_chunk_bytes=97)
+    return DiskNodeStream(disk_files["packed"])
+
+
+def _pump_threads() -> list:
+    return [
+        t for t in threading.enumerate()
+        if t.name == "prefetch-pump" and t.is_alive()
+    ]
+
+
+# --------------------------------------------------------- bit-identity
+
+
+@pytest.mark.parametrize("engine", ["sparse", "jax"])
+@pytest.mark.parametrize("driver", sorted(DRIVERS))
+def test_prefetch_sweep_bit_identical(driver, engine, base_graph, disk_files):
+    """Sweeping the prefetch depth never changes a single label."""
+    cfg = _cfg(engine)
+    b_mem, s_mem = DRIVERS[driver](base_graph, cfg, 0)
+    for backend in ("packed", "text"):
+        for pf in PF_SWEEP:
+            b, s = DRIVERS[driver](_open(disk_files, backend), cfg, pf)
+            assert np.array_equal(b_mem, b), (backend, pf)
+            assert s.cut_weight == s_mem.cut_weight, (backend, pf)
+            assert s.balance == s_mem.balance, (backend, pf)
+    assert not _pump_threads()
+
+
+def test_record_iteration_matches_unwrapped(disk_files):
+    """Record-granular consumption (the sequential/vectorized path) yields
+    the same records in the same order as the raw stream, and the consumer-
+    side tell() token resumes bit-identically."""
+    plain = list(DiskNodeStream(disk_files["packed"]))
+    ps = PrefetchStream(DiskNodeStream(disk_files["packed"]), depth=2, block=7)
+    seen = []
+    token = None
+    for i, rec in enumerate(ps):
+        seen.append(rec)
+        if i == len(plain) // 2:
+            token = ps.tell()  # consumer-truthful, not pump-side
+    assert len(seen) == len(plain)
+    for (u, nb, w, nw), (u2, nb2, w2, nw2) in zip(plain, seen):
+        assert u == u2 and nw == nw2
+        assert np.array_equal(nb, nb2) and np.array_equal(w, w2)
+    # resume from the captured token == tail of the plain read
+    tail = [u for u, *_ in DiskNodeStream(disk_files["packed"]).iter_from(token)]
+    assert tail == [u for u, *_ in plain[len(plain) // 2 + 1:]]
+    assert not _pump_threads()
+
+
+# ------------------------------------------------------------ API edges
+
+
+def test_constructor_validation(disk_files):
+    s = DiskNodeStream(disk_files["packed"])
+    with pytest.raises(ValueError):
+        PrefetchStream(s, depth=0)
+    with pytest.raises(ValueError):
+        PrefetchStream(s, depth=1, block=0)
+
+
+def test_maybe_prefetch_identity(disk_files):
+    s = DiskNodeStream(disk_files["packed"])
+    assert maybe_prefetch(s, 0, 16) is s          # 0 = do not wrap
+    ps = maybe_prefetch(s, 2, 16)
+    assert isinstance(ps, PrefetchStream)
+    assert maybe_prefetch(ps, 2, 16) is ps        # never double-wrap
+
+
+def test_tell_before_first_record_raises(disk_files):
+    ps = PrefetchStream(DiskNodeStream(disk_files["packed"]), depth=1)
+    with pytest.raises(NotImplementedError):
+        ps.tell()
+    ps.close()
+    assert not _pump_threads()
+
+
+def test_resident_bytes_counts_staging(disk_files):
+    """While blocks sit in the queue, resident_bytes must see them."""
+    ps = PrefetchStream(DiskNodeStream(disk_files["packed"]), depth=4, block=8)
+    it = iter(ps)
+    next(it)
+    # let the pump fill the queue, then staging must be visible
+    deadline = 100
+    while ps.resident_bytes <= ps._inner.resident_bytes and deadline:
+        deadline -= 1
+        threading.Event().wait(0.01)
+    assert ps.resident_bytes > ps._inner.resident_bytes
+    ps.close()
+    assert not _pump_threads()
+
+
+# ----------------------------------------------------------- no leaks
+
+
+def test_no_thread_leak_consumer_abandon(disk_files):
+    """A consumer that breaks mid-stream (or drops the iterator) must not
+    leave the pump parked on a full queue."""
+    ps = PrefetchStream(DiskNodeStream(disk_files["packed"]), depth=1, block=4)
+    for i, _rec in enumerate(ps):
+        if i == 5:
+            break
+    ps.close()
+    assert not _pump_threads()
+
+    # generator dropped without break: close() still reaps the pump
+    ps = PrefetchStream(DiskNodeStream(disk_files["packed"]), depth=1, block=4)
+    it = iter(ps)
+    next(it)
+    del it
+    ps.close()
+    assert not _pump_threads()
+
+
+def test_no_thread_leak_on_parse_error(base_graph, tmp_path):
+    """A corrupt file raises StreamFormatError in the *consumer* and the
+    pump is joined — errors cross the thread boundary, threads do not."""
+    path = str(tmp_path / "bad.bcsr")
+    write_packed(base_graph, path)
+    with open(path, "r+b") as f:  # flip a payload byte -> section CRC fails
+        f.seek(200)
+        b = f.read(1)
+        f.seek(200)
+        f.write(bytes([b[0] ^ 0xFF]))
+    ps = PrefetchStream(DiskNodeStream(path), depth=2, block=8)
+    with pytest.raises(StreamFormatError):
+        for _ in ps:
+            pass
+    assert not _pump_threads()
+
+
+def test_no_thread_leak_on_driver_failure(base_graph, tmp_path):
+    """Every driver's finally-path closes the prefetcher when the stream
+    errors mid-partition."""
+    path = str(tmp_path / "bad2.bcsr")
+    write_packed(base_graph, path)
+    with open(path, "r+b") as f:
+        f.seek(300)
+        b = f.read(1)
+        f.seek(300)
+        f.write(bytes([b[0] ^ 0xFF]))
+    cfg = _cfg("sparse")
+    for name, drv in sorted(DRIVERS.items()):
+        with pytest.raises(StreamFormatError):
+            drv(DiskNodeStream(path), cfg, 2)
+        assert not _pump_threads(), name

@@ -1,0 +1,113 @@
+"""Scalar-twin parity: the fused per-record hot loop (core/pipeline.py)
+replays RescoreState's batched bumps in plain python — these tests pin
+that the two produce **bitwise-identical** counter state and the same
+IncreaseKey (apply) sequence, under randomized event interleavings.
+
+Referenced by core/rescore.py's scalar-twin docstrings and DESIGN.md
+§12.2.  The IEEE-754 facts relied on: left-to-right python-float adds ==
+seq_sum64's bincount accumulation; ``a - b == a + (-b)`` for float64;
+np.add.at applies element-by-element in adjacency order.
+"""
+import numpy as np
+import pytest
+
+from repro.core.rescore import RescoreState
+from repro.core.scores import get_score
+from repro.graphs import rmat_graph
+
+SCORES = ["anr", "cbs", "haa", "nss"]  # cms is sequential-only (block counts)
+
+
+def _records(seed: int, n: int = 64):
+    """Stream records (v, nbrs, w, node_w) of a small weighted rmat graph."""
+    g = rmat_graph(n, 4, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    out = []
+    for v in range(g.n):
+        lo, hi = g.indptr[v], g.indptr[v + 1]
+        nbrs = g.indices[lo:hi].astype(np.int64)
+        w = rng.integers(1, 5, nbrs.size).astype(np.float64) / 3.0
+        out.append((v, nbrs, w, 1.0))
+    return g.n, out
+
+
+def _assert_state_equal(a: RescoreState, b: RescoreState):
+    assert np.array_equal(a.deg_w, b.deg_w)
+    assert np.array_equal(a.assigned_w, b.assigned_w)
+    if a.buffered_w is not None:
+        assert np.array_equal(a.buffered_w, b.buffered_w)
+    assert np.array_equal(a.member, b.member)
+
+
+@pytest.mark.parametrize("score", SCORES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_scalar_twins_match_batched(score, seed):
+    """Random interleaving of observe / buffer-insert / bump_assigned /
+    bump_buffered events, applied to a batched and a scalar state in
+    lockstep: counters bitwise equal, apply-sequences identical."""
+    spec = get_score(score, d_max=16.0)
+    n, records = _records(seed)
+    rng = np.random.default_rng(seed + 7)
+
+    sb = RescoreState(n, spec, k=4)   # batched
+    ss = RescoreState(n, spec, k=4)   # scalar twins
+    fscore = spec.scalar_fn()
+
+    for v, nbrs, w, nw in records:
+        # arrival: observe both ways (identical accumulation order)
+        sb.observe(v, nbrs, w, nw)
+        ss.observe_scalar(v, nbrs, w, nw)
+        assert sb.deg_w[v] == ss.deg_w[v]
+
+        event = rng.integers(0, 3)
+        if event == 0:
+            # v enters the buffer (NSS counts mutual buffered weight first)
+            tb, scb = sb.bump_buffered(np.array([v], dtype=np.int64))
+            applied = []
+            ss.bump_buffered_scalar(v, fscore, lambda x, s: applied.append((x, s)))
+            assert list(zip(tb.tolist(), scb.tolist())) == applied
+            sb.member[v] = True
+            ss.member[v] = True
+            assert sb.score(v) == ss.score_scalar(v, fscore)
+        elif event == 1:
+            # v assigned straight away (hub path): credit buffered nbrs
+            tb, scb = sb.bump_assigned(np.array([v], dtype=np.int64), False)
+            applied = []
+            ss.bump_assigned_scalar(v, False, fscore, lambda x, s: applied.append((x, s)))
+            assert list(zip(tb.tolist(), scb.tolist())) == applied
+            sb.release(np.array([v])); ss.release(np.array([v]))
+        else:
+            # v skipped this turn (stays cached, not buffered)
+            pass
+
+    # drain: evict every buffered node into the batch (was_buffered=True
+    # exercises the NSS debit twin)
+    for v in np.flatnonzero(sb.member).tolist():
+        sb.member[v] = False
+        ss.member[v] = False
+        tb, scb = sb.bump_assigned(np.array([v], dtype=np.int64), True)
+        applied = []
+        ss.bump_assigned_scalar(v, True, fscore, lambda x, s: applied.append((x, s)))
+        assert list(zip(tb.tolist(), scb.tolist())) == applied
+
+    _assert_state_equal(sb, ss)
+
+
+@pytest.mark.parametrize("score", SCORES)
+def test_score_scalar_matches_batched(score):
+    """score_scalar through scalar_fn == vectorized scores_of, bitwise,
+    including the d_max hub-threshold pow fast paths."""
+    spec = get_score(score, d_max=16.0)
+    n, records = _records(5)
+    sb = RescoreState(n, spec, k=4)
+    fscore = spec.scalar_fn()
+    for v, nbrs, w, nw in records:
+        sb.observe(v, nbrs, w, nw)
+        sb.member[v] = True
+    sb.assigned_w[:] = np.linspace(0.0, 9.0, n)
+    if sb.buffered_w is not None:
+        sb.buffered_w[:] = np.linspace(0.0, 3.0, n)
+    vs = np.arange(n, dtype=np.int64)
+    batched = sb.scores_of(vs)
+    for v in range(n):
+        assert batched[v] == sb.score_scalar(v, fscore)
