@@ -117,6 +117,14 @@ def hotpath_table(path: str = "BENCH_hotpath.json") -> str:
         out.append(f"| checkpoint | densest-cadence overhead "
                    f"{ck['overhead_densest']:.1%} | <= 25% "
                    f"| resume_bit_identical={ck['resume_bit_identical']} |")
+    sh = r.get("sharded")
+    if sh:
+        out.append(f"| sharded | W=4 {sh['speedup_w4']:.2f}x nodes/s, "
+                   f"post-restream cut {sh['cut_ratio_w4_post']:.3f}x W=1 "
+                   f"| >= {sh['scaling_floor']}x ({sh['cpu_count']} cpu) "
+                   f"+ cut <= 1.10x "
+                   f"| exact_cut={sh.get('cut_is_exact')}, "
+                   f"backends_identical={sh.get('backends_bit_identical')} |")
     return "\n".join(out)
 
 

@@ -35,6 +35,7 @@ from repro.graphs.stream_io import DiskNodeStream, permute_to_disk
 from repro.core.buffcut import BuffCutConfig, StreamStats
 from repro.core.checkpoint import CheckpointError, Checkpointer, load_checkpoint
 from repro.core.restream import restream_refine as _restream_refine
+from repro.distributed.shard_driver import shard_partition as _shard_partition
 from repro.api.config import (
     ORDERINGS,
     CuttanaConfig,
@@ -154,6 +155,11 @@ def partition(
     """
     dc = _coerce_config(config, overrides)
     spec = get_partitioner(dc.driver)
+    if dc.workers > 1 and not spec.supports_shard:
+        raise ValueError(
+            f"driver {spec.name!r} does not support sharded multi-worker "
+            "runs; shard-capable drivers: buffcut (or run workers=1)"
+        )
     src = resolve_source(source)
     ckpt = None
     if dc.checkpoint_path:
@@ -189,17 +195,19 @@ def partition(
         )
     run_src, perm, tmp = _realize_ordering(src, dc)
     if (
-        dc.restream_passes > 0
+        (dc.restream_passes > 0 or dc.workers > 1)
         and run_src.graph is None
         and not isinstance(run_src.stream, DiskNodeStream)
     ):
-        # restream replays the stream; a foreign stream with no file behind
-        # it is not replayable, so load it up front (before the first pass
-        # exhausts it).  NodeStream / DiskNodeStream replay natively.
+        # restream and the shard split both replay the stream; a foreign
+        # stream with no file behind it is not replayable, so load it up
+        # front (before the first pass exhausts it).  NodeStream /
+        # DiskNodeStream replay natively.
         g = run_src.materialize()
         run_src = ResolvedSource(NodeStream(g), g, run_src.kind, run_src.origin)
     t0 = time.perf_counter()
     rinfo = None
+    shard_info = None
     try:
         if restream_resume is not None:
             # the driver phase finished before the checkpoint was written:
@@ -211,6 +219,18 @@ def partition(
             labels = np.asarray(restream_resume["block"], dtype=np.int64).copy()
         elif ckpt is not None:
             labels, stats = spec.run(run_src, dc, ckpt=ckpt, resume=driver_resume)
+        elif dc.workers > 1:
+            # sharded multi-worker pass (distributed/shard_driver.py); the
+            # restream below then reconciles the shard seams from the exact
+            # merged cut + loads the pool hands back
+            labels, stats, shard_info = _shard_partition(
+                run_src.stream,
+                dc.buffcut,
+                workers=dc.workers,
+                load_sync_every=dc.load_sync_every,
+                backend=dc.shard_backend,
+                prefetch_batches=dc.pipeline.prefetch_batches,
+            )
         else:
             labels, stats = spec.run(run_src, dc)
         if dc.restream_passes > 0:
@@ -278,6 +298,10 @@ def partition(
         "runtime_s": runtime_s,
         "config": dc.to_dict(),
     }
+    if shard_info is not None:
+        # per-worker stats, sync rounds, ranges, pre-reconcile cut split;
+        # the post-reconcile trace is provenance["restream"]["passes"]
+        provenance["sharded"] = shard_info
     if rinfo is not None:
         # pass-by-pass provenance: replay order, batches, moves, cut trace
         provenance["restream"] = rinfo.to_dict()

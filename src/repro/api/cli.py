@@ -50,6 +50,17 @@ def _add_partition_parser(sub: "argparse._SubParsersAction") -> None:
     p.add_argument("--prefetch-batches", type=int, default=2,
                    help="stream prefetcher depth in batches (0 disables the "
                         "background reader thread)")
+    p.add_argument("--workers", type=int, default=1, metavar="W",
+                   help="shard the stream across W BuffCut workers "
+                        "(contiguous id ranges; pair with --restream to "
+                        "reconcile the shard seams)")
+    p.add_argument("--load-sync-every", type=int, default=8, metavar="S",
+                   help="sharded: committed batches between load-sync "
+                        "barrier rounds per worker")
+    p.add_argument("--shard-backend", default="thread",
+                   choices=["thread", "process"],
+                   help="sharded: worker threads (deterministic anchor) or "
+                        "forked processes (multi-core scaling)")
     p.add_argument("--restream", type=int, default=0, metavar="N",
                    help="restreaming refinement passes (replays the stream "
                         "out-of-core on disk sources)")
@@ -129,6 +140,9 @@ def _cmd_partition(args: argparse.Namespace) -> int:
         queue_depth=args.queue_depth,
         read_ahead=args.read_ahead,
         prefetch_batches=args.prefetch_batches,
+        workers=args.workers,
+        load_sync_every=args.load_sync_every,
+        shard_backend=args.shard_backend,
         collect_stats=args.stats,
         **{
             key: val

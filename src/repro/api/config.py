@@ -24,6 +24,7 @@ from repro.core.multilevel import MultilevelConfig
 from repro.core.pipeline import PipelineConfig
 from repro.core.restream import RESTREAM_ORDERS
 from repro.core.vector_stream import VectorizedConfig
+from repro.distributed.shard_driver import SHARD_BACKENDS
 
 ORDERINGS = ("natural", "random", "bfs", "konect")
 
@@ -31,6 +32,7 @@ ORDERINGS = ("natural", "random", "bfs", "konect")
 _TOP_KEYS = (
     "driver", "ordering", "order_seed", "restream_passes", "restream_order",
     "checkpoint_path", "checkpoint_every",
+    "workers", "load_sync_every", "shard_backend",
 )
 _BUFFCUT_KEYS = (
     "k", "eps", "buffer_size", "batch_size", "d_max", "score",
@@ -73,6 +75,12 @@ class DriverConfig:
     # to `checkpoint_path` every `checkpoint_every` committed batches
     checkpoint_path: "str | None" = None
     checkpoint_every: int = 0
+    # sharded multi-worker partitioning (distributed/shard_driver.py,
+    # DESIGN.md §13): W contiguous id-range shards, one driver each, loads
+    # synced every `load_sync_every` committed batches per worker
+    workers: int = 1
+    load_sync_every: int = 8
+    shard_backend: str = "thread"
 
     def __post_init__(self) -> None:
         if self.ordering not in ORDERINGS:
@@ -100,6 +108,26 @@ class DriverConfig:
             # path alone opts in; default cadence (EXPERIMENTS.md: <3%
             # overhead at every=8 on the hot-path grid)
             self.checkpoint_every = 8
+        if self.workers < 1:
+            raise ValueError(f"workers must be >= 1, got {self.workers}")
+        if self.load_sync_every < 1:
+            raise ValueError(
+                f"load_sync_every must be >= 1, got {self.load_sync_every}"
+            )
+        if self.shard_backend not in SHARD_BACKENDS:
+            raise ValueError(
+                f"unknown shard_backend {self.shard_backend!r}: pick one of "
+                f"{SHARD_BACKENDS}"
+            )
+        if self.workers > 1 and self.checkpoint_path:
+            # a sharded run has W independent stream positions plus barrier
+            # state — a single resume token cannot represent it, and a stale
+            # single-worker snapshot must never silently resume a sharded run
+            raise ValueError(
+                "checkpointing is not supported with workers > 1: a sharded "
+                "run has one stream position per worker and cannot resume "
+                "from a single token; drop checkpoint_path or run workers=1"
+            )
 
     # ------------------------------------------------------- flat builder
     @classmethod
@@ -172,6 +200,9 @@ class DriverConfig:
             "order_seed": self.order_seed,
             "checkpoint_path": self.checkpoint_path,
             "checkpoint_every": self.checkpoint_every,
+            "workers": self.workers,
+            "load_sync_every": self.load_sync_every,
+            "shard_backend": self.shard_backend,
         }
 
     @classmethod
@@ -189,6 +220,9 @@ class DriverConfig:
             order_seed=d.get("order_seed", 0),
             checkpoint_path=d.get("checkpoint_path"),
             checkpoint_every=d.get("checkpoint_every", 0),
+            workers=d.get("workers", 1),
+            load_sync_every=d.get("load_sync_every", 8),
+            shard_backend=d.get("shard_backend", "thread"),
         )
 
     def to_json(self) -> str:

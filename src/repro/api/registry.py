@@ -41,6 +41,9 @@ class PartitionerSpec:
     # run accepts ckpt=/resume= kwargs (core/checkpoint.py); the facade
     # refuses --checkpoint/--resume for specs that don't
     supports_checkpoint: bool = False
+    # the facade may route this driver through the sharded multi-worker
+    # pool (distributed/shard_driver.py) when DriverConfig.workers > 1
+    supports_shard: bool = False
 
 
 _REGISTRY: dict[str, PartitionerSpec] = {}
@@ -95,6 +98,7 @@ register_partitioner(PartitionerSpec(
     description="BuffCut sequential driver (paper Alg. 1): prioritized "
                 "buffer + batch-wise multilevel.",
     supports_checkpoint=True,
+    supports_shard=True,
     run=lambda src, dc, **kw: _buffcut_partition(
         src.stream, dc.buffcut,
         prefetch_batches=dc.pipeline.prefetch_batches, **kw,

@@ -217,6 +217,7 @@ def _buffcut_partition(
     prefetch_batches: int = 0,
     ckpt: Checkpointer | None = None,
     resume: dict | None = None,
+    on_batch=None,
 ) -> tuple[np.ndarray, StreamStats]:
     # prefetch overlaps parsing with scoring, record order (and therefore
     # every label) untouched — tell()/resident_bytes stay consumer-truthful
@@ -310,6 +311,11 @@ def _buffcut_partition(
                 _bump_block_counts(st, pq, int(u), int(b_))
         st.release(bnodes)
         batch.clear()
+        if on_batch is not None:
+            # sharded load-sync hook (distributed/shard_driver.py): fires at
+            # the commit boundary with the live per-block loads, which it may
+            # rewrite in place to fold in other workers' published loads
+            on_batch(stats.n_batches, loads)
 
     def evict_one() -> None:
         u = pq.extract_max()

@@ -1,32 +1,48 @@
-"""Distributed runtime: sharding rules, compression, overlap, GNN placement."""
-from repro.distributed.sharding import (
-    ShardingRules,
-    lm_sharding_rules,
-    gnn_sharding_rules,
-    dlrm_sharding_rules,
-    param_shardings,
-    batch_shardings,
-)
-from repro.distributed.compression import (
-    topk_compress,
-    topk_decompress,
-    error_feedback_update,
-    quantize_int8,
-    dequantize_int8,
-)
-from repro.distributed.overlap import collective_matmul_allgather
+"""Distributed runtime: shard-parallel partitioning, sharding rules,
+compression, overlap, GNN placement.
 
-__all__ = [
-    "ShardingRules",
-    "lm_sharding_rules",
-    "gnn_sharding_rules",
-    "dlrm_sharding_rules",
-    "param_shardings",
-    "batch_shardings",
-    "topk_compress",
-    "topk_decompress",
-    "error_feedback_update",
-    "quantize_int8",
-    "dequantize_int8",
-    "collective_matmul_allgather",
-]
+Submodules are imported lazily (PEP 562): `shard_driver` is pure
+numpy + threads and must stay importable — and fork-safe for its process
+backend — without dragging in the jax-backed model-parallel modules
+(`sharding`, `compression`, `overlap`), whose attributes still resolve
+through this package exactly as before.
+"""
+
+_LAZY = {
+    # shard-parallel partitioning (numpy + threads, fork-safe)
+    "ShardPool": "shard_driver",
+    "SharedLoads": "shard_driver",
+    "ShardWorkerError": "shard_driver",
+    "shard_partition": "shard_driver",
+    "SHARD_BACKENDS": "shard_driver",
+    # model-parallel runtime (jax)
+    "ShardingRules": "sharding",
+    "lm_sharding_rules": "sharding",
+    "gnn_sharding_rules": "sharding",
+    "dlrm_sharding_rules": "sharding",
+    "param_shardings": "sharding",
+    "batch_shardings": "sharding",
+    "topk_compress": "compression",
+    "topk_decompress": "compression",
+    "error_feedback_update": "compression",
+    "quantize_int8": "compression",
+    "dequantize_int8": "compression",
+    "collective_matmul_allgather": "overlap",
+}
+
+__all__ = list(_LAZY)
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    value = getattr(importlib.import_module(f"{__name__}.{mod}"), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -22,13 +22,15 @@ from repro.graphs.orderings import (
 from repro.graphs.locality import aid_per_node, mean_aid
 from repro.graphs.faults import FaultSchedule, FaultyFile, FaultyOpener
 from repro.graphs.io import write_metis, read_metis
-from repro.graphs.stream import NodeStream, NodeStreamBase, as_node_stream
+from repro.graphs.stream import NodeStream, NodeStreamBase, StreamShard, as_node_stream
 from repro.graphs.stream_io import (
     DiskNodeStream,
     StreamFormatError,
     open_stream,
     permute_to_disk,
     read_packed,
+    shard_boundary_pass,
+    shard_ranges,
     write_packed,
 )
 from repro.graphs.sampler import sample_multihop, cross_block_fraction
@@ -56,6 +58,7 @@ __all__ = [
     "read_metis",
     "NodeStream",
     "NodeStreamBase",
+    "StreamShard",
     "as_node_stream",
     "DiskNodeStream",
     "FaultSchedule",
@@ -65,6 +68,8 @@ __all__ = [
     "open_stream",
     "permute_to_disk",
     "read_packed",
+    "shard_boundary_pass",
+    "shard_ranges",
     "write_packed",
     "sample_multihop",
     "cross_block_fraction",

@@ -206,6 +206,23 @@ def test_checkpointer_extra_merged(tmp_path):
     assert out["api"] == {"driver_config_json": "{}"} and out["kind"] == "t"
 
 
+def test_checkpoint_rejected_under_sharding(tmp_path):
+    """A sharded run has one stream position per worker — a single resume
+    token cannot represent it, so workers>1 + checkpoint_path must fail
+    loudly at config build, never write an unresumable snapshot."""
+    from repro.api import DriverConfig
+
+    with pytest.raises(ValueError, match="workers > 1"):
+        DriverConfig(workers=2, checkpoint_path=str(tmp_path / "c.ckpt"))
+    with pytest.raises(ValueError, match="workers > 1"):
+        DriverConfig.create(
+            k=4, workers=4, checkpoint_path=str(tmp_path / "c.ckpt")
+        )
+    # each knob alone stays valid
+    DriverConfig(workers=2)
+    DriverConfig(checkpoint_path=str(tmp_path / "c.ckpt"))
+
+
 # -------------------------------------------------------------- packers
 
 

@@ -1,0 +1,189 @@
+"""Shard-pool lifecycle and fault injection (marker: faultinject).
+
+Extends the test_prefetch.py / test_faults.py leak pattern to the
+multi-worker pool: a worker exception, a mid-run consumer abandon, and a
+`FaultyOpener` shard must all leave zero live pool threads behind
+(`threading.active_count` back to baseline) — and either propagate loudly
+(`ShardWorkerError` carrying the root cause) or retry per `RetryPolicy`.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.buffcut import BuffCutConfig
+from repro.core.multilevel import MultilevelConfig
+from repro.distributed.shard_driver import (
+    ShardPool,
+    ShardWorkerError,
+    shard_partition,
+)
+from repro.graphs.faults import FaultSchedule, FaultyOpener
+from repro.graphs.generators import rmat_graph
+from repro.graphs.stream import NodeStream
+from repro.graphs.stream_io import DiskNodeStream, RetryPolicy, write_packed
+from repro.graphs.stream_io import shard_ranges
+from repro.distributed.shard_driver import _make_factories
+
+pytestmark = pytest.mark.faultinject
+
+_FAST = RetryPolicy(retries=3, backoff_s=0.0005)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat_graph(200, 6, seed=9)  # rounds up to n=256
+
+
+@pytest.fixture(scope="module")
+def packed_file(graph, tmp_path_factory):
+    p = str(tmp_path_factory.mktemp("shard-faults") / "g.bcsr")
+    write_packed(graph, p)
+    return p
+
+
+def _cfg() -> BuffCutConfig:
+    return BuffCutConfig(
+        k=4, buffer_size=32, batch_size=8, d_max=64,
+        ml=MultilevelConfig(engine="sparse"),
+    )
+
+
+def _pool_threads() -> list:
+    return [
+        t for t in threading.enumerate()
+        if t.name.startswith("shard-worker") and t.is_alive()
+    ]
+
+
+def _make_pool(graph, workers: int, factories=None) -> ShardPool:
+    ranges = shard_ranges(graph.n, workers)
+    if factories is None:
+        factories, _ = _make_factories(NodeStream(graph), ranges)
+    return ShardPool(
+        factories, ranges, _cfg(),
+        load_sync_every=1, prefetch_batches=0,
+        backend="thread", merge_in_worker=False,
+    )
+
+
+# ------------------------------------------------------------- lifecycle
+
+
+def test_worker_exception_propagates_and_joins(graph):
+    """One worker's failure aborts the barrier, wakes the others, joins
+    every thread, and surfaces the root cause — never a hang."""
+    baseline = threading.active_count()
+    ranges = shard_ranges(graph.n, 4)
+    factories, _ = _make_factories(NodeStream(graph), ranges)
+
+    def boom():
+        raise RuntimeError("injected shard failure")
+
+    factories[2] = boom
+    pool = _make_pool(graph, 4, factories)
+    pool.start()
+    with pytest.raises(ShardWorkerError, match="injected shard failure"):
+        pool.run()
+    assert not _pool_threads()
+    assert threading.active_count() == baseline
+
+
+def test_midrun_consumer_abandon_joins_cleanly(graph):
+    """close() on a pool whose workers are blocked at the sync barrier
+    aborts the barrier and joins everything (prefetch abandon idiom)."""
+    baseline = threading.active_count()
+    ranges = shard_ranges(graph.n, 2)
+    factories, _ = _make_factories(NodeStream(graph), ranges)
+    slow = factories[1]
+
+    def stall_then_run():
+        # hold worker 1 back so worker 0 parks inside others_at(0, 0)
+        time.sleep(0.5)
+        return slow()
+
+    factories[1] = stall_then_run
+    pool = _make_pool(graph, 2, factories)
+    pool.start()
+    time.sleep(0.05)  # let worker 0 reach the barrier
+    pool.close()
+    assert not _pool_threads()
+    assert threading.active_count() == baseline
+    # a closed pool reports the abort loudly instead of returning junk
+    with pytest.raises(ShardWorkerError, match="closed by consumer"):
+        pool.run()
+
+
+def test_close_is_idempotent_after_success(graph):
+    pool = _make_pool(graph, 2)
+    pool.start()
+    pool.run()
+    pool.close()
+    pool.close()
+    assert (pool.block >= 0).all()
+    assert not _pool_threads()
+
+
+# -------------------------------------------------------- fault injection
+
+
+def test_transient_faults_in_shards_are_absorbed(graph, packed_file):
+    """Transient read errors inside worker shards retry per `RetryPolicy`:
+    same labels as a clean run, retries counted, no leaked threads."""
+    baseline = threading.active_count()
+    cfg = _cfg()
+    clean, s_clean, _ = shard_partition(
+        DiskNodeStream(packed_file, 512), cfg, workers=4, load_sync_every=2
+    )
+    sched = FaultSchedule(transient_reads={1, 4, 7, 22})
+    faulty = DiskNodeStream(
+        packed_file, 512, opener=FaultyOpener(sched), retry=_FAST
+    )
+    labels, stats, _ = shard_partition(faulty, cfg, workers=4, load_sync_every=2)
+    assert np.array_equal(labels, clean)
+    assert stats.cut_weight == s_clean.cut_weight
+    assert sched.injected["transient_read"] >= 1
+    assert stats.io_retries >= sched.injected["transient_read"] - 1
+    assert threading.active_count() == baseline
+
+
+def test_persistent_faults_propagate_loudly(packed_file):
+    """Retry exhaustion inside a worker surfaces as `ShardWorkerError`
+    (root OSError chained), with every pool thread joined."""
+    baseline = threading.active_count()
+    # leave the header + boundary scan clean (the ~80-chunk file costs the
+    # scan well under 100 global reads), then fail every read: some worker
+    # exhausts retries=3 no matter how the reads interleave
+    sched = FaultSchedule(transient_reads=set(range(100, 2000)))
+    faulty = DiskNodeStream(
+        packed_file, 512, opener=FaultyOpener(sched), retry=_FAST
+    )
+    with pytest.raises(ShardWorkerError):
+        shard_partition(faulty, _cfg(), workers=4, load_sync_every=2)
+    assert not _pool_threads()
+    assert threading.active_count() == baseline
+
+
+def test_process_worker_crash_is_loud(graph):
+    """A forked worker dying mid-drive (pipe EOF) is a `ShardWorkerError`,
+    and the parent joins its proxy threads and children."""
+    baseline = threading.active_count()
+    ranges = shard_ranges(graph.n, 2)
+    factories, _ = _make_factories(NodeStream(graph), ranges)
+
+    def die():
+        import os
+        os._exit(17)  # simulate a hard crash (OOM-kill style): no err message
+
+    factories[1] = die
+    pool = ShardPool(
+        factories, ranges, _cfg(),
+        load_sync_every=1, prefetch_batches=0,
+        backend="process", merge_in_worker=False,
+    )
+    pool.start()
+    with pytest.raises(ShardWorkerError, match="died|closed its pipe"):
+        pool.run()
+    assert not _pool_threads()
+    assert threading.active_count() == baseline
