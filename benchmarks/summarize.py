@@ -112,6 +112,15 @@ def hotpath_table(path: str = "BENCH_hotpath.json") -> str:
         out.append(f"| restream_outofcore | {cuts} "
                    f"| peak <= bound | exact_cut={rs.get('cut_is_exact')}, "
                    f"labels_match={rs.get('labels_match_memory')} |")
+    sv = r.get("serve")
+    if sv:
+        out.append(f"| serve | lookup p99 {sv['lookup_p99_ms']:.3f} ms, "
+                   f"{sv['updates_per_s']:.0f} edge ops/s, "
+                   f"cut {sv['cut_vs_scratch']:.3f}x from-scratch "
+                   f"| p99 <= 25 ms + >= 1000 ops/s + cut <= 1.10x "
+                   f"| exact@{sv['exact_checkpoints']} checkpoints="
+                   f"{sv['exact_at_every_checkpoint']}, "
+                   f"deterministic={sv['deterministic_replay']} |")
     ck = r.get("checkpoint")
     if ck:
         out.append(f"| checkpoint | densest-cadence overhead "

@@ -161,6 +161,118 @@ def _cmd_partition(args: argparse.Namespace) -> int:
     return 0
 
 
+def _add_serve_parser(sub: "argparse._SubParsersAction") -> None:
+    p = sub.add_parser(
+        "serve",
+        help="partition a source, keep it resident, and drive a scripted "
+             "update/lookup/refine workload",
+        description="Partition SOURCE, promote the result into a resident "
+                    "PartitionService (repro.serve), and replay a scripted "
+                    "workload — a delta file (--delta-file) or a generated "
+                    "churn spec (--workload gen:churn:updates=64,...) — "
+                    "through a ServeSession, reporting per-verb latencies, "
+                    "sustained rates, and the exactness check "
+                    "(resident cut == edge_cut recompute).",
+    )
+    p.add_argument("source",
+                   help="METIS text / packed binary path, or gen:<family>:... spec")
+    p.add_argument("-k", type=int, required=True, help="number of blocks")
+    p.add_argument("--driver", default="buffcut",
+                   help="dynamic-capable registry driver "
+                        "(see `python -m repro list` capability flags)")
+    p.add_argument("--workload", default="gen:churn:",
+                   help="churn spec: gen:churn:updates=64,ops=16,frac_del=0.25,"
+                        "node_adds=0,lookup_every=4,lookup_size=256,"
+                        "refine_every=8,seed=0 (defaults shown for omitted "
+                        "fields)")
+    p.add_argument("--delta-file", metavar="PATH", default=None,
+                   help="scripted delta file (overrides --workload; see "
+                        "repro.serve.workload for the line grammar)")
+    p.add_argument("--eps", type=float, default=0.03, help="balance slack")
+    p.add_argument("--score", default="haa", help="buffer score (anr/cbs/haa/nss/cms)")
+    p.add_argument("--buffer-size", type=int, default=None, help="Q_max (default: n/8)")
+    p.add_argument("--batch-size", type=int, default=None, help="delta (default: n/32)")
+    p.add_argument("--queue-depth", type=int, default=256,
+                   help="session request queue bound")
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="write the serve report JSON here (default: stdout "
+                        "summary only)")
+    p.set_defaults(cmd=_cmd_serve)
+
+
+def _cmd_serve(args: argparse.Namespace) -> int:
+    import dataclasses
+    import json
+
+    from repro.api import DriverConfig, partition, resolve_source
+    from repro.configs.buffcut_paper import scaled_config
+    from repro.core.metrics import edge_cut
+    from repro.serve import ChurnSpec, ServeSession, churn_ops, load_delta_file, run_workload
+
+    src = resolve_source(args.source)
+    src.materialize()  # the service keeps the graph resident
+    base = scaled_config(src.stream.n, k=args.k, eps=args.eps)
+    dc = DriverConfig.create(
+        DriverConfig(buffcut=base),
+        driver=args.driver, k=args.k, eps=args.eps, score=args.score,
+        **{key: val for key, val in (("buffer_size", args.buffer_size),
+                                     ("batch_size", args.batch_size))
+           if val is not None},
+    )
+    res = partition(src, dc)
+    service = res.into_service()
+    if args.delta_file is not None:
+        ops = load_delta_file(args.delta_file)
+        workload_desc = {"kind": "delta_file", "path": args.delta_file}
+    else:
+        spec = ChurnSpec.parse(args.workload)
+        ops = churn_ops(service.export_graph(), spec)
+        workload_desc = {"kind": "churn", "spec": dataclasses.asdict(spec)}
+    with ServeSession(service, queue_depth=args.queue_depth) as sess:
+        summary = run_workload(sess, ops)
+    cut_recompute = edge_cut(service.export_graph(), service.labels)
+    report = {
+        "provenance": {
+            "driver": res.provenance["driver"],
+            "source": res.provenance["source"],
+            "k": res.k,
+            "initial_cut": float(res.cut_weight),
+            "workload": workload_desc,
+            "ops": len(ops),
+        },
+        "workload": summary,
+        "session": dict(sess.stats),
+        "service": service.stats(),
+        "exact": {
+            "resident_cut": float(service.cut_weight),
+            "recomputed_cut": float(cut_recompute),
+            "match": bool(service.cut_weight == cut_recompute),
+        },
+    }
+    if not report["exact"]["match"]:
+        print(
+            f"error: resident cut {service.cut_weight} != recomputed "
+            f"{cut_recompute} after the workload — exactness invariant "
+            "violated",
+            file=sys.stderr,
+        )
+        return 1
+    upd = summary["update"]
+    lkp = summary["lookup"]
+    print(
+        f"serve driver={res.provenance['driver']} n={service.n} m={service.m} "
+        f"k={service.k} ops={len(ops)} "
+        f"cut={service.cut_weight:.0f} (exact) balance={service.balance:.3f} "
+        f"updates_per_s={upd['updates_per_s']:.0f} "
+        f"lookup_p50_ms={lkp['p50_ms']:.3f} lookup_p99_ms={lkp['p99_ms']:.3f}"
+    )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, sort_keys=True, indent=1)
+        print(f"wrote {args.json}")
+    return 0
+
+
 def _add_gen_parser(sub: "argparse._SubParsersAction") -> None:
     p = sub.add_parser(
         "gen",
@@ -203,7 +315,16 @@ def _cmd_list(args: argparse.Namespace) -> int:
     for name in list_partitioners():
         spec = get_partitioner(name)
         mode = "streaming" if spec.streaming else "memory-only"
-        line = f"{name:14s} [{mode}]"
+        caps = spec.capabilities()
+        flags = ", ".join(
+            label for label, on in (
+                ("disk-stream", caps["disk_stream"]),
+                ("checkpoint", caps["checkpoint"]),
+                ("shard", caps["shard"]),
+                ("dynamic", caps["dynamic"]),
+            ) if on
+        ) or "none"
+        line = f"{name:14s} [{mode}]  caps: {flags}"
         if spec.aliases:
             line += f"  aliases: {', '.join(spec.aliases)}"
         print(line)
@@ -219,6 +340,7 @@ def build_parser() -> argparse.ArgumentParser:
     )
     sub = ap.add_subparsers(dest="command", required=True)
     _add_partition_parser(sub)
+    _add_serve_parser(sub)
     _add_gen_parser(sub)
     p_list = sub.add_parser("list", help="list registered partitioners")
     p_list.add_argument("-v", "--verbose", action="store_true")

@@ -44,6 +44,21 @@ class PartitionerSpec:
     # the facade may route this driver through the sharded multi-worker
     # pool (distributed/shard_driver.py) when DriverConfig.workers > 1
     supports_shard: bool = False
+    # results from this driver can be promoted to a resident
+    # `repro.serve.PartitionService` via `PartitionResult.into_service()`
+    # (the driver maintains the exact cut/loads contract the service
+    # inherits; see DESIGN.md §14)
+    supports_dynamic: bool = False
+
+    def capabilities(self) -> dict:
+        """Per-algorithm capability flags, the discoverable form of every
+        actionable capability error (`python -m repro list` prints these)."""
+        return {
+            "disk_stream": self.streaming,
+            "checkpoint": self.supports_checkpoint,
+            "shard": self.supports_shard,
+            "dynamic": self.supports_dynamic,
+        }
 
 
 _REGISTRY: dict[str, PartitionerSpec] = {}
@@ -99,6 +114,7 @@ register_partitioner(PartitionerSpec(
                 "buffer + batch-wise multilevel.",
     supports_checkpoint=True,
     supports_shard=True,
+    supports_dynamic=True,
     run=lambda src, dc, **kw: _buffcut_partition(
         src.stream, dc.buffcut,
         prefetch_batches=dc.pipeline.prefetch_batches, **kw,
@@ -112,6 +128,7 @@ register_partitioner(PartitionerSpec(
     description="Vectorized BuffCut: dense score vectors + top-wave "
                 "eviction (TPU adaptation; wave=1,chunk=1 is bit-exact).",
     supports_checkpoint=True,
+    supports_dynamic=True,
     run=lambda src, dc, **kw: _buffcut_partition_vectorized(
         src.stream, dc.buffcut, dc.vectorized,
         prefetch_batches=dc.pipeline.prefetch_batches, **kw,
@@ -125,6 +142,7 @@ register_partitioner(PartitionerSpec(
     description="Pipelined BuffCut (paper §3.5): reader / PQ handler / "
                 "partition worker threads.",
     supports_checkpoint=True,
+    supports_dynamic=True,
     run=lambda src, dc, **kw: _buffcut_partition_pipelined(
         src.stream, dc.buffcut, dc.pipeline, **kw
     ),

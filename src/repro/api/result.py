@@ -87,6 +87,65 @@ class PartitionResult:
     def metrics(self) -> dict:
         return {"cut_ratio": self.cut_ratio, "balance": self.balance, "ier": self.ier}
 
+    # ------------------------------------------------------------- serving
+    def into_service(self, source=None, **service_kwargs):
+        """Promote this result into a resident `repro.serve.PartitionService`
+        — the partition stays alive and accepts lookup/update/refine
+        (DESIGN.md §14).
+
+        Gated on the driver's ``supports_dynamic`` capability (the three
+        BuffCut drivers); baselines raise the standard actionable error
+        naming a capable driver.  The service needs the graph resident:
+        `self.graph` when the source was in memory, otherwise it is
+        re-resolved and materialized from the provenance origin (file path
+        or ``gen:`` spec) — or pass `source` explicitly for one-shot
+        streams.  The service's cut/loads are recomputed from that resident
+        graph at construction (not handed over from `StreamStats`), so the
+        exactness invariant ``service.cut_weight == edge_cut(...)`` holds
+        by construction regardless of orderings or restream history.
+
+        Extra keyword arguments (``buffer_cap``, ``refine_batch``,
+        ``cache_bytes``) pass through to `PartitionService`.
+        """
+        from repro.api.registry import get_partitioner
+        from repro.api.sources import resolve_source
+        from repro.core.buffcut import BuffCutConfig
+        from repro.serve.service import PartitionService
+
+        driver = self.provenance.get("driver")
+        if driver is not None:
+            spec = get_partitioner(driver)
+            if not spec.supports_dynamic:
+                raise ValueError(
+                    f"driver {spec.name!r} does not support dynamic serving; "
+                    "dynamic-capable drivers: buffcut, buffcut-vec, "
+                    "buffcut-pipe (see `python -m repro list` capability "
+                    "flags)"
+                )
+        graph = self.graph
+        if graph is None:
+            origin = source
+            if origin is None:
+                origin = self.provenance.get("source", {}).get("origin")
+            if origin is None:
+                raise ValueError(
+                    "into_service needs the graph resident: this result has "
+                    "no attached graph and its provenance records no "
+                    "re-resolvable source; pass source= explicitly"
+                )
+            graph = resolve_source(origin).materialize()
+        cfg_dict = self.provenance.get("config", {}).get("buffcut")
+        if cfg_dict is None:
+            raise ValueError(
+                "into_service needs the BuffCut config snapshot in "
+                "provenance['config']['buffcut'] (results from "
+                "repro.api.partition always carry it)"
+            )
+        cfg_dict = dict(cfg_dict)
+        cfg_dict.pop("type", None)  # DriverConfig.to_dict discriminator
+        cfg = BuffCutConfig.from_dict(cfg_dict)
+        return PartitionService(graph, self.labels, cfg, **service_kwargs)
+
     # ------------------------------------------------------ serialization
     def to_dict(self) -> dict:
         return {

@@ -33,6 +33,7 @@ from repro.core.heistream import heistream_partition
 from repro.core.cuttana import CuttanaConfig, cuttana_partition
 from repro.core.restream import (
     RESTREAM_ORDERS,
+    MicroRestreamer,
     RestreamInfo,
     restream,
     restream_pass,
@@ -61,7 +62,7 @@ __all__ = [
     "heistream_partition",
     "CuttanaConfig", "cuttana_partition",
     "restream", "restream_pass", "restream_refine",
-    "RestreamInfo", "RESTREAM_ORDERS",
+    "RestreamInfo", "RESTREAM_ORDERS", "MicroRestreamer",
     "VectorizedConfig", "buffcut_partition_vectorized", "score_kernel",
     "PipelineConfig", "buffcut_partition_pipelined",
 ]

@@ -112,6 +112,41 @@ class IncrementalCut:
             )
         return self.cut_weight
 
+    def apply_edge_delta(
+        self, u: int, v: int, w: float, block: np.ndarray
+    ) -> float:
+        """Fold a *graph* mutation into the exact cut total: edge (u, v)
+        gained `w` weight (negative `w` = weight removed, e.g. a deletion
+        passes minus the edge's full current weight).  Returns the cut delta
+        actually applied.
+
+        Semantics match `edge_cut` on the mutated graph exactly (property-
+        pinned in tests/test_serve.py):
+
+        * self-loops (u == v) are never cut — delta 0 regardless of `w`;
+        * duplicate/parallel insertions accumulate onto one undirected edge,
+          so each insertion contributes its own `w` when the endpoints'
+          labels differ — identical to the merged edge's total weight being
+          cut once;
+        * an unassigned endpoint (label -1) counts as cut only against an
+          assigned one, exactly `edge_cut`'s `block[src] != block[dst]`.
+
+        Refused mid-bracket like `snapshot`: a stage/commit reassignment is
+        in flight and the staged side was computed against the pre-delta
+        adjacency, so interleaving a graph mutation would corrupt the total.
+        """
+        if self._staged is not None:
+            raise RuntimeError(
+                "IncrementalCut.apply_edge_delta between stage and commit: "
+                "apply graph deltas only at batch boundaries"
+            )
+        if u == v:
+            return 0.0
+        if block[u] != block[v]:
+            self.cut_weight += float(w)
+            return float(w)
+        return 0.0
+
     def stage(
         self,
         bnodes: np.ndarray,

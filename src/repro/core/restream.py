@@ -157,6 +157,113 @@ def _move_gain(v: int, nbrs: np.ndarray, w: np.ndarray, block: np.ndarray, k: in
     return float(conn.max() - conn[block[v]])
 
 
+class MicroRestreamer:
+    """The reusable δ-batch re-assignment core — factored out of the
+    restream pass loop so the serving subsystem (`repro.serve`) drains its
+    standing priority buffer through the *same* machinery.
+
+    Owns no stream and no replay policy.  Callers retain each node's
+    adjacency in `adj` (a `rescore.AdjacencyCache`) and hand over batches;
+    `commit` re-decides a δ-batch jointly through the batch-multilevel
+    engine while `commit_hub` re-assigns one hub row (deg > d_max)
+    immediately via Fennel — both keep the global label array, the
+    per-block float64 loads, and the exact incremental cut
+    (`metrics.IncrementalCut` stage/commit bracket) consistent in place,
+    and release the batch's adjacency afterwards.
+
+    Counters accumulate into the caller-supplied `log` dict under the
+    restream pass-log keys (``n_batches``/``n_hubs``/``moved``/
+    ``engine_fallbacks``) so checkpointed pass logs and the service's
+    refine summaries share one schema.  `on_peak(extra_bytes)` fires at
+    every batch's residency high-water mark; `on_commit()` after every
+    committed batch (the restream checkpoint cadence hook).
+    """
+
+    def __init__(
+        self,
+        n: int,
+        block: np.ndarray,
+        loads: np.ndarray,
+        cm: IncrementalCut,
+        cfg: BuffCutConfig,
+        params: FennelParams,
+        adj: AdjacencyCache,
+        *,
+        log: "dict | None" = None,
+        on_peak=None,
+        on_commit=None,
+    ):
+        self.n = int(n)
+        self.block = block
+        self.loads = loads
+        self.cm = cm
+        self.cfg = cfg
+        self.p = params
+        self.adj = adj
+        self.log = log if log is not None else {
+            "n_batches": 0, "n_hubs": 0, "moved": 0, "engine_fallbacks": 0,
+        }
+        self._on_peak = on_peak
+        self._on_commit = on_commit
+        self._one = np.empty(1, dtype=np.int64)
+
+    def _fallback(self) -> None:
+        self.log["engine_fallbacks"] += 1
+
+    def commit(self, bnodes: np.ndarray) -> np.ndarray:
+        """Jointly re-partition `bnodes` against the fixed outside labels:
+        stage the old cut contribution, detach the batch (loads released,
+        labels hidden from the model), run the batch-multilevel assignment,
+        write back, and fold the exact cut delta in.  Returns the new
+        labels in batch order."""
+        nbr_c, w_c, degs = self.adj.slice(bnodes)
+        node_w_b = self.adj.node_weights(bnodes)
+        old = self.block[bnodes].copy()
+        self.cm.stage(bnodes, degs, nbr_c, w_c, self.block)
+        # detach the batch: release loads, hide current labels from the model
+        np.add.at(self.loads, old, -node_w_b.astype(np.float64))
+        self.block[bnodes] = -1
+        model = build_batch_model_from_adj(
+            self.n, bnodes, degs, nbr_c, w_c, node_w_b, self.block, self.cfg.k
+        )
+        labels = multilevel_partition_resilient(
+            model.graph, model.pinned_block, self.p, self.loads, self.cfg.ml,
+            on_fallback=self._fallback,
+        )
+        new = labels[: bnodes.shape[0]]
+        self.block[bnodes] = new
+        np.add.at(self.loads, new, node_w_b.astype(np.float64))
+        self.cm.commit(bnodes, new, degs, nbr_c, w_c, self.block)
+        if self._on_peak is not None:
+            self._on_peak(model.graph.indices.nbytes + model.graph.edge_w.nbytes)
+        self.log["n_batches"] += 1
+        self.log["moved"] += int(np.count_nonzero(new != old))
+        self.adj.drop(bnodes)
+        if self._on_commit is not None:
+            self._on_commit()
+        return new
+
+    def commit_hub(self, v: int, node_w: float) -> int:
+        """Hub bypass (Alg. 1): immediate Fennel re-assignment keeps the
+        batch residency bound independent of hub degrees.  Returns the
+        block `v` landed in."""
+        one = self._one
+        one[0] = v
+        nbr_c, w_c, degs = self.adj.slice(one)
+        self.cm.stage(one, degs, nbr_c, w_c, self.block)
+        old_b = int(self.block[v])
+        self.loads[old_b] -= float(node_w)
+        self.block[v] = -1
+        i = fennel_choose(nbr_c, w_c, float(node_w), self.block, self.loads, self.p)
+        self.block[v] = i
+        self.loads[i] += float(node_w)
+        self.cm.commit(one, np.asarray([i], dtype=np.int64), degs, nbr_c, w_c, self.block)
+        self.log["n_hubs"] += 1
+        self.log["moved"] += int(i != old_b)
+        self.adj.drop(one)
+        return i
+
+
 def restream_refine(
     source: "CSRGraph | NodeStreamBase",
     block: np.ndarray,
@@ -330,51 +437,14 @@ def _restream_pass_impl(
         if resident > info.peak_resident_bytes:
             info.peak_resident_bytes = resident
 
-    def commit(bnodes: np.ndarray) -> None:
-        nbr_c, w_c, degs = adj.slice(bnodes)
-        node_w_b = adj.node_weights(bnodes)
-        old = block[bnodes].copy()
-        cm.stage(bnodes, degs, nbr_c, w_c, block)
-        # detach the batch: release loads, hide current labels from the model
-        np.add.at(loads, old, -node_w_b.astype(np.float64))
-        block[bnodes] = -1
-        model = build_batch_model_from_adj(
-            n, bnodes, degs, nbr_c, w_c, node_w_b, block, cfg.k
-        )
-        labels = multilevel_partition_resilient(
-            model.graph, model.pinned_block, p, loads, cfg.ml,
-            on_fallback=lambda: log.__setitem__(
-                "engine_fallbacks", log["engine_fallbacks"] + 1
-            ),
-        )
-        new = labels[: bnodes.shape[0]]
-        block[bnodes] = new
-        np.add.at(loads, new, node_w_b.astype(np.float64))
-        cm.commit(bnodes, new, degs, nbr_c, w_c, block)
-        note_peak(model.graph.indices.nbytes + model.graph.edge_w.nbytes)
-        log["n_batches"] += 1
+    def bump_total() -> None:
         total_batches[0] += 1
-        log["moved"] += int(np.count_nonzero(new != old))
-        adj.drop(bnodes)
 
-    one = np.empty(1, dtype=np.int64)
-
-    def commit_hub(v: int, node_w: float) -> None:
-        # hub bypass (Alg. 1): immediate Fennel re-assignment keeps the
-        # batch/buffer residency bound independent of hub degrees
-        one[0] = v
-        nbr_c, w_c, degs = adj.slice(one)
-        cm.stage(one, degs, nbr_c, w_c, block)
-        old_b = int(block[v])
-        loads[old_b] -= float(node_w)
-        block[v] = -1
-        i = fennel_choose(nbr_c, w_c, float(node_w), block, loads, p)
-        block[v] = i
-        loads[i] += float(node_w)
-        cm.commit(one, np.asarray([i], dtype=np.int64), degs, nbr_c, w_c, block)
-        log["n_hubs"] += 1
-        log["moved"] += int(i != old_b)
-        adj.drop(one)
+    micro = MicroRestreamer(
+        n, block, loads, cm, cfg, p, adj,
+        log=log, on_peak=note_peak, on_commit=bump_total,
+    )
+    commit, commit_hub = micro.commit, micro.commit_hub
 
     where = f" during restream pass {pass_idx + 1}"
     records = (stream.iter_from(dict(resume["pos"])) if resume is not None

@@ -6,30 +6,37 @@ through the Pallas sliding-window kernel), report tokens/s.
 
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b --tokens 32
 
-``--arch partition`` serves the placement workload instead: the graph
-source is partitioned once through `repro.api` (any registered driver, any
-source kind the API resolves) and the resulting placement table answers
-batched node->block lookups — the query shape the GNN training loop and
-the sharded embedding path issue.
+``--arch partition`` serves the placement workload through the resident
+serving subsystem (`repro.serve`): the graph source is partitioned once
+through `repro.api`, promoted into a `PartitionService`, and batched
+node->block lookups are answered by a `ServeSession` — the query shape the
+GNN training loop and the sharded embedding path issue.  The timed region
+contains only the lookups; checksum verification runs afterwards, against
+an independent gather of the result labels.
 
   PYTHONPATH=src python -m repro.launch.serve --arch partition \
       --graph gen:grid:side=64 --k 16 --driver buffcut
+
+The LM / DLRM model stacks (jax, `repro.configs`, both model modules) are
+imported lazily inside their serve functions, so partition mode never pays
+— or requires — the accelerator stack (the same motivation as
+`distributed/__init__`'s PEP 562 laziness).
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-
-from repro.configs import get_arch
-from repro.models import transformer as tfm
-from repro.models import dlrm as dlrm_mod
 
 
 def serve_lm(arch_id: str, batch: int, prompt_len: int, gen_tokens: int) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch
+    from repro.models import transformer as tfm
+
     spec = get_arch(arch_id)
     cfg = spec.smoke_config()
     params = tfm.init_params(jax.random.PRNGKey(0), cfg)
@@ -63,6 +70,11 @@ def serve_lm(arch_id: str, batch: int, prompt_len: int, gen_tokens: int) -> None
 
 
 def serve_dlrm(batch: int) -> None:
+    import jax
+
+    from repro.configs import get_arch
+    from repro.models import dlrm as dlrm_mod
+
     spec = get_arch("dlrm-mlperf")
     cfg = spec.smoke_config()
     params = dlrm_mod.dlrm_init(jax.random.PRNGKey(0), cfg)
@@ -77,19 +89,34 @@ def serve_dlrm(batch: int) -> None:
 
 
 def serve_partition(source: str, k: int, driver: str, batch: int, queries: int) -> None:
-    """Placement-as-a-service: one `repro.api.partition` call builds the
-    placement table; serving is batched node->block lookups against it."""
+    """Placement-as-a-service through `repro.serve`: one
+    `repro.api.partition` call builds the resident service; serving is
+    batched node->block lookups via a `ServeSession`.  Only the lookups are
+    timed — the checksum verification happens afterwards against an
+    independent gather (the old loop timed its own verification, so the
+    reported lookups/s was dominated by the per-batch ``int()`` checksum)."""
     from repro.api import partition
+    from repro.serve import ServeSession
 
     res = partition(source, k=k, driver=driver)
-    n = res.labels.shape[0]
+    service = res.into_service()
+    n = service.n
     rng = np.random.default_rng(0)
-    reqs = [rng.integers(0, n, batch) for _ in range(queries)]
-    t0 = time.perf_counter()
+    reqs = [rng.integers(0, n, batch).astype(np.int64) for _ in range(queries)]
+    with ServeSession(service) as sess:
+        t0 = time.perf_counter()
+        outs = [sess.lookup(q) for q in reqs]
+        dt = time.perf_counter() - t0
+    # verification — outside the timed region
     checksum = 0
-    for q in reqs:
-        checksum += int(res.labels[q].sum())
-    dt = time.perf_counter() - t0
+    for q, out in zip(reqs, outs):
+        expect = res.labels[q]
+        if not np.array_equal(out, expect):
+            raise RuntimeError(
+                "served labels diverged from the partition result "
+                f"(batch of {q.shape[0]} lookups)"
+            )
+        checksum += int(out.sum())
     total = batch * queries
     print(
         f"partition serve: driver={res.provenance['driver']} n={n} k={res.k} "

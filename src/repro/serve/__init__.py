@@ -1,0 +1,32 @@
+"""Partition-as-a-service: keep a partition alive under graph mutation.
+
+`PartitionService` is the resident core (labels + loads + exact
+incremental cut + hot-row cache + standing priority buffer), `ServeSession`
+the concurrent front door (bounded queue, worker thread, lookup
+coalescing), and `workload` the scripted delta-file / churn replay the CLI
+and benchmarks drive.  The ergonomic entry point is
+``repro.api.partition(...).into_service()``; see DESIGN.md §14.
+"""
+from repro.serve.service import (
+    DEFAULT_CACHE_BYTES,
+    HotAdjacencyCache,
+    PartitionService,
+)
+from repro.serve.session import ServeSession
+from repro.serve.workload import (
+    ChurnSpec,
+    churn_ops,
+    load_delta_file,
+    run_workload,
+)
+
+__all__ = [
+    "DEFAULT_CACHE_BYTES",
+    "HotAdjacencyCache",
+    "PartitionService",
+    "ServeSession",
+    "ChurnSpec",
+    "churn_ops",
+    "load_delta_file",
+    "run_workload",
+]

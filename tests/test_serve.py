@@ -1,0 +1,475 @@
+"""Serving subsystem (repro.serve) — delta semantics, exactness, lifecycle.
+
+The load-bearing invariant, pinned here at every level: the service's
+resident cut equals `edge_cut` recomputed on the mutated graph, after any
+interleaving of updates (insert/delete/duplicate/self-loop/node-add) and
+refine drains.  Plus: determinism (same delta stream twice → bit-identical
+labels), the bounded buffer/cache contracts, the session's lifecycle and
+coalescing behavior, the `into_service` capability gate, and the CLI
+`serve` path end to end.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs.csr import CSRGraph
+from repro.core import BuffCutConfig, IncrementalCut, edge_cut
+from repro.serve import (
+    ChurnSpec,
+    HotAdjacencyCache,
+    PartitionService,
+    ServeSession,
+    churn_ops,
+    load_delta_file,
+    run_workload,
+)
+
+
+def _random_graph(rng: np.random.Generator, n: int, m: int) -> CSRGraph:
+    edges = rng.integers(0, n, size=(m, 2))
+    w = rng.integers(1, 4, size=m).astype(np.float32)
+    return CSRGraph.from_edges(n, edges, w)
+
+
+def _service(g: CSRGraph, rng: np.random.Generator, k: int = 4,
+             **kw) -> PartitionService:
+    labels = rng.integers(0, k, size=g.n).astype(np.int64)
+    cfg = BuffCutConfig(k=k, buffer_size=64, batch_size=16)
+    return PartitionService(g, labels, cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# IncrementalCut.apply_edge_delta — property-pinned against edge_cut
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_apply_edge_delta_matches_recompute(seed):
+    """Random insert/delete/duplicate/self-loop sequences: the maintained
+    cut equals edge_cut on the graph rebuilt from the mutated edge set."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 48))
+    g = _random_graph(rng, n, int(rng.integers(n, 4 * n)))
+    block = rng.integers(0, 3, size=n).astype(np.int64)
+    cm = IncrementalCut(edge_cut(g, block))
+    mirror: dict = {}
+    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(g.indptr))
+    for u, v, w in zip(src.tolist(), g.indices.tolist(),
+                       g.edge_w.astype(np.float64).tolist()):
+        if u < v:
+            mirror[(u, v)] = w
+    for _ in range(60):
+        op = rng.random()
+        if op < 0.15:  # self-loop insert: never cut, never stored
+            u = int(rng.integers(n))
+            assert cm.apply_edge_delta(u, u, 5.0, block) == 0.0
+        elif op < 0.45 and mirror:  # delete an existing edge entirely
+            keys = sorted(mirror)
+            e = keys[int(rng.integers(len(keys)))]
+            cm.apply_edge_delta(e[0], e[1], -mirror.pop(e), block)
+        else:  # insert — fresh pair or duplicate (weight accumulates)
+            u, v = int(rng.integers(n)), int(rng.integers(n))
+            if u == v:
+                continue
+            e = (min(u, v), max(u, v))
+            w = float(rng.integers(1, 4))
+            cm.apply_edge_delta(u, v, w, block)
+            mirror[e] = mirror.get(e, 0.0) + w
+    if mirror:
+        edges = np.asarray(sorted(mirror), dtype=np.int64)
+        weights = np.asarray([mirror[tuple(e)] for e in edges.tolist()],
+                             dtype=np.float32)
+    else:
+        edges = np.empty((0, 2), dtype=np.int64)
+        weights = np.empty(0, dtype=np.float32)
+    g2 = CSRGraph.from_edges(n, edges, weights)
+    assert cm.cut_weight == edge_cut(g2, block)
+
+
+def test_apply_edge_delta_refused_mid_bracket():
+    g = CSRGraph.from_edges(4, np.array([[0, 1], [1, 2], [2, 3]]))
+    block = np.array([0, 0, 1, 1], dtype=np.int64)
+    cm = IncrementalCut(edge_cut(g, block))
+    bnodes = np.array([1], dtype=np.int64)
+    nbr = g.neighbors(1).astype(np.int64)
+    w = g.neighbor_weights(1).astype(np.float64)
+    degs = np.array([nbr.shape[0]], dtype=np.int64)
+    cm.stage(bnodes, degs, nbr, w, block)
+    with pytest.raises(RuntimeError, match="batch boundaries"):
+        cm.apply_edge_delta(0, 3, 1.0, block)
+    cm.commit(bnodes, block[bnodes], degs, nbr, w, block)
+    # at a batch boundary the delta is accepted again
+    assert cm.apply_edge_delta(0, 3, 1.0, block) == 1.0
+
+
+def test_apply_edge_delta_unassigned_endpoint():
+    """-1 endpoints count as cut only against assigned nodes, exactly
+    edge_cut's `block[src] != block[dst]`."""
+    block = np.array([0, -1, -1], dtype=np.int64)
+    cm = IncrementalCut(0.0)
+    assert cm.apply_edge_delta(0, 1, 2.0, block) == 2.0  # assigned vs -1
+    g = CSRGraph.from_edges(3, np.array([[0, 1]]),
+                            np.array([2.0], dtype=np.float32))
+    assert cm.cut_weight == edge_cut(g, block)
+
+
+# ---------------------------------------------------------------------------
+# PartitionService — exactness, determinism, delta semantics
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_service_exact_under_update_refine_interleaving(seed):
+    """Graph deltas interleaved with stage/commit reassignment brackets
+    (refine) keep the resident cut exactly equal to a recompute at every
+    quiescent checkpoint."""
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng, 64, 160)
+    svc = _service(g, rng)
+    spec = ChurnSpec(updates=10, ops=8, frac_del=0.3, node_adds=2,
+                     lookup_every=0, refine_every=3, seed=seed)
+    for kind, payload in churn_ops(g, spec):
+        if kind == "update":
+            svc.update(**payload)
+        elif kind == "refine":
+            svc.refine(payload)
+        assert svc.cut_weight == edge_cut(svc.export_graph(), svc.labels)
+    gg = svc.export_graph()
+    assert gg.m == svc.m
+    # loads track the mutated node set exactly
+    loads = np.zeros(svc.k, dtype=np.float64)
+    np.add.at(loads, svc.labels, gg.node_w.astype(np.float64))
+    np.testing.assert_allclose(loads, svc.block_loads, rtol=0, atol=1e-9)
+
+
+def test_service_determinism_same_stream_twice(small_grid):
+    rng = np.random.default_rng(5)
+    labels = rng.integers(0, 4, size=small_grid.n).astype(np.int64)
+    cfg = BuffCutConfig(k=4, buffer_size=128, batch_size=32)
+    spec = ChurnSpec(updates=16, ops=12, frac_del=0.25, node_adds=4,
+                     refine_every=4, seed=11)
+    outs = []
+    for _ in range(2):
+        svc = PartitionService(small_grid, labels, cfg)
+        run_workload(svc, churn_ops(small_grid, spec))
+        svc.refine()
+        outs.append(svc.labels)
+    assert np.array_equal(outs[0], outs[1])
+
+
+def test_duplicate_insert_accumulates_weight():
+    g = CSRGraph.from_edges(4, np.array([[0, 1], [2, 3]]))
+    svc = PartitionService(g, np.array([0, 1, 0, 1]), BuffCutConfig(k=2))
+    m0, cut0 = svc.m, svc.cut_weight
+    s1 = svc.update(insert_edges=[(0, 1, 2.0)])
+    s2 = svc.update(insert_edges=[(1, 0, 3.0)])
+    assert s1["duplicate_merges"] == 1 and s2["duplicate_merges"] == 1
+    assert svc.m == m0  # still one undirected edge
+    # 0 and 1 sit in different blocks: each insertion adds its own weight
+    assert svc.cut_weight == cut0 + 5.0
+    gg = svc.export_graph()
+    assert svc.cut_weight == edge_cut(gg, svc.labels)
+    nbrs = gg.neighbors(0)
+    assert gg.neighbor_weights(0)[nbrs == 1][0] == 6.0  # 1 + 2 + 3
+
+
+def test_self_loop_insert_ignored_but_counted():
+    g = CSRGraph.from_edges(3, np.array([[0, 1], [1, 2]]))
+    svc = PartitionService(g, np.array([0, 1, 0]), BuffCutConfig(k=2))
+    m0, cut0 = svc.m, svc.cut_weight
+    s = svc.update(insert_edges=[(1, 1, 9.0)])
+    assert s["self_loops_ignored"] == 1
+    assert svc.m == m0 and svc.cut_weight == cut0
+    assert svc.cut_weight == edge_cut(svc.export_graph(), svc.labels)
+
+
+def test_node_adds_assigned_and_attached():
+    g = CSRGraph.from_edges(4, np.array([[0, 1], [2, 3]]))
+    svc = PartitionService(g, np.array([0, 0, 1, 1]), BuffCutConfig(k=2))
+    s = svc.update(add_nodes=2, insert_edges=[(4, 0), (5, 4)])
+    assert s["nodes_added"] == [4, 5]
+    assert svc.n == 6
+    lbl = svc.lookup([4, 5])
+    assert ((0 <= lbl) & (lbl < 2)).all()
+    assert svc.cut_weight == edge_cut(svc.export_graph(), svc.labels)
+
+
+def test_update_error_semantics():
+    g = CSRGraph.from_edges(4, np.array([[0, 1], [2, 3]]))
+    svc = PartitionService(g, np.array([0, 0, 1, 1]), BuffCutConfig(k=2))
+    with pytest.raises(ValueError, match="no such edge"):
+        svc.update(delete_edges=[(0, 2)])
+    with pytest.raises(ValueError, match="self-loop"):
+        svc.update(delete_edges=[(1, 1)])
+    with pytest.raises(ValueError, match="add nodes first"):
+        svc.update(insert_edges=[(0, 7)])
+    with pytest.raises(ValueError, match="must be > 0"):
+        svc.update(insert_edges=[(0, 2, -1.0)])
+    with pytest.raises(ValueError, match=r"nodes \[0, 4\)"):
+        svc.lookup([4])
+    # errors left the state consistent
+    assert svc.cut_weight == edge_cut(svc.export_graph(), svc.labels)
+
+
+def test_buffer_bounded_and_refine_budget():
+    rng = np.random.default_rng(2)
+    g = _random_graph(rng, 64, 200)
+    svc = _service(g, rng, buffer_cap=8)
+    spec = ChurnSpec(updates=6, ops=10, frac_del=0.2, lookup_every=0,
+                     refine_every=0, seed=4)
+    for kind, payload in churn_ops(g, spec):
+        if kind == "update":
+            svc.update(**payload)
+    assert 0 < svc.buffered <= 8
+    before = svc.buffered
+    out = svc.refine(budget=3)
+    assert out["redecided"] == 3 and svc.buffered == before - 3
+    out = svc.refine()
+    assert svc.buffered == 0
+    assert svc.cut_weight == edge_cut(svc.export_graph(), svc.labels)
+
+
+def test_hot_cache_lru_bounded():
+    cache = HotAdjacencyCache(budget_bytes=600)
+    for v in range(20):
+        cache.put(v, np.arange(8, dtype=np.int64),
+                  np.ones(8, dtype=np.float64), 1.0)
+    assert cache.resident_bytes <= 600
+    assert len(cache) < 20
+    assert cache.get(19) is not None  # most recent row survives
+    cache.invalidate(19)
+    assert cache.get(19) is None
+
+
+def test_service_stats_shape(small_grid):
+    rng = np.random.default_rng(1)
+    svc = _service(small_grid, rng)
+    svc.update(insert_edges=[(0, 5)])
+    svc.refine()
+    st_ = svc.stats()
+    for key in ("n", "m", "k", "cut_weight", "balance", "buffered",
+                "overlay_rows", "cache_resident_bytes", "counters"):
+        assert key in st_
+    assert st_["counters"]["updates"] == 1
+    assert st_["counters"]["refines"] == 1
+
+
+# ---------------------------------------------------------------------------
+# ServeSession — lifecycle, coalescing, error routing
+# ---------------------------------------------------------------------------
+
+
+def test_session_matches_direct_service(small_grid):
+    rng = np.random.default_rng(9)
+    labels = rng.integers(0, 4, size=small_grid.n).astype(np.int64)
+    cfg = BuffCutConfig(k=4, buffer_size=64, batch_size=16)
+    spec = ChurnSpec(updates=8, ops=8, refine_every=4, seed=2)
+    direct = PartitionService(small_grid, labels, cfg)
+    run_workload(direct, churn_ops(small_grid, spec))
+    svc = PartitionService(small_grid, labels, cfg)
+    with ServeSession(svc) as sess:
+        run_workload(sess, churn_ops(small_grid, spec))
+    assert np.array_equal(direct.labels, svc.labels)
+    assert direct.cut_weight == svc.cut_weight
+
+
+def test_session_coalesces_queued_lookups(small_grid):
+    rng = np.random.default_rng(3)
+    svc = _service(small_grid, rng)
+    gate = threading.Event()
+    orig_update = svc.update
+
+    def slow_update(**kw):
+        gate.wait(timeout=5.0)
+        return orig_update(**kw)
+
+    svc.update = slow_update
+    with ServeSession(svc) as sess:
+        blocker = sess.submit_update(insert_edges=[(0, 9)])
+        futs = [sess.submit_lookup([i, i + 1]) for i in range(5)]
+        gate.set()
+        blocker.result(timeout=5.0)
+        for i, f in enumerate(futs):
+            out = f.result(timeout=5.0)
+            assert np.array_equal(out, svc.lookup([i, i + 1]))
+        assert sess.stats["coalesced_lookups"] == 4
+        assert sess.stats["lookups"] == 5
+
+
+def test_session_coalesced_error_lands_on_offender(small_grid):
+    rng = np.random.default_rng(3)
+    svc = _service(small_grid, rng)
+    gate = threading.Event()
+    orig_update = svc.update
+    svc.update = lambda **kw: (gate.wait(timeout=5.0), orig_update(**kw))[1]
+    with ServeSession(svc) as sess:
+        blocker = sess.submit_update(insert_edges=[(0, 9)])
+        good = sess.submit_lookup([0, 1])
+        bad = sess.submit_lookup([10**7])  # out of range
+        good2 = sess.submit_lookup([2])
+        gate.set()
+        blocker.result(timeout=5.0)
+        assert good.result(timeout=5.0).shape == (2,)
+        with pytest.raises(ValueError, match="lookup references node"):
+            bad.result(timeout=5.0)
+        assert good2.result(timeout=5.0).shape == (1,)
+        # the worker survived the per-request failure
+        assert sess.lookup([3]).shape == (1,)
+
+
+def test_session_request_error_keeps_serving(small_grid):
+    rng = np.random.default_rng(4)
+    svc = _service(small_grid, rng)
+    with ServeSession(svc) as sess:
+        with pytest.raises(ValueError, match="no such edge"):
+            sess.update(delete_edges=[(0, 3)])
+        assert sess.lookup([0]).shape == (1,)
+
+
+def test_session_close_idempotent_then_refuses(small_grid):
+    rng = np.random.default_rng(6)
+    svc = _service(small_grid, rng)
+    sess = ServeSession(svc)
+    assert sess.lookup([1]).shape == (1,)
+    sess.close()
+    sess.close()  # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.lookup([1])
+
+
+# ---------------------------------------------------------------------------
+# into_service + capability gate
+# ---------------------------------------------------------------------------
+
+
+def test_into_service_roundtrip_and_exactness(small_grid):
+    from repro.api import partition
+
+    res = partition(small_grid, driver="buffcut", k=4,
+                    buffer_size=128, batch_size=32)
+    svc = res.into_service(buffer_cap=32)
+    assert svc.buffer_cap == 32
+    assert svc.cut_weight == res.cut_weight
+    assert svc.cut_weight == edge_cut(small_grid, res.labels)
+    svc.update(insert_edges=[(0, small_grid.n - 1)])
+    svc.refine()
+    assert svc.cut_weight == edge_cut(svc.export_graph(), svc.labels)
+
+
+def test_into_service_capability_gate(small_grid):
+    from repro.api import partition
+
+    res = partition(small_grid, driver="fennel", k=4)
+    with pytest.raises(ValueError, match="dynamic-capable drivers"):
+        res.into_service()
+
+
+def test_into_service_reresolves_from_provenance():
+    from repro.api import PartitionResult, partition
+
+    res = partition("gen:grid:side=12", driver="buffcut", k=4)
+    # a deserialized result has no graph handle; the provenance origin
+    # (the gen: spec) re-resolves it
+    res2 = PartitionResult.from_json(res.to_json())
+    assert res2.graph is None
+    svc = res2.into_service()
+    assert svc.n == 144
+    assert svc.cut_weight == edge_cut(svc.export_graph(), svc.labels)
+
+
+def test_registry_capability_flags():
+    from repro.api import get_partitioner
+
+    caps = get_partitioner("buffcut").capabilities()
+    assert caps == {"disk_stream": True, "checkpoint": True, "shard": True,
+                    "dynamic": True}
+    assert get_partitioner("fennel").capabilities()["dynamic"] is False
+    assert "supports_dynamic=True" in repr(get_partitioner("buffcut"))
+
+
+# ---------------------------------------------------------------------------
+# workloads: churn spec parsing, delta files, CLI
+# ---------------------------------------------------------------------------
+
+
+def test_churn_spec_parse():
+    spec = ChurnSpec.parse("gen:churn:updates=9,ops=3,frac_del=0.5,seed=7")
+    assert (spec.updates, spec.ops, spec.frac_del, spec.seed) == (9, 3, 0.5, 7)
+    assert ChurnSpec.parse("churn:").updates == ChurnSpec().updates
+    with pytest.raises(ValueError, match="unknown churn spec field"):
+        ChurnSpec.parse("churn:bogus=1")
+    with pytest.raises(ValueError, match="key=value"):
+        ChurnSpec.parse("churn:updates")
+
+
+def test_delta_file_parse_and_grouping(tmp_path):
+    p = tmp_path / "deltas.txt"
+    p.write_text(
+        "# comment\n"
+        "add 0 5\n"
+        "+ 1 6 2.0\n"
+        "node\n"
+        "del 0 1\n"
+        "lookup 0 1 2\n"
+        "- 2 3\n"
+        "refine 4\n"
+        "? 5\n"
+        "!\n"
+    )
+    ops = load_delta_file(str(p))
+    kinds = [k for k, _ in ops]
+    assert kinds == ["update", "lookup", "update", "refine", "lookup", "refine"]
+    first = ops[0][1]
+    assert first["insert_edges"] == [(0, 5, 1.0), (1, 6, 2.0)]
+    assert first["add_nodes"] == [1.0]
+    assert first["delete_edges"] == [(0, 1)]
+    assert ops[3][1] == 4 and ops[5][1] is None
+
+
+def test_delta_file_parse_error_has_line_number(tmp_path):
+    p = tmp_path / "bad.txt"
+    p.write_text("add 0 1\nwat 3\n")
+    with pytest.raises(ValueError, match=r"bad\.txt:2.*unknown op"):
+        load_delta_file(str(p))
+
+
+def test_cli_serve_churn(tmp_path):
+    import json
+
+    from repro.api.cli import main
+
+    out = tmp_path / "serve.json"
+    rc = main(["serve", "gen:grid:side=16", "-k", "4",
+               "--workload", "gen:churn:updates=8,ops=6,node_adds=2,"
+               "refine_every=4,seed=1",
+               "--json", str(out)])
+    assert rc == 0
+    report = json.loads(out.read_text())
+    assert report["exact"]["match"] is True
+    assert report["workload"]["update"]["count"] == 8
+    assert report["workload"]["lookup"]["p99_ms"] >= 0.0
+    assert report["provenance"]["driver"] == "buffcut"
+    assert report["session"]["requests"] == report["provenance"]["ops"]
+
+
+def test_cli_serve_delta_file(tmp_path):
+    from repro.api.cli import main
+
+    p = tmp_path / "d.txt"
+    p.write_text("add 0 37\nadd 1 38\ndel 0 1\nlookup 0 1 2 3\nrefine\n")
+    rc = main(["serve", "gen:grid:side=8", "-k", "2",
+               "--delta-file", str(p), "--json", str(tmp_path / "r.json")])
+    assert rc == 0
+
+
+def test_cli_serve_rejects_incapable_driver():
+    from repro.api.cli import main
+
+    rc = main(["serve", "gen:grid:side=8", "-k", "2", "--driver", "ldg"])
+    assert rc == 1
