@@ -1,0 +1,98 @@
+"""Invariant-linter throughput bench (ISSUE 10).
+
+The analyze CI job and the pre-commit habit only stick if a whole-repo
+run stays interactive, so this bench times `repro.analysis` end to end —
+parse + all eight rules over every file in the repro package — best-of-N
+wall clock, and derives files/s and ms/file.  It also records the
+violation split (new / baselined / noqa-suppressed) so the artifact
+trajectory shows suppression debt growing before anyone notices in
+review.
+
+Results land in the ``analysis`` section of BENCH_hotpath.json (merged,
+not overwritten).  ``--gate`` enforces the interactivity bound and that
+the tree is clean (0 new violations) — the same contract the CI analyze
+job enforces, kept here so bench artifacts are self-consistent.
+
+Usage:  python benchmarks/bench_analysis.py [--smoke] [--gate] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis import analyze_paths, load_baseline  # noqa: E402
+from repro.analysis.cli import DEFAULT_BASELINE  # noqa: E402
+
+# the CLI's default scan target: the repro package itself
+SCAN_PATHS = [os.path.join(os.path.dirname(__file__), "..", "src", "repro")]
+
+# Whole-repo wall-clock ceiling.  Local runs sit ~1.1 s for ~90 files;
+# 10 s absorbs shared-runner slowdown while still failing a linter that
+# drifted out of interactive range (the first expr_text implementation
+# was 8x slower and would trip this).
+GATE_MAX_S = 10.0
+REPS = 3
+
+
+def run(smoke: bool = False) -> dict:
+    baseline = load_baseline(DEFAULT_BASELINE)
+    reps = 1 if smoke else REPS
+    best = float("inf")
+    report = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        report = analyze_paths(SCAN_PATHS, baseline=baseline)
+        best = min(best, time.perf_counter() - t0)
+    n_files = report.files
+    return {
+        "files": n_files,
+        "rules": 8,
+        "wall_s": best,
+        "ms_per_file": 1e3 * best / max(n_files, 1),
+        "files_per_s": n_files / best if best else 0.0,
+        "new": len(report.new),
+        "baselined": len(report.baselined),
+        "noqa_suppressed": report.suppressed,
+        "stale_baseline": len(report.stale_baseline),
+        "clean": report.ok and not report.stale_baseline,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single rep; merge into BENCH_hotpath.json")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit nonzero unless the tree is clean and a "
+                         f"whole-repo run takes <= {GATE_MAX_S:.0f}s (CI)")
+    ap.add_argument("--out", default="BENCH_hotpath.json")
+    args = ap.parse_args()
+    r = run(smoke=args.smoke or args.gate)
+    print(json.dumps(r, indent=2))
+    report = {}
+    if os.path.exists(args.out):
+        report = json.loads(Path(args.out).read_text())
+    report["analysis"] = r
+    Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+    if args.gate:
+        if not r["clean"]:
+            print(f"ANALYSIS GATE FAILED: {r['new']} new violations, "
+                  f"{r['stale_baseline']} stale baseline entries", file=sys.stderr)
+            return 1
+        if r["wall_s"] > GATE_MAX_S:
+            print(f"ANALYSIS GATE FAILED: {r['wall_s']:.1f}s > {GATE_MAX_S:.0f}s "
+                  "whole-repo bound", file=sys.stderr)
+            return 1
+        print(f"analysis gate OK: {r['files']} files in {r['wall_s']*1e3:.0f} ms "
+              f"({r['ms_per_file']:.1f} ms/file), {r['noqa_suppressed']} justified noqa")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

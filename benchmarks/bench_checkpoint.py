@@ -69,8 +69,8 @@ def run(smoke: bool = True, reps: int = 3) -> dict:
         for every in sweep:
             cp = os.path.join(tmp, f"run-{every}.ckpt")
             t_ckpt, chk = _best_of(
-                lambda: partition(path, checkpoint_path=cp,
-                                  checkpoint_every=every, **kw),
+                lambda cp=cp, every=every: partition(
+                    path, checkpoint_path=cp, checkpoint_every=every, **kw),
                 reps,
             )
             # crash-resume: the last snapshot on disk is a mid-restream

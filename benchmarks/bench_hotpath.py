@@ -96,8 +96,8 @@ def bench_histogram(smoke: bool) -> dict:
         b = _new_inner_op(g, labels)
         assert np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
         np.testing.assert_allclose(a[2], b[2], rtol=1e-9)
-        t_seed = _best_of(lambda: _seed_inner_op(g, labels), reps)
-        t_new = _best_of(lambda: _new_inner_op(g, labels), reps)
+        t_seed = _best_of(lambda labels=labels: _seed_inner_op(g, labels), reps)
+        t_new = _best_of(lambda labels=labels: _new_inner_op(g, labels), reps)
         out["shapes"][name] = {
             "seed_ms": t_seed * 1e3,
             "new_ms": t_new * 1e3,
@@ -180,8 +180,9 @@ def bench_multilevel(smoke: bool) -> dict:
             for _ in range(8):
                 multilevel_partition(g, pinned, p, loads, cfg)
         labels[engine] = multilevel_partition(g, pinned, p, loads, cfg)
-        t = _best_of(lambda: multilevel_partition(g, pinned, p, loads, cfg),
-                     reps)
+        t = _best_of(
+            lambda cfg=cfg: multilevel_partition(g, pinned, p, loads, cfg),
+            reps)
         out["engines"][engine] = {"ms": t * 1e3}
     for engine in ("jax", "jax_autotune"):
         assert np.array_equal(labels["sparse"], labels[engine]), \

@@ -30,7 +30,8 @@ def run(verbose: bool = True) -> list[str]:
             best = None
             for m in METHODS:
                 cfg = default_cfg(g, k=k, collect_stats=True)
-                res = sweep_orders(lambda gr: run_method(m, gr, cfg), g)
+                res = sweep_orders(
+                    lambda gr, m=m, cfg=cfg: run_method(m, gr, cfg), g)
                 cuts[m][cell] = res["cut"] + 1e-9
                 rts[m][cell] = res["runtime_s"]
                 mems[m][cell] = res["mem_items"] + 1.0

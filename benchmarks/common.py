@@ -74,8 +74,9 @@ def run_method(name: str, g, cfg) -> dict:
     }
 
 
-def sweep_orders(fn, g, seeds=range(N_ORDERS)) -> dict:
+def sweep_orders(fn, g, seeds=None) -> dict:
     """Run fn(graph_with_random_order) per seed; geometric-mean numerics."""
+    seeds = range(N_ORDERS) if seeds is None else seeds
     rows = []
     for s in seeds:
         gr = apply_order(g, random_order(g, 100 + s))

@@ -57,7 +57,7 @@ def roofline_table(path: str = "roofline_results.jsonl") -> str:
         latest[(r["arch"], r["shape"], r.get("mesh", ""))] = r
     out = ["| arch | shape | t_comp ms | t_mem ms | t_coll ms | bottleneck | useful% | roofline frac |",
            "|---|---|---|---|---|---|---|---|"]
-    for (a, s, m), r in sorted(latest.items()):
+    for (a, s, _m), r in sorted(latest.items()):
         rf = r["roofline"]
         dom = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
         frac = rf["t_compute_s"] / dom if dom else 0.0
@@ -121,6 +121,12 @@ def hotpath_table(path: str = "BENCH_hotpath.json") -> str:
                    f"| exact@{sv['exact_checkpoints']} checkpoints="
                    f"{sv['exact_at_every_checkpoint']}, "
                    f"deterministic={sv['deterministic_replay']} |")
+    an = r.get("analysis")
+    if an:
+        out.append(f"| analysis | {an['files']} files / {an['rules']} rules in "
+                   f"{an['wall_s']*1e3:.0f} ms ({an['ms_per_file']:.1f} ms/file) "
+                   f"| <= 10 s whole-repo "
+                   f"| clean={an['clean']}, {an['noqa_suppressed']} justified noqa |")
     ck = r.get("checkpoint")
     if ck:
         out.append(f"| checkpoint | densest-cadence overhead "

@@ -1,0 +1,57 @@
+"""repro.analysis — the repo-specific invariant linter (DESIGN.md §15).
+
+BuffCut's headline guarantee is *bit-determinism*: the same stream twice
+yields bit-identical labels across drivers, shards, checkpoints and the
+serve subsystem.  The conventions that guarantee depends on — pinned f64
+summation order, join-on-every-exit-path thread lifecycle, lazy jax
+imports, tmp+fsync+`os.replace` durable writes, the `IncrementalCut`
+stage/commit bracket — were, before this subsystem, enforced only by code
+review.  This package machine-checks them: it walks the source tree with
+`ast` and applies ~8 codified rules (`repro.analysis.rules`), each named
+after the incident that motivated it.
+
+Entry points::
+
+    python -m repro.analysis                  # text report, exit 1 on new findings
+    python -m repro.analysis --format json    # machine-readable report (CI gate)
+    python -m repro analyze                   # the same checker as a CLI verb
+
+Suppression is two-tier:
+
+* per-line ``# repro: noqa RPR001`` (or bare ``# repro: noqa``) accepts a
+  specific occurrence forever — use for violations that are the *point* of
+  the line (e.g. the fault-injection opener wrapping raw ``open``);
+* the checked-in baseline (``ANALYSIS_BASELINE.txt``) accepts pre-existing
+  violations by content fingerprint so legacy debt never blocks CI while
+  any *new* violation fails loudly.  Every entry carries a justification.
+
+The package is stdlib-only (ast + argparse): importing it never pays numpy
+or the accelerator stack, so the CI gate runs in milliseconds.
+"""
+from repro.analysis.engine import (
+    AnalysisError,
+    AnalysisReport,
+    ModuleInfo,
+    Violation,
+    analyze_paths,
+    collect_modules,
+    load_baseline,
+    write_baseline,
+)
+from repro.analysis.rules import RULES, Rule, get_rule
+from repro.analysis.cli import main
+
+__all__ = [
+    "AnalysisError",
+    "AnalysisReport",
+    "ModuleInfo",
+    "Violation",
+    "analyze_paths",
+    "collect_modules",
+    "load_baseline",
+    "write_baseline",
+    "RULES",
+    "Rule",
+    "get_rule",
+    "main",
+]

@@ -333,6 +333,26 @@ def _cmd_list(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_analyze(args: argparse.Namespace) -> int:
+    # the analyzer is stdlib-only; its exit code is the verb's exit code
+    from repro.analysis.cli import run as analysis_run
+
+    return analysis_run(args)
+
+
+def _add_analyze_parser(sub) -> None:
+    from repro.analysis.cli import add_arguments
+
+    p = sub.add_parser(
+        "analyze",
+        help="run the repo invariant linter (docs/INVARIANTS.md)",
+        description="AST-based invariant linter: determinism, concurrency "
+        "and IO contracts (rules RPR001-RPR008).",
+    )
+    add_arguments(p)
+    p.set_defaults(cmd=_cmd_analyze)
+
+
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="python -m repro",
@@ -342,6 +362,7 @@ def build_parser() -> argparse.ArgumentParser:
     _add_partition_parser(sub)
     _add_serve_parser(sub)
     _add_gen_parser(sub)
+    _add_analyze_parser(sub)
     p_list = sub.add_parser("list", help="list registered partitioners")
     p_list.add_argument("-v", "--verbose", action="store_true")
     p_list.set_defaults(cmd=_cmd_list)

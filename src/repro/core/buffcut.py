@@ -158,6 +158,11 @@ class StreamStats:
     engine_fallbacks: int = 0         # batches degraded jax -> sparse engine
     checkpoints_written: int = 0      # crash-safe snapshots persisted
 
+    def note_engine_fallback(self) -> None:
+        """Bound as the drivers' `on_fallback` callback (a lambda cannot
+        hold the assignment)."""
+        self.engine_fallbacks += 1
+
     @property
     def mean_ier(self) -> float:
         return float(np.mean(self.ier_per_batch)) if self.ier_per_batch else 0.0
@@ -289,9 +294,7 @@ def _buffcut_partition(
         t_ml = time.perf_counter()
         labels = multilevel_partition_resilient(
             model.graph, model.pinned_block, p, loads, cfg.ml,
-            on_fallback=lambda: setattr(
-                stats, "engine_fallbacks", stats.engine_fallbacks + 1
-            ),
+            on_fallback=stats.note_engine_fallback,
         )
         stats.ml_time_s += time.perf_counter() - t_ml
         lab_b = labels[: bnodes.shape[0]]

@@ -53,7 +53,8 @@ def _cuttana_partition(
     g = require_csr(g, "cuttana")
     spec = get_score("cbs", d_max=float(cfg.d_max))
     p = FennelParams(
-        k=cfg.k, n_total=float(g.node_w.sum()), m_total=g.total_edge_weight(),
+        k=cfg.k, n_total=float(g.node_w.astype(np.float64).sum()),
+        m_total=g.total_edge_weight(),
         eps=cfg.eps, gamma=cfg.gamma,
     )
     st = _State(g, spec, cfg.k)
@@ -72,7 +73,7 @@ def _cuttana_partition(
         _bump_assigned(st, pq, v, was_buffered=False)
 
     stream = NodeStream(g)
-    for v, nbrs, nbr_w, node_w in stream:
+    for v, nbrs, _nbr_w, _node_w in stream:
         if nbrs.size > cfg.d_max:
             assign(v)
             stats.n_hubs += 1

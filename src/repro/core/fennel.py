@@ -88,7 +88,8 @@ def _fennel_partition(
 ) -> np.ndarray:
     """One-pass Fennel over the stream order (node id order)."""
     g = require_csr(g, "fennel")
-    p = FennelParams(k=k, n_total=float(g.node_w.sum()), m_total=g.total_edge_weight(), eps=eps, gamma=gamma)
+    p = FennelParams(k=k, n_total=float(g.node_w.astype(np.float64).sum()),
+                     m_total=g.total_edge_weight(), eps=eps, gamma=gamma)
     block = np.full(g.n, -1, dtype=np.int64)
     loads = np.zeros(k, dtype=np.float64)
     for v in range(g.n):
@@ -107,7 +108,7 @@ def ldg_partition(g: CSRGraph, k: int, eps: float = 0.03) -> np.ndarray:
 def _ldg_partition(g: CSRGraph, k: int, eps: float = 0.03) -> np.ndarray:
     """Linear Deterministic Greedy: argmax |N(v) ∩ V_i| * (1 - c(V_i)/cap)."""
     g = require_csr(g, "ldg")
-    cap = l_max(float(g.node_w.sum()), k, eps)
+    cap = l_max(float(g.node_w.astype(np.float64).sum()), k, eps)
     block = np.full(g.n, -1, dtype=np.int64)
     loads = np.zeros(k, dtype=np.float64)
     for v in range(g.n):

@@ -33,7 +33,7 @@ def _heistream_partition(
     g = require_csr(g, "heistream")
     p = FennelParams(
         k=cfg.k,
-        n_total=float(g.node_w.sum()),
+        n_total=float(g.node_w.astype(np.float64).sum()),
         m_total=g.total_edge_weight(),
         eps=cfg.eps,
         gamma=cfg.gamma,

@@ -12,7 +12,7 @@ def edge_cut(g: CSRGraph, block: np.ndarray) -> float:
     src = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr))
     dst = g.indices.astype(np.int64)
     cut = (block[src] != block[dst]) & (src < dst)
-    return float(g.edge_w[cut].sum())
+    return float(g.edge_w[cut].astype(np.float64).sum())
 
 
 def cut_ratio(g: CSRGraph, block: np.ndarray) -> float:
@@ -72,13 +72,14 @@ def streaming_cut_increment(
         # hub fast path: no self loops, so no batch-mate edges — O(deg),
         # not O(n) (hubs fire this once per high-degree stream node)
         cross = (nbr_lab >= 0) & (nbr_lab != labels[0])
-        return float(np.sum(w[cross]))
+        return float(np.sum(w[cross]))  # repro: noqa RPR003 -- w cast to f64 above
     in_batch = np.zeros(block.shape[0], dtype=bool)
     in_batch[bnodes] = True
     src_lab = np.repeat(labels, degs)
     cross = (nbr_lab >= 0) & (nbr_lab != src_lab)
     mates = in_batch[nbr]
-    return float(np.sum(w[cross & ~mates]) + 0.5 * np.sum(w[cross & mates]))
+    return float(  # repro: noqa RPR003 -- w cast to f64 above
+        np.sum(w[cross & ~mates]) + 0.5 * np.sum(w[cross & mates]))
 
 
 class IncrementalCut:
@@ -192,8 +193,8 @@ def internal_edge_ratio_adj(
     in_b = np.zeros(n, dtype=bool)
     in_b[bnodes] = True
     w = np.asarray(w, dtype=np.float64)
-    den = float(np.sum(w))
-    num = float(np.sum(w[in_b[nbr]]))
+    den = float(np.sum(w))  # repro: noqa RPR003 -- w cast to f64 above
+    num = float(np.sum(w[in_b[nbr]]))  # repro: noqa RPR003 -- w cast to f64 above
     return num / den if den > 0 else 0.0
 
 
@@ -204,8 +205,8 @@ def internal_edge_ratio(g: CSRGraph, batch: np.ndarray) -> float:
     src = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr))
     dst = g.indices.astype(np.int64)
     internal = in_b[src] & in_b[dst]
-    num = float(g.edge_w[internal].sum())  # counts both directions = 2*w(E(B))
+    num = float(g.edge_w[internal].astype(np.float64).sum())  # both directions = 2*w(E(B))
     den = 0.0
     for v in batch:
-        den += float(g.neighbor_weights(int(v)).sum())
+        den += float(g.neighbor_weights(int(v)).astype(np.float64).sum())
     return num / den if den > 0 else 0.0

@@ -18,7 +18,6 @@ import numpy as np
 
 from repro.graphs.csr import CSRGraph
 from repro.core.fennel import FennelParams, fennel_penalty
-from repro.kernels.fennel_gain import fennel_gain_sequential
 from repro.core.histogram import (
     aggregate_by_key,
     best_label_per_src,
@@ -258,6 +257,10 @@ def initial_fennel(
     per-step numpy gather by ~5x and is pinned bit-identical to the
     vectorized loop it replaced.
     """
+    # deferred: fennel_gain.py is jax-resident (the Pallas kernel lives
+    # there); the sequential engine itself is a scalar host loop
+    from repro.kernels.fennel_gain import fennel_gain_sequential
+
     labels = pinned.copy()
     free = np.nonzero(pinned < 0)[0]
     order = free[np.lexsort((free, -g.node_w[free]))]
@@ -357,7 +360,7 @@ def multilevel_partition(
 
         return multilevel_partition_jax(g, pinned, p, loads_base, cfg)
     rng = np.random.default_rng(cfg.seed)
-    total_free_w = float(g.node_w[pinned < 0].sum())
+    total_free_w = float(g.node_w[pinned < 0].astype(np.float64).sum())
     max_cluster_w = max(total_free_w / max(2 * p.k, 16), float(g.node_w.max(initial=1.0)))
 
     # ---- coarsen

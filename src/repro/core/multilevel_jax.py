@@ -40,10 +40,10 @@ from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
+import jax  # repro: noqa RPR001 -- whole-module jax engine; imported lazily by core/multilevel.py
+import jax.numpy as jnp  # repro: noqa RPR001 -- jax engine module
 import numpy as np
-from jax.experimental import enable_x64
+from jax.experimental import enable_x64  # repro: noqa RPR001 -- jax engine module
 
 from repro.core.fennel import FennelParams
 from repro.core.multilevel import _ELL_VOLUME_CAP as ELL_VOLUME_CAP
@@ -642,7 +642,7 @@ def multilevel_partition_jax(
 
         free_total = pinned < 0
         n_free = int(free_total.sum())
-        total_free_w = float(g.node_w[free_total].sum())
+        total_free_w = float(g.node_w[free_total].astype(np.float64).sum())
         max_cluster_w = max(total_free_w / max(2 * p.k, 16),
                             float(g.node_w.max(initial=1.0)))
 

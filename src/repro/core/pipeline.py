@@ -265,9 +265,7 @@ def _buffcut_partition_pipelined(
                         )
                         labels = multilevel_partition_resilient(
                             model.graph, model.pinned_block, p, loads, cfg.ml,
-                            on_fallback=lambda: setattr(
-                                stats, "engine_fallbacks", stats.engine_fallbacks + 1
-                            ),
+                            on_fallback=stats.note_engine_fallback,
                         )
                         lab_b = labels[: bnodes.shape[0]]
                         block[bnodes] = lab_b

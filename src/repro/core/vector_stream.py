@@ -23,10 +23,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
-from functools import partial
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
@@ -50,32 +47,71 @@ from repro.core.checkpoint import (
 )
 
 
-@partial(jax.jit, static_argnames=("kind",))
+_score_kernel_jit = None
+
+
+def _build_score_kernel():
+    """Jit the device scoring kernel on first use.
+
+    The host driver below never touches jax; importing this module (and
+    thus `repro.core`) must not pay the accelerator stack, so the jit
+    happens lazily here rather than at module top level (RPR001).
+    """
+    global _score_kernel_jit
+    if _score_kernel_jit is None:
+        from functools import partial
+
+        import jax
+        import jax.numpy as jnp
+
+        @partial(jax.jit, static_argnames=("kind",))
+        def kernel(
+            assigned_w,
+            deg_w,
+            buffered_w,
+            *,
+            kind: str = "haa",
+            d_max: float = 10000.0,
+            beta: float = 2.0,
+            theta: float = 0.75,
+            eta: float = 0.5,
+        ):
+            d_safe = jnp.maximum(deg_w, 1.0)
+            anr = assigned_w / d_safe
+            if kind == "anr":
+                return anr
+            if kind == "cbs":
+                return deg_w / d_max + theta * anr
+            if kind == "haa":
+                dn = deg_w / d_max
+                return dn**beta + theta * (1.0 - dn) * anr
+            if kind == "nss":
+                return (assigned_w + eta * buffered_w) / d_safe
+            raise ValueError(
+                f"vectorized driver supports anr/cbs/haa/nss, got {kind}"
+            )
+
+        _score_kernel_jit = kernel
+    return _score_kernel_jit
+
+
 def score_kernel(
-    assigned_w: jnp.ndarray,
-    deg_w: jnp.ndarray,
-    buffered_w: jnp.ndarray,
+    assigned_w,
+    deg_w,
+    buffered_w,
     *,
     kind: str = "haa",
     d_max: float = 10000.0,
     beta: float = 2.0,
     theta: float = 0.75,
     eta: float = 0.5,
-) -> jnp.ndarray:
+):
     """Dense buffer scores for every node (jit; runs on TPU for the on-device
     pipeline; numerically identical to core.scores.ScoreSpec.__call__)."""
-    d_safe = jnp.maximum(deg_w, 1.0)
-    anr = assigned_w / d_safe
-    if kind == "anr":
-        return anr
-    if kind == "cbs":
-        return deg_w / d_max + theta * anr
-    if kind == "haa":
-        dn = deg_w / d_max
-        return dn**beta + theta * (1.0 - dn) * anr
-    if kind == "nss":
-        return (assigned_w + eta * buffered_w) / d_safe
-    raise ValueError(f"vectorized driver supports anr/cbs/haa/nss, got {kind}")
+    return _build_score_kernel()(
+        assigned_w, deg_w, buffered_w,
+        kind=kind, d_max=d_max, beta=beta, theta=theta, eta=eta,
+    )
 
 
 @dataclasses.dataclass
@@ -225,9 +261,7 @@ def _buffcut_partition_vectorized(
         t_ml = time.perf_counter()
         labels = multilevel_partition_resilient(
             model.graph, model.pinned_block, p, loads, cfg.ml,
-            on_fallback=lambda: setattr(
-                stats, "engine_fallbacks", stats.engine_fallbacks + 1
-            ),
+            on_fallback=stats.note_engine_fallback,
         )
         stats.ml_time_s += time.perf_counter() - t_ml
         lab_b = labels[: bnodes.shape[0]]

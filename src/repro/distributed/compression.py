@@ -15,8 +15,8 @@ Two schemes, composable with the train loop's gradient hook:
 from __future__ import annotations
 
 
-import jax
-import jax.numpy as jnp
+import jax  # repro: noqa RPR001 -- jax-resident module behind PEP-562-lazy distributed/__init__
+import jax.numpy as jnp  # repro: noqa RPR001 -- jax-resident module
 
 
 def topk_compress(g: jnp.ndarray, ratio: float):

@@ -12,8 +12,8 @@ per output tile).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import jax  # repro: noqa RPR001 -- jax-resident module behind PEP-562-lazy distributed/__init__
+import jax.numpy as jnp  # repro: noqa RPR001 -- jax-resident module
 
 
 def collective_matmul_allgather(x_local, w, axis_name: str):

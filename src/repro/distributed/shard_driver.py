@@ -579,7 +579,8 @@ def _child_main(conn, w, factory, cfg, every, prefetch, starts, workers,
     except BaseException:
         try:
             conn.send(("err", traceback.format_exc()))
-        except Exception:
+        except (OSError, ValueError):
+            # parent gone / pipe closed: nothing left to report the error to
             pass
     finally:
         conn.close()

@@ -14,8 +14,8 @@ from __future__ import annotations
 import dataclasses
 import re
 
-import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+import jax  # repro: noqa RPR001 -- jax-resident module behind PEP-562-lazy distributed/__init__
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # repro: noqa RPR001 -- jax-resident module
 
 
 @dataclasses.dataclass(frozen=True)

@@ -75,7 +75,7 @@ class CSRGraph:
         return np.arange(total, dtype=np.int64) - seg_start + np.repeat(self.indptr[nodes], degs)
 
     def total_edge_weight(self) -> float:
-        return float(self.edge_w.sum() / 2.0)
+        return float(self.edge_w.astype(np.float64).sum() / 2.0)
 
     def validate(self) -> None:
         n = self.n

@@ -30,7 +30,7 @@ def rmat_graph(
     src = np.zeros(n_edges, dtype=np.int64)
     dst = np.zeros(n_edges, dtype=np.int64)
     probs = np.array([a, b, c, 1.0 - a - b - c])
-    for level in range(scale):
+    for _level in range(scale):
         quad = rng.choice(4, size=n_edges, p=probs)
         src = (src << 1) | (quad >> 1)
         dst = (dst << 1) | (quad & 1)

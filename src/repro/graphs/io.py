@@ -13,6 +13,8 @@ data, out-of-range neighbors, m mismatch) raise `StreamFormatError`.
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
@@ -34,7 +36,10 @@ def write_metis(g: CSRGraph, path: str) -> None:
     has_ew = not np.all(g.edge_w == 1.0)
     has_nw = not np.all(g.node_w == 1.0)
     fmt = f"{int(has_nw)}{int(has_ew)}"
-    with open(path, "w") as f:
+    # tmp + fsync + replace (RPR005): a crash mid-write must not leave a
+    # torn graph file under the final name
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
         header = f"{g.n} {g.m}"
         if fmt != "00":
             header += f" {fmt}"
@@ -50,6 +55,9 @@ def write_metis(g: CSRGraph, path: str) -> None:
                 if has_ew:
                     parts.append(_fmt_weight(w))
             f.write(" ".join(parts) + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 def read_metis(path: str) -> CSRGraph:

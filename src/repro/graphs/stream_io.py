@@ -407,7 +407,11 @@ class PackedWriter:
         self.version = int(version)
         self.section_records = max(1, int(section_records))
         self.section_bytes = max(1, int(section_bytes))
-        self._f = open(path, "wb")
+        # durable-write discipline (RPR005): build the file under a .tmp
+        # sibling; close() fsyncs and os.replace()s it onto the final name,
+        # so a crash mid-pack leaves the previous complete file (or nothing)
+        self._tmp_path = f"{path}.tmp"
+        self._f = open(self._tmp_path, "wb")
         self._f.write(_HEADER.pack(MAGIC, self.version, 0, 0, 0, 0.0, 0.0))  # placeholder
         self._deg_w = np.zeros(self.n, dtype=np.float64)
         self._node_w = np.ones(self.n, dtype=np.float32)
@@ -452,14 +456,19 @@ class PackedWriter:
         self._directed += int(nbrs.shape[0])
         self._written += 1
 
+    def _abort(self) -> None:
+        self._f.close()
+        if os.path.exists(self._tmp_path):
+            os.remove(self._tmp_path)
+
     def close(self) -> None:
         if self._written != self.n:
-            self._f.close()
+            self._abort()
             raise StreamFormatError(
                 f"{self.path}: wrote {self._written} of {self.n} records"
             )
         if self._directed != 2 * self.m:
-            self._f.close()
+            self._abort()
             raise StreamFormatError(
                 f"{self.path}: m={self.m} but {self._directed} directed entries written"
             )
@@ -477,7 +486,10 @@ class PackedWriter:
             ) + hdr[_HDR_CRC_OFF + 4:]
         self._f.seek(0)
         self._f.write(hdr)
+        self._f.flush()
+        os.fsync(self._f.fileno())
         self._f.close()
+        os.replace(self._tmp_path, self.path)
 
     def __enter__(self) -> "PackedWriter":
         return self
@@ -486,7 +498,7 @@ class PackedWriter:
         if exc_type is None:
             self.close()
         else:
-            self._f.close()
+            self._abort()
 
 
 def read_packed_header(path: str, *, opener=open,
@@ -973,8 +985,10 @@ def permute_to_disk(
 
     span = max(1, int(shard_nodes))
     n_shards = max(1, (n + span - 1) // span)
-    shard_paths = [f"{out_path}.shard{s}" for s in range(n_shards)]
-    shard_files = [open(p, "wb") for p in shard_paths]
+    # scratch spill files: tmp-named (deleted in the finally below), so the
+    # durable-write rule (RPR005) knows they are not final artifacts
+    shard_paths = [f"{out_path}.tmp.shard{s}" for s in range(n_shards)]
+    shard_files = [open(p, "wb") for p in shard_paths]  # repro: noqa RPR005 -- tmp-named scratch spills, deleted in the finally below
     try:
         for v, nbrs, wts, node_w in stream:
             nv = int(inv[v])
@@ -993,8 +1007,8 @@ def permute_to_disk(
         ) as w:
             for s, sp in enumerate(shard_paths):
                 rows: dict[int, tuple[np.ndarray, np.ndarray, float]] = {}
-                with open(sp, "rb") as f:
-                    data = f.read()
+                with _retrying(lambda sp=sp: open(sp, "rb"), DEFAULT_RETRY) as f:
+                    data = _read_retrying(f, -1, DEFAULT_RETRY)
                 pos = 0
                 while pos < len(data):
                     nv, deg, node_w = struct.unpack_from("<QIf", data, pos)

@@ -17,7 +17,7 @@ import sys
 import time
 import traceback
 
-import jax  # noqa: F401  (must import before device queries below)
+import jax  # noqa: F401 # repro: noqa RPR001 -- dry-run lowering needs the device runtime up front
 
 from repro.configs import ARCHS, get_arch
 from repro.launch.mesh import make_production_mesh

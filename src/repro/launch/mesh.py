@@ -6,10 +6,10 @@ XLA_FLAGS before any jax initialization.
 """
 from __future__ import annotations
 
-import jax
+import jax  # repro: noqa RPR001 -- launch-time mesh module; only reached from train-arch entry points
 
 try:  # jax >= 0.5 (explicit-sharding API); older jax has no AxisType
-    from jax.sharding import AxisType
+    from jax.sharding import AxisType  # repro: noqa RPR001 -- launch-time mesh module
 except ImportError:  # pragma: no cover - depends on installed jax
     AxisType = None
 

@@ -15,9 +15,9 @@ from __future__ import annotations
 import dataclasses
 import math
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+import jax  # repro: noqa RPR001 -- train-step module; only reached from train-arch entry points
+import jax.numpy as jnp  # repro: noqa RPR001 -- train-step module
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # repro: noqa RPR001 -- train-step module
 
 from repro.configs import get_arch
 from repro.configs.base import ShapeDef

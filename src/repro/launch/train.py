@@ -13,7 +13,7 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
+import jax  # repro: noqa RPR001 -- train entry point; jax is its purpose
 import numpy as np
 
 from repro.configs import get_arch

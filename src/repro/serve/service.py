@@ -167,7 +167,7 @@ class PartitionService:
                     f"k={cfg.k}"
                 )
         self._loads = loads
-        self._n_total = float(loads.sum())
+        self._n_total = float(loads.astype(np.float64).sum())
         self._m_total = float(graph.edge_w.astype(np.float64).sum() / 2.0)
         if cut_weight is None:
             cut_weight = edge_cut(graph, self._labels)
@@ -361,7 +361,7 @@ class PartitionService:
                         [self._labels, np.full(kn, -1, dtype=np.int64)])
                     self._node_w = np.concatenate(
                         [self._node_w, np.asarray(weights, dtype=np.float32)])
-                    for i, w in enumerate(weights):
+                    for i, _w in enumerate(weights):
                         v = self._n + i
                         self._overlay[v] = {}
                         blk = fennel_choose(

@@ -94,7 +94,7 @@ class ServeSession:
         fut: Future = Future()
         try:
             self._q.put(_Request(kind, payload, fut), timeout=_JOIN_TIMEOUT_S)
-        except queue.Full:
+        except queue.Full as e:
             if self._error is not None:
                 raise RuntimeError(
                     "ServeSession worker died with a full queue"
@@ -103,7 +103,7 @@ class ServeSession:
                 f"ServeSession queue stayed full for {_JOIN_TIMEOUT_S:.0f}s "
                 "— the service is not keeping up; raise queue_depth or slow "
                 "the submitters"
-            )
+            ) from e
         return fut
 
     def submit_lookup(self, nodes) -> Future:

@@ -42,6 +42,8 @@ class CheckpointManager:
         final = os.path.join(self.dir, f"ckpt_{step:08d}.npz")
         with open(tmp, "wb") as f:
             np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())  # data must hit disk before the rename does
         os.replace(tmp, final)  # atomic
         digest = hashlib.sha256()
         with open(final, "rb") as f:
@@ -57,6 +59,8 @@ class CheckpointManager:
         mtmp = os.path.join(self.dir, f".tmp_manifest_{step}.json")
         with open(mtmp, "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(mtmp, os.path.join(self.dir, f"ckpt_{step:08d}.json"))
         self._gc()
         return final

@@ -111,7 +111,7 @@ def test_metis_weighted_roundtrip(tmp_path):
 def test_node_stream(small_rmat):
     g = small_rmat
     seen = 0
-    for v, nbrs, w, nw in NodeStream(g):
+    for _v, nbrs, w, _nw in NodeStream(g):
         assert nbrs.shape == w.shape
         seen += 1
     assert seen == g.n

@@ -79,5 +79,5 @@ def test_build_cell_on_host_mesh():
 def test_production_mesh_requires_512_devices():
     from repro.launch.mesh import make_production_mesh
     if len(jax.devices()) < 512:
-        with pytest.raises(Exception):
+        with pytest.raises(ValueError, match="devices"):
             make_production_mesh()

@@ -188,7 +188,7 @@ def test_open_stream_detects_format(tmp_path):
     write_metis(g, pm)
     write_packed(g, pb)
     assert open_stream(pm).n == open_stream(pb).n == 5
-    for (v1, n1, w1, nw1), (v2, n2, w2, nw2) in zip(open_stream(pm), open_stream(pb)):
+    for (v1, n1, _w1, _nw1), (v2, n2, _w2, _nw2) in zip(open_stream(pm), open_stream(pb)):
         assert v1 == v2 and np.array_equal(n1, n2)
 
 
